@@ -1,0 +1,144 @@
+"""45 nm CMOS analytic energy model for one attention block (paper Table II).
+
+Methodology follows ACE-SNN [30]: count primitive compute ops and SRAM
+accesses for (i) INT8 ANN attention, (ii) Spikformer integer spike attention
+(T steps), (iii) SSA (T steps), then multiply by per-op energies from the
+45 nm literature [31], [32] (Horowitz-style numbers).
+
+Workload: ViT-Small attention block on CIFAR-10 geometry —
+N=64 tokens (+cls dropped for simplicity), D=384, H=8 heads, D_K=48, T=10.
+
+All constants are stated explicitly below; EXPERIMENTS.md reports our
+computed table next to the paper's printed one and compares the *ratios*
+(the paper's headline claims: 6.3x processing vs ANN, 1.7x memory access).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# 45 nm per-op energies (pJ) — Horowitz ISSCC'14 ballpark + [31]
+# ---------------------------------------------------------------------------
+E_INT8_MULT = 0.2
+E_INT8_ADD = 0.03
+E_INT32_ADD = 0.1
+E_FP32_MULT = 3.7
+E_FP32_ADD = 0.9
+E_AND = 0.0025          # single 2-input gate switch (std-cell, ~fJ class)
+E_CNT8 = 0.03           # 8-bit counter increment ~ INT8 add
+E_CMP16 = 0.06          # 16-bit comparator (Bernoulli encoder)
+E_LFSR16 = 0.06         # 16-bit LFSR step (reuse strategy amortises banks)
+E_EXP_SOFTMAX = 4.6     # per-element softmax cost (exp+div, fp32 units)
+E_SRAM_BYTE = 1.25      # 32 KiB-bank SRAM access per byte (~5 pJ / 32 b)
+
+
+@dataclass
+class Workload:
+    n: int = 64
+    d: int = 384
+    h: int = 8
+    t: int = 10
+
+    @property
+    def d_k(self) -> int:
+        return self.d // self.h
+
+
+def ann_attention_energy(w: Workload) -> dict:
+    """INT8 ANN: QKV proj + QK^T + softmax + AV + out proj, single pass."""
+    n, d, h, dk = w.n, w.d, w.h, w.d_k
+    macs_proj = 4 * n * d * d              # q,k,v,out projections
+    macs_attn = 2 * h * n * n * dk         # QK^T and AV
+    softmax_elems = h * n * n
+    proc = (macs_proj + macs_attn) * (E_INT8_MULT + E_INT8_ADD) \
+        + softmax_elems * E_EXP_SOFTMAX
+    # memory: operands read per MAC (weight + act) + intermediate tiles
+    reads = 2 * (macs_proj + macs_attn)            # bytes (INT8 operands)
+    writes = n * d * 4 + softmax_elems * 2         # activations + scores
+    mem = (reads + writes) * E_SRAM_BYTE
+    return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
+
+
+SPIKE_RATE = 0.5  # mean firing rate of LIF streams (accumulate fires on 1s)
+
+
+def spikformer_attention_energy(w: Workload) -> dict:
+    """Spikformer [18]: per time step, integer matmuls on binary spikes
+    (multiplier-free accumulates, gated by spike sparsity) but the integer
+    score/output maps are written to and read back from SRAM every step —
+    the paper's stated reason Spikformer loses the memory comparison."""
+    n, d, h, dk, t = w.n, w.d, w.h, w.d_k, w.t
+    acc_proj = 4 * n * d * d
+    acc_attn = 2 * h * n * n * dk
+    proc = t * SPIKE_RATE * (acc_proj * E_INT8_ADD + acc_attn * E_INT32_ADD)
+    # memory per step: binary operand streams (bit-packed), INT8 weights
+    # (stationary, read once), INT32 intermediate maps written + read back
+    weights_once = 4 * d * d
+    per_step = (
+        4 * n * d / 8                 # binary activation streams
+        + 3 * n * d * 4 * 2           # qkv integer maps write+read (INT32)
+        + h * n * n * 4 * 2           # score map write+read (INT32)
+        + n * d * 4 * 2               # attention output map
+    )
+    mem = (weights_once + t * per_step) * E_SRAM_BYTE
+    return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
+
+
+def ssa_attention_energy(w: Workload) -> dict:
+    """SSA (this paper): AND gates + counters + LFSR/compare Bernoulli
+    encoders; S^t never leaves the SAU array (no intermediate SRAM traffic).
+    QKV spike generation is shared with Spikformer and excluded, as in the
+    paper's 'attention block' scoping."""
+    n, h, dk, t = w.n, w.h, w.d_k, w.t
+    d = w.d
+    ands = t * h * (n * n * dk + n * dk * n)     # eq.5 + eq.6
+    counts = ands                                 # counter increments
+    encoders = t * h * (n * n + n * dk)           # Bernoulli samples
+    proc = ands * E_AND + counts * E_CNT8 + encoders * (E_CMP16 + E_LFSR16)
+    # memory: QKV spike-generation traffic (shared structure with Spikformer:
+    # weights stationary, binary streams, integer psums of eq. 4) PLUS the
+    # binary Q/K/V streams into the SAU array; the N x N score map never
+    # touches SRAM (held in-array) and Attn spikes stream out as bits —
+    # the paper's key memory saving.
+    weights_once = 3 * d * d
+    per_step = (
+        4 * n * d / 8            # binary in/out streams of the QKV LIF layer
+        + 3 * n * d * 4 * 2      # qkv integer membrane updates write+read
+        + 4 * n * dk * h / 8     # Q,K,V into array + Attn out (bits)
+    )
+    mem = (weights_once + t * per_step) * E_SRAM_BYTE
+    return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
+
+
+PAPER_TABLE2 = {
+    "ANN": {"processing_uJ": 7.77, "memory_uJ": 89.96, "total_uJ": 97.73},
+    "Spikformer": {"processing_uJ": 6.20, "memory_uJ": 102.85, "total_uJ": 109.05},
+    "SSA": {"processing_uJ": 1.23, "memory_uJ": 52.80, "total_uJ": 54.03},
+}
+
+
+def table2(workload: Workload | None = None) -> dict:
+    w = workload or Workload()
+    ours = {
+        "ANN": ann_attention_energy(w),
+        "Spikformer": spikformer_attention_energy(w),
+        "SSA": ssa_attention_energy(w),
+    }
+    for v in ours.values():
+        v["total_uJ"] = v["processing_uJ"] + v["memory_uJ"]
+    ratios = {
+        "processing_ann_over_ssa": ours["ANN"]["processing_uJ"] / ours["SSA"]["processing_uJ"],
+        "processing_spk_over_ssa": ours["Spikformer"]["processing_uJ"] / ours["SSA"]["processing_uJ"],
+        "memory_ann_over_ssa": ours["ANN"]["memory_uJ"] / ours["SSA"]["memory_uJ"],
+        "memory_spk_over_ssa": ours["Spikformer"]["memory_uJ"] / ours["SSA"]["memory_uJ"],
+        "total_ann_over_ssa": ours["ANN"]["total_uJ"] / ours["SSA"]["total_uJ"],
+    }
+    paper_ratios = {
+        "processing_ann_over_ssa": 7.77 / 1.23,
+        "processing_spk_over_ssa": 6.20 / 1.23,
+        "memory_ann_over_ssa": 89.96 / 52.80,
+        "memory_spk_over_ssa": 102.85 / 52.80,
+        "total_ann_over_ssa": 97.73 / 54.03,
+    }
+    return {"ours": ours, "paper": PAPER_TABLE2, "ratios": ratios,
+            "paper_ratios": paper_ratios}

@@ -1,0 +1,92 @@
+"""Table I reproduction: classification accuracy of SSA vs Spikformer vs ANN.
+
+Offline container => the paper's MNIST/CIFAR-10 are replaced by the
+synthetic patterned-image task (`data.PatternedImageDataset`) — the claim
+validated is the paper's *relative* one: SSA reaches accuracy comparable to
+the ANN baseline and improves with T.  `examples/train_spiking_vit.py` runs
+the full sweep; this benchmark runs a compressed version suitable for
+`python -m benchmarks.run`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def train_vit(impl: str, t_steps: int, *, steps: int = 120, batch: int = 32,
+              lr: float = 1e-3, seed: int = 0, layers: int = 2, d: int = 96,
+              eval_batches: int = 6, noise: float = 1.6) -> dict:
+    from repro.configs import get_smoke_config
+    from repro.data import PatternedImageDataset
+    from repro.models import build_model
+
+    cfg = get_smoke_config("spiking_vit_small")
+    cfg = dataclasses.replace(
+        cfg,
+        num_layers=layers,
+        d_model=d,
+        d_ff=2 * d,
+        attention=dataclasses.replace(
+            cfg.attention, impl=impl, ssa_time_steps=t_steps,
+            num_heads=4, num_kv_heads=4, head_dim=d // 4,
+        ),
+    )
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    ds = PatternedImageDataset(num_classes=cfg.vocab_size, seed=7, noise=noise)
+
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, opt_m, opt_v, batch_data, rng, i):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch_data, rng)
+        )(params)
+        opt_m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, opt_m, grads)
+        opt_v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g * g, opt_v, grads)
+        bc1 = 1 - 0.9 ** (i + 1)
+        bc2 = 1 - 0.999 ** (i + 1)
+        params = jax.tree.map(
+            lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8),
+            params, opt_m, opt_v,
+        )
+        return params, opt_m, opt_v, loss
+
+    t0 = time.time()
+    loss = None
+    for i in range(steps):
+        b = ds.batch(i, batch)
+        batch_data = {"patches": jnp.asarray(b["patches"]), "label": jnp.asarray(b["label"])}
+        rng = jax.random.fold_in(key, i)
+        params, opt_m, opt_v, loss = step(params, opt_m, opt_v, batch_data, rng, i)
+
+    accs = []
+    for i in range(eval_batches):
+        b = ds.batch(10_000 + i, batch)
+        batch_data = {"patches": jnp.asarray(b["patches"]), "label": jnp.asarray(b["label"])}
+        accs.append(
+            float(model.accuracy(params, batch_data, jax.random.fold_in(key, 90_000 + i)))
+        )
+    return {
+        "impl": impl,
+        "T": t_steps,
+        "accuracy": float(np.mean(accs)),
+        "final_loss": float(loss),
+        "train_s": round(time.time() - t0, 1),
+    }
+
+
+def table1(quick: bool = True) -> list[dict]:
+    """Compressed Table-I: ANN baseline vs SSA/Spikformer at T in {4, 10}."""
+    rows = [train_vit("ann", 1)]
+    ts = (4, 10) if quick else (4, 8, 10)
+    for impl in ("spikformer", "ssa"):
+        for t in ts:
+            rows.append(train_vit(impl, t))
+    return rows

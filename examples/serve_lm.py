@@ -1,0 +1,66 @@
+"""Serving demo: continuous batching with the slot-based engine.
+
+Trains nothing — loads a smoke-size LM with random weights (or a checkpoint
+from `launch.train`) and pushes a burst of variable-length requests through
+the decode loop, demonstrating slot reuse, per-slot cache offsets and EOS
+handling.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen15_7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, num_slots=args.slots, max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        req = Request(uid=uid, prompt=prompt,
+                      max_new_tokens=int(rng.integers(8, 24)))
+        reqs.append(req)
+        engine.submit(req)
+
+    t0 = time.time()
+    ticks = 0
+    while engine.queue or engine.active:
+        engine.step()
+        ticks += 1
+        if ticks % 8 == 0:
+            done = sum(r.done for r in reqs)
+            print(f"tick {ticks:4d}: active={len(engine.active)} "
+                  f"queued={len(engine.queue)} done={done}")
+        if ticks > 500:
+            break
+    dt = time.time() - t0
+
+    total_tokens = sum(len(r.out_tokens) for r in reqs)
+    print(f"\n{sum(r.done for r in reqs)}/{len(reqs)} requests finished, "
+          f"{total_tokens} tokens in {ticks} engine ticks ({dt:.1f}s, "
+          f"{total_tokens / max(dt, 1e-9):.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}...")
+
+
+if __name__ == "__main__":
+    main()

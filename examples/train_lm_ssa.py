@@ -1,0 +1,67 @@
+"""Example: the paper's SSA attention as a first-class LM feature.
+
+Trains the same smoke-size GQA decoder twice on the Markov-chain LM task —
+once with standard softmax attention, once with SSA — and compares loss
+curves.  Demonstrates the config switch (`attention.impl = "ssa"`) and that
+the surrogate-gradient SSA path co-trains with the rest of the stack.
+
+Run:  PYTHONPATH=src python examples/train_lm_ssa.py [--steps 120]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ParallelConfig, TrainConfig, get_smoke_config
+from repro.data import MarkovTextDataset
+from repro.distributed.steps import init_train_state
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import build_sharded_train
+
+
+def run(impl: str, steps: int, seq: int = 64, batch: int = 8):
+    cfg = get_smoke_config("codeqwen15_7b")
+    cfg = dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(cfg.attention, impl=impl, ssa_time_steps=4),
+    )
+    train_cfg = TrainConfig(learning_rate=1e-3, total_steps=steps,
+                            warmup_steps=max(steps // 10, 1))
+    parallel = ParallelConfig(remat="none")
+    mesh = make_local_mesh()
+    jitted, _, _, model, opt = build_sharded_train(cfg, train_cfg, parallel, mesh)
+    with mesh:
+        state = init_train_state(model, jax.random.PRNGKey(0), opt, parallel)
+    ds = MarkovTextDataset(cfg.vocab_size, seq, seed=1)
+    losses = []
+    for step in range(steps):
+        batch_np = ds.batch(step, batch)
+        b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        state, metrics = jitted(state, b)
+        losses.append(float(metrics["loss"]))
+    return losses, ds.unigram_entropy_bound()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    print("training ANN-attention LM ...")
+    ann, floor = run("ann", args.steps)
+    print("training SSA-attention LM ...")
+    ssa, _ = run("ssa", args.steps)
+    n = args.steps
+    print(f"\n{'step':>6s} {'ann_loss':>9s} {'ssa_loss':>9s}")
+    for i in range(0, n, max(n // 8, 1)):
+        print(f"{i:6d} {ann[i]:9.4f} {ssa[i]:9.4f}")
+    print(f"final  {ann[-1]:9.4f} {ssa[-1]:9.4f}   (chain entropy floor ~{floor:.3f})")
+    d_ann = ann[0] - ann[-1]
+    d_ssa = ssa[0] - ssa[-1]
+    print(f"loss drop: ann {d_ann:.3f}, ssa {d_ssa:.3f} -> SSA trains "
+          f"({'comparably' if d_ssa > 0.5 * d_ann else 'more slowly'})")
+
+
+if __name__ == "__main__":
+    main()

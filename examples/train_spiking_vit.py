@@ -1,0 +1,48 @@
+"""End-to-end driver: train the paper's spiking ViT on the synthetic
+patterned-image task, comparing SSA / Spikformer / ANN across time steps T
+(the Table-I experiment, offline-container edition).
+
+Run:  PYTHONPATH=src python examples/train_spiking_vit.py [--steps 300] [--full]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # for benchmarks/
+
+from benchmarks.table1_accuracy import train_vit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true", help="T in {4,8,10} (slower)")
+    ap.add_argument("--out", default="results/table1_accuracy.json")
+    args = ap.parse_args()
+
+    rows = []
+    print(f"{'impl':12s} {'T':>3s} {'accuracy':>9s} {'loss':>8s} {'train_s':>8s}")
+    ann = train_vit("ann", 1, steps=args.steps)
+    rows.append(ann)
+    print(f"{ann['impl']:12s} {'-':>3s} {ann['accuracy']:9.3f} {ann['final_loss']:8.3f} {ann['train_s']:8.1f}")
+    ts = (4, 8, 10) if args.full else (4, 10)
+    for impl in ("spikformer", "ssa"):
+        for t in ts:
+            r = train_vit(impl, t, steps=args.steps)
+            rows.append(r)
+            print(f"{r['impl']:12s} {r['T']:3d} {r['accuracy']:9.3f} {r['final_loss']:8.3f} {r['train_s']:8.1f}")
+
+    ssa_best = max((r["accuracy"] for r in rows if r["impl"] == "ssa"), default=0)
+    print(f"\nANN baseline: {ann['accuracy']:.3f} | best SSA: {ssa_best:.3f} "
+          f"| gap: {ann['accuracy'] - ssa_best:+.3f}")
+    print("paper's claim (Table I): SSA within ~0.2% of ANN at T=10 "
+          "(83.53 vs 83.66 on CIFAR-10)")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Shared smoke-config reduction: same family/topology, tiny sizes."""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import AttentionConfig, MambaConfig, MoEConfig, ModelConfig, XLSTMConfig
+
+
+def shrink(cfg: ModelConfig, **extra) -> ModelConfig:
+    """Reduce a full config to a CPU-runnable smoke config of the same family."""
+    attn = cfg.attention
+    heads = min(attn.num_heads, 4)
+    kv = min(attn.num_kv_heads, heads)
+    sattn = dataclasses.replace(
+        attn,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        sliding_window=min(attn.sliding_window, 16) if attn.sliding_window else None,
+        ssa_time_steps=2,
+    )
+    kw: dict = dict(
+        num_layers=min(cfg.num_layers, 4),
+        d_model=64,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 256),
+        attention=sattn,
+        dtype="float32",
+    )
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=4,
+            top_k=2,
+            expert_ffn_dim=32,
+            shared_ffn_dim=32 if cfg.moe.num_shared_experts else 0,
+        )
+    if cfg.mamba:
+        kw["mamba"] = dataclasses.replace(
+            cfg.mamba, state_dim=16, head_dim=16, chunk=8
+        )
+    if cfg.xlstm:
+        kw["xlstm"] = dataclasses.replace(
+            cfg.xlstm,
+            slstm_layers=tuple(i for i in cfg.xlstm.slstm_layers if i < 4) or (1,),
+            mlstm_head_dim=16,
+            chunk=8,
+        )
+    if cfg.decoder_layers:
+        kw["decoder_layers"] = min(cfg.decoder_layers, 2)
+        kw["num_layers"] = min(cfg.num_layers, 2)
+    if cfg.hybrid_attn_every:
+        kw["hybrid_attn_every"] = 2
+    kw.update(extra)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,24 @@
+"""codeqwen1.5-7b [dense]: 32L d=4096 32H (MHA kv=32) d_ff=13440 vocab=92416.
+qwen1.5 architecture: RoPE (theta 1e6), SwiGLU, RMSNorm, QKV bias.
+[hf:Qwen/CodeQwen1.5-7B; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    d_ff=13440,
+    vocab_size=92_416,
+    attention=AttentionConfig(
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+    ),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

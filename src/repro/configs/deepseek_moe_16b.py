@@ -1,0 +1,32 @@
+"""deepseek-moe-16b [moe]: 28L d=2048 16H (MHA kv=16) vocab=102400.
+Fine-grained MoE: 64 routed experts (d_ff=1408) top-6 + 2 shared experts.
+Deviation noted: the real model's layer 0 is a dense FFN; we keep all 28
+layers MoE for scan-homogeneity (param delta < 1%). [arXiv:2401.06066; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    d_ff=1408,
+    vocab_size=102_400,
+    attention=AttentionConfig(
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        rope_theta=10_000.0,
+    ),
+    moe=MoEConfig(
+        num_experts=64,
+        top_k=6,
+        expert_ffn_dim=1408,
+        num_shared_experts=2,
+        shared_ffn_dim=2816,
+    ),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

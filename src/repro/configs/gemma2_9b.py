@@ -1,0 +1,31 @@
+"""gemma2-9b [dense]: 42L d=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.
+Local+global alternating attention (window 4096), attn/final logit softcaps,
+GeGLU, pre+post norms. [arXiv:2408.00118; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    num_layers=42,
+    d_model=3584,
+    d_ff=14336,
+    vocab_size=256_000,
+    attention=AttentionConfig(
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=256,
+        rope_theta=10_000.0,
+        softcap=50.0,
+        sliding_window=4096,
+        layer_pattern="LG",  # alternating local / global
+    ),
+    act="geglu",
+    final_softcap=30.0,
+    post_norms=True,
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

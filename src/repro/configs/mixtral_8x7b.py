@@ -1,0 +1,29 @@
+"""mixtral-8x7b [moe]: 32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+8 experts top-2, sliding-window attention (4096) => rolling-buffer KV cache
+makes long_500k decode sub-quadratic. [arXiv:2401.04088; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=32_000,
+    attention=AttentionConfig(
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        sliding_window=4096,
+        layer_pattern="L",  # every layer sliding-window
+    ),
+    moe=MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=14336),
+    sub_quadratic=True,
+    long_context_note="SWA rolling-buffer cache, window 4096",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

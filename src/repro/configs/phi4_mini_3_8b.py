@@ -1,0 +1,24 @@
+"""phi4-mini-3.8b [dense]: 32L d=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+RoPE, SwiGLU, GQA. [arXiv:2412.08905; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    d_ff=8192,
+    vocab_size=200_064,
+    attention=AttentionConfig(
+        num_heads=24,
+        num_kv_heads=8,
+        head_dim=128,
+        rope_theta=10_000.0,
+    ),
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

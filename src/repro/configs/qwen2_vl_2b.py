@@ -1,0 +1,28 @@
+"""qwen2-vl-2b [vlm]: 28L d=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+M-RoPE (temporal/height/width split rotary), dynamic-resolution ViT frontend
+STUBBED per instructions: input_specs() provides precomputed patch embeddings
+plus (3, B, S) M-RoPE position ids. [arXiv:2409.12191; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    d_ff=8960,
+    vocab_size=151_936,
+    attention=AttentionConfig(
+        num_heads=12,
+        num_kv_heads=2,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        rope_type="mrope",
+    ),
+    tie_embeddings=True,
+    frontend="embeddings",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

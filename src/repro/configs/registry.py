@@ -1,0 +1,70 @@
+"""Arch registry: ``--arch <id>`` -> ModelConfig (full) / smoke (reduced)."""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = [
+    "gemma2_9b",
+    "codeqwen15_7b",
+    "phi4_mini_3_8b",
+    "yi_34b",
+    "qwen2_vl_2b",
+    "xlstm_125m",
+    "deepseek_moe_16b",
+    "mixtral_8x7b",
+    "zamba2_1_2b",
+    "whisper_small",
+    "spiking_vit_small",   # the paper's own architecture
+]
+
+_ALIASES = {
+    "gemma2-9b": "gemma2_9b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "yi-34b": "yi_34b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "xlstm-125m": "xlstm_125m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "whisper-small": "whisper_small",
+    "spiking-vit-small": "spiking_vit_small",
+}
+
+
+def canonical(arch: str) -> str:
+    arch = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    return arch
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.smoke_config()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch x shape) dry-run cells with skip annotations."""
+    from .applicability import cell_status
+
+    out = []
+    for arch in ARCH_IDS:
+        if arch == "spiking_vit_small":
+            continue  # paper arch: own benchmark path, not an assigned cell
+        for shape in SHAPES:
+            status, why = cell_status(arch, shape)
+            if status == "run" or include_skipped:
+                out.append((arch, shape, status, why))
+    return out

@@ -1,0 +1,38 @@
+"""spiking-vit-small — the paper's own architecture (Sec. IV).
+ViT-Small: 6 encoder layers, 8 heads, d=384 (head_dim 48 = paper's D_K),
+d_ff=1536; attention impl selectable ann | ssa | spikformer; T in {4,8,10}.
+'vocab_size' = number of classes; patch embedding is a linear frontend over
+flattened patches (implemented, not stubbed — CIFAR-scale)."""
+import dataclasses
+
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="spiking-vit-small",
+    family="spiking_vit",
+    num_layers=6,
+    d_model=384,
+    d_ff=1536,
+    vocab_size=10,
+    attention=AttentionConfig(
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=48,
+        rope_type="none",
+        causal=False,
+        impl="ssa",
+        ssa_time_steps=10,
+    ),
+    act="gelu",
+    norm="layernorm",
+    frontend="embeddings",
+)
+
+
+def smoke_config() -> ModelConfig:
+    cfg = shrink(CONFIG)
+    return dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(cfg.attention, impl="ssa", causal=False),
+    )

@@ -1,0 +1,32 @@
+"""whisper-small [audio]: enc-dec, 12+12L d=768 12H d_ff=3072 vocab=51865.
+Conv frontend STUBBED per instructions: input_specs() provides precomputed
+frame embeddings (B, S_enc, d).  GELU, LayerNorm, learned positions.
+[arXiv:2212.04356; unverified]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    decoder_layers=12,
+    d_model=768,
+    d_ff=3072,
+    vocab_size=51_865,
+    attention=AttentionConfig(
+        num_heads=12,
+        num_kv_heads=12,
+        head_dim=64,
+        rope_type="none",   # learned absolute positions
+        causal=False,        # encoder side; decoder masks causally
+    ),
+    act="gelu",
+    norm="layernorm",
+    norm_eps=1e-5,
+    max_target_len=448,
+    frontend="embeddings",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

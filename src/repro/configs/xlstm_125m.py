@@ -1,0 +1,30 @@
+"""xlstm-125m [ssm]: 12 blocks d=768, 4 sLSTM heads, vocab=50304, d_ff=0
+(xLSTM blocks carry their own up/down projections).  xLSTM[7:1]-style mix:
+sLSTM blocks at positions {3, 9}, mLSTM elsewhere (chunkwise-parallel).
+Attention-free: the paper's SSA technique is INAPPLICABLE here (DESIGN.md §5).
+[arXiv:2405.04517; unverified]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    d_ff=0,
+    vocab_size=50_304,
+    attention=AttentionConfig(  # sLSTM head count rides in num_heads
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=192,
+        rope_type="none",
+    ),
+    xlstm=XLSTMConfig(slstm_layers=(3, 9), mlstm_head_dim=64, proj_factor=2.0),
+    tie_embeddings=True,
+    sub_quadratic=True,
+    long_context_note="O(1)-state recurrent decode",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

@@ -1,0 +1,23 @@
+"""yi-34b [dense]: 60L d=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+llama architecture with GQA, RoPE theta 5e6. [arXiv:2403.04652; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    d_ff=20480,
+    vocab_size=64_000,
+    attention=AttentionConfig(
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        rope_theta=5_000_000.0,
+    ),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

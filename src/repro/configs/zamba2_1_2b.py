@@ -1,0 +1,32 @@
+"""zamba2-1.2b [hybrid]: 38 Mamba2 blocks d=2048 + ONE shared attention block
+(32H, kv=32, d_ff=8192 MLP) applied every 6 mamba blocks, ssm_state=64.
+[arXiv:2411.15242; hf]"""
+from ._smoke import shrink
+from .base import AttentionConfig, MambaConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    d_ff=8192,
+    vocab_size=32_000,
+    attention=AttentionConfig(
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        rope_theta=10_000.0,
+    ),
+    # chunk=64 minimises SSD traffic: intra-chunk decay bytes scale with C,
+    # inter-chunk state bytes with 1/C; optimum C* = sqrt(N*P) = 64
+    # (EXPERIMENTS.md §Perf, zamba2 iteration)
+    mamba=MambaConfig(state_dim=64, head_dim=64, expand=2, chunk=64),
+    hybrid_attn_every=6,
+    tie_embeddings=True,
+    sub_quadratic=True,
+    long_context_note="Mamba2 O(1) state; shared-attn cache seq-sharded",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(CONFIG)

@@ -1,0 +1,32 @@
+"""Core stochastic-computing / spiking primitives (the paper's contribution)."""
+from .ann_attention import ann_attention
+from .coding import bernoulli_encode, normalize_to_unit
+from .lfsr import lfsr16_stream, lfsr16_uniform
+from .lif import LIFParams, lif_layer, lif_step
+from .linear_decode import LinearSSAState, decode_rate, init_state, update_state
+from .spikformer import spikformer_attention, spikformer_attention_step
+from .ssa import ssa_attention, ssa_attention_step, visibility_mask
+from .surrogate import bernoulli_from_uniform, spike_heaviside, ste_bernoulli
+
+__all__ = [
+    "ann_attention",
+    "bernoulli_encode",
+    "normalize_to_unit",
+    "lfsr16_stream",
+    "lfsr16_uniform",
+    "LIFParams",
+    "lif_layer",
+    "lif_step",
+    "LinearSSAState",
+    "decode_rate",
+    "init_state",
+    "update_state",
+    "spikformer_attention",
+    "spikformer_attention_step",
+    "ssa_attention",
+    "ssa_attention_step",
+    "visibility_mask",
+    "bernoulli_from_uniform",
+    "spike_heaviside",
+    "ste_bernoulli",
+]

@@ -1,0 +1,43 @@
+"""Conventional softmax attention — the ANN reference the paper compares to.
+
+Plain scaled-dot-product attention (eq. 1) over real-valued Q/K/V with
+optional causal / sliding-window masking and gemma2-style logit soft-capping.
+The LM architectures' full-featured GQA wrapper lives in `models.blocks`; this
+is the numerical core shared by the spiking-ViT ANN baseline and the tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ssa import visibility_mask
+
+__all__ = ["ann_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def ann_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """softmax(Q K^T / sqrt(D_K)) V with optional masking/soft-capping."""
+    d_k = q.shape[-1]
+    n_q, n_kv = q.shape[-2], k.shape[-2]
+    logits = jnp.einsum(
+        "...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d_k))
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = visibility_mask(n_q, n_kv, causal=causal, window=window)
+    if mask is not None:
+        logits = jnp.where(mask > 0, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs.astype(v.dtype), v)

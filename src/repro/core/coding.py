@@ -1,0 +1,66 @@
+"""Bernoulli rate coding of real-valued tensors into spike trains (eq. 2).
+
+``x^t ~ Bern(norm(x))`` — each real value is translated into ``T`` i.i.d.
+binary samples whose rate encodes the value.  Two RNG backends:
+
+  * ``threefry`` (default): stateless JAX keys, shard/remat-safe, used in
+    training and large-scale inference.
+  * ``lfsr``: bit-exact Galois-LFSR emulation of the hardware PRNG, used by
+    hardware-fidelity tests (`core.lfsr`).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .lfsr import lfsr16_uniform
+from .surrogate import bernoulli_from_uniform
+
+__all__ = ["normalize_to_unit", "bernoulli_encode"]
+
+
+def normalize_to_unit(x: jax.Array, mode: str = "sigmoid") -> jax.Array:
+    """``norm(.)`` of eq. 2 — map reals into [0,1].
+
+    ``sigmoid`` is the trainable default (smooth, surrogate-friendly);
+    ``clip`` matches fixed-point hardware where activations are already
+    normalised; ``minmax`` rescales by the per-tensor dynamic range.
+    """
+    if mode == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if mode == "clip":
+        return jnp.clip(x, 0.0, 1.0)
+    if mode == "minmax":
+        lo = jnp.min(x)
+        hi = jnp.max(x)
+        return (x - lo) / jnp.maximum(hi - lo, 1e-6)
+    raise ValueError(f"unknown normalization mode: {mode}")
+
+
+def bernoulli_encode(
+    key: jax.Array,
+    x: jax.Array,
+    num_steps: int,
+    *,
+    norm: str = "sigmoid",
+    rng: Literal["threefry", "lfsr"] = "threefry",
+) -> jax.Array:
+    """Encode ``x`` into a ``(T,) + x.shape`` spike train, STE-differentiable.
+
+    The returned tensor is 0/1-valued in ``x.dtype``; gradients flow to ``x``
+    through the straight-through Bernoulli estimator and the normalisation.
+    """
+    p = normalize_to_unit(x, mode=norm)
+    if rng == "threefry":
+        u = jax.random.uniform(
+            key, (num_steps,) + x.shape, dtype=jnp.float32
+        ).astype(p.dtype)
+    elif rng == "lfsr":
+        # One independent LFSR lane per tensor element, seeded from the key.
+        seeds = jax.random.bits(key, x.shape, dtype=jnp.uint32)
+        u = lfsr16_uniform(seeds, num_steps).astype(p.dtype)
+    else:
+        raise ValueError(f"unknown rng backend: {rng}")
+    return bernoulli_from_uniform(u, p[None])

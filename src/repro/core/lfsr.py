@@ -1,0 +1,55 @@
+"""Galois LFSR pseudo-random number generator — bit-exact hardware emulation.
+
+The paper's Bernoulli encoders are implemented in hardware with linear-feedback
+shift-register PRNGs + comparators (Sec. III-D), with a "custom reuse strategy"
+for random numbers [29].  This module emulates a 16-bit Galois LFSR in pure JAX
+bit ops so that the *hardware-faithful* simulation path produces bit-streams a
+digital designer could diff against RTL simulation.
+
+The default training/inference path uses threefry (see `coding.py`); the LFSR
+path exists for hardware-validation tests and the SAU bit-exact simulator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["lfsr16_stream", "lfsr16_uniform"]
+
+# x^16 + x^15 + x^13 + x^4 + 1  (maximal-length 16-bit Galois LFSR)
+_TAPS = np.uint32(0xB400)
+
+
+def _lfsr16_step(state: jax.Array) -> jax.Array:
+    """One Galois LFSR step on a uint32 tensor holding 16-bit states."""
+    lsb = state & 1
+    state = state >> 1
+    return jnp.where(lsb == 1, state ^ _TAPS, state).astype(jnp.uint32)
+
+
+def lfsr16_stream(seed: jax.Array, length: int) -> jax.Array:
+    """Generate ``length`` successive 16-bit LFSR words per seed lane.
+
+    seed: uint32 tensor of any shape, each lane an independent LFSR
+          (0 is remapped to 0xACE1 — the all-zeros state is absorbing).
+    returns: uint32 tensor of shape ``(length,) + seed.shape``.
+    """
+    state0 = jnp.where(seed & 0xFFFF == 0, jnp.uint32(0xACE1), seed & 0xFFFF)
+
+    def step(state, _):
+        nxt = _lfsr16_step(state)
+        return nxt, nxt
+
+    _, words = jax.lax.scan(step, state0, None, length=length)
+    return words
+
+
+def lfsr16_uniform(seed: jax.Array, length: int) -> jax.Array:
+    """Uniform(0,1) floats from the LFSR stream (hardware comparator domain).
+
+    Hardware compares an integer count against the raw LFSR word; dividing by
+    2^16 maps that comparison into the [0,1) probability domain used by the
+    JAX reference implementations.
+    """
+    return lfsr16_stream(seed, length).astype(jnp.float32) / jnp.float32(65536.0)

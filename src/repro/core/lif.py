@@ -1,0 +1,52 @@
+"""Leaky integrate-and-fire (LIF) neuron layer (eq. 4).
+
+Discrete-time LIF with soft reset, the "standard LIF model" [27] the paper
+uses to produce the binary Q/K/V streams:
+
+    v[t] = beta * v[t-1] + x[t]
+    s[t] = H(v[t] - theta)          (sigmoid surrogate gradient)
+    v[t] = v[t] - theta * s[t]      (soft reset)
+
+The time axis is always the *leading* axis; the membrane state is carried by
+``jax.lax.scan`` so depth-in-time costs one traced step in the HLO.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import spike_heaviside
+
+__all__ = ["LIFParams", "lif_layer", "lif_step"]
+
+
+class LIFParams(NamedTuple):
+    beta: float = 0.9       # membrane leak
+    threshold: float = 1.0  # firing threshold
+    alpha: float = 4.0      # surrogate-gradient sharpness
+
+
+def lif_step(v: jax.Array, x_t: jax.Array, p: LIFParams) -> tuple[jax.Array, jax.Array]:
+    """One LIF update.  Returns (new membrane state, spikes)."""
+    v = p.beta * v + x_t
+    s = spike_heaviside(v - p.threshold, p.alpha)
+    v = v - p.threshold * s
+    return v, s
+
+
+def lif_layer(x: jax.Array, p: LIFParams = LIFParams()) -> jax.Array:
+    """Run a layer of LIF neurons over a ``(T, ...)`` input current tensor.
+
+    Returns the 0/1 spike tensor of the same shape.  One neuron per trailing
+    element; all neurons share (beta, theta) as in the paper.
+    """
+    v0 = jnp.zeros(x.shape[1:], dtype=x.dtype)
+
+    def step(v, x_t):
+        v, s = lif_step(v, x_t, p)
+        return v, s
+
+    _, spikes = jax.lax.scan(step, v0, x)
+    return spikes

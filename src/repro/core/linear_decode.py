@@ -1,0 +1,56 @@
+"""Expectation-mode SSA — associative linear-attention decode (beyond-paper).
+
+In expectation the two SC stages of SSA compose to
+
+    E[Attn] = Q ( K^T V ) / (N * D_K)
+
+because E[S] = Q K^T / D_K and the second stage is linear in S.  Dropping the
+sampling (taking rates instead of spikes) therefore admits the classic linear
+attention associativity trick [26]: decode keeps a running ``D_K x D_K`` state
+
+    M_n = sum_{j<=n} k_j  v_j^T            (one rank-1 update / token)
+    c_n = n                                (visible-token count)
+    attn_rate(q) = q M_n / (c_n * D_K)
+
+This gives O(1)-per-token, O(D_K^2)-state decode — the mechanism we use for
+the ``long_500k`` cells of dense architectures in SSA mode, where exact
+spike-replay attention would need the full 0/1 K/V history.  The approximation
+error vs. exact SSA is O(1/sqrt(T)) sampling noise, verified statistically in
+`tests/test_ssa_semantics.py`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LinearSSAState", "init_state", "update_state", "decode_rate"]
+
+
+class LinearSSAState(NamedTuple):
+    """Running linear-attention state per (batch..., head)."""
+
+    m: jax.Array      # (..., D_K, D_K) accumulated k v^T
+    count: jax.Array  # (...,) visible-token count
+
+
+def init_state(batch_shape: tuple[int, ...], d_k: int, dtype=jnp.float32) -> LinearSSAState:
+    return LinearSSAState(
+        m=jnp.zeros(batch_shape + (d_k, d_k), dtype=dtype),
+        count=jnp.zeros(batch_shape, dtype=dtype),
+    )
+
+
+def update_state(state: LinearSSAState, k_rate: jax.Array, v_rate: jax.Array) -> LinearSSAState:
+    """Absorb one token's key/value *rates* (shape (..., D_K)) into the state."""
+    outer = k_rate[..., :, None] * v_rate[..., None, :]
+    return LinearSSAState(m=state.m + outer, count=state.count + 1.0)
+
+
+def decode_rate(state: LinearSSAState, q_rate: jax.Array) -> jax.Array:
+    """Attention output *rate* for query rates q (..., D_K) — eq. 5/6 in expectation."""
+    d_k = q_rate.shape[-1]
+    num = jnp.einsum("...d,...de->...e", q_rate, state.m)
+    denom = jnp.maximum(state.count, 1.0)[..., None] * jnp.float32(d_k)
+    return num / denom

@@ -1,0 +1,76 @@
+"""Bit-exact numpy simulator of the SAU array (Fig. 2/3) — hardware oracle.
+
+Simulates the paper's dataflow at the level a digital designer would check
+against RTL: an ``N x N`` array of stochastic attention units, each doing
+
+  score phase   (D_K cycles): serial AND of the streamed Q-row / K-row bits
+                 into a UINT8 counter, then one Bernoulli comparison,
+  output phase  (D_K cycles): held S bit ANDed with the FIFO-delayed V bits,
+                 row-wise N-input adder, Bernoulli comparison per column.
+
+Given the same uniform draws, the vectorised JAX implementation in `core.ssa`
+must produce *identical* bits — this equivalence is property-tested, tying the
+TPU kernels back to the hardware semantics.  The cycle model below backs the
+Table III latency reproduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["sau_forward", "sau_cycles", "sau_op_counts"]
+
+
+def sau_forward(
+    q: np.ndarray, k: np.ndarray, v: np.ndarray, u_s: np.ndarray, u_a: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """One time step of the SAU array, scalar loops, uint8 counters.
+
+    q, k, v : (N, D_K) uint8 in {0,1};  u_s : (N, N) and u_a : (N, D_K)
+    uniform(0,1) draws for the two Bernoulli encoder banks.
+    Returns (S, Attn) as uint8 {0,1}.
+    """
+    n, d_k = q.shape
+    assert k.shape == (n, d_k) and v.shape == (n, d_k)
+    s = np.zeros((n, n), dtype=np.uint8)
+    # --- score phase: D_K serial AND+count cycles per SAU ------------------
+    for i in range(n):
+        for j in range(n):
+            counter = np.uint8(0)  # UINT8 counter => D_K <= 256 (paper, Sec III-C)
+            for d in range(d_k):
+                counter += q[i, d] & k[j, d]
+            # Bernoulli encoder: compare count against u * D_K (power-of-two
+            # D_K makes this a shift-free integer comparison in hardware).
+            s[i, j] = np.uint8(u_s[i, j] < counter / d_k)
+    # --- output phase: stream V through FIFO, row adders -------------------
+    attn = np.zeros((n, d_k), dtype=np.uint8)
+    for i in range(n):
+        for d in range(d_k):
+            acc = 0
+            for j in range(n):
+                acc += s[i, j] & v[j, d]
+            attn[i, d] = np.uint8(u_a[i, d] < acc / n)
+    return s, attn
+
+
+def sau_cycles(n: int, d_k: int, t: int, fill_overhead: int = 64) -> int:
+    """Latency in clock cycles of the pipelined SAU array over T time steps.
+
+    Steady state is D_K cycles per time step (score phase of step t overlaps
+    the output phase of step t-1 thanks to the V FIFO); the pipeline fill is
+    one score phase + the adder/encoder latency (~N) + a fixed overhead
+    (controller, I/O registers) calibrated against the paper's FPGA number.
+    """
+    return t * d_k + d_k + n + fill_overhead
+
+
+def sau_op_counts(n: int, d_k: int, t: int) -> dict[str, int]:
+    """Primitive-op counts for one SSA block over T steps (energy model)."""
+    and_ops = t * (n * n * d_k + n * d_k * n)      # eq.5 + eq.6 AND gates
+    counter_incr = and_ops                          # every AND feeds a counter/adder
+    bern_compare = t * (n * n + n * d_k)            # one comparison per encoder fire
+    return {
+        "and": and_ops,
+        "acc": counter_incr,
+        "compare": bern_compare,
+        "prng_words": bern_compare,                 # one PRNG word per comparison
+    }

@@ -1,0 +1,66 @@
+"""Spikformer-style spiking attention — the paper's SNN baseline [18].
+
+Spikformer computes, per time step, the softmax-free product
+``(Q^t K^tT) V^t * scale`` on binary spike matrices (integer matmuls) and
+re-binarises through a spiking neuron.  It is the architecture the paper's
+Table I/II compares SSA against, so we implement it as a selectable attention
+backend too.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import spike_heaviside
+from .ssa import visibility_mask
+
+__all__ = ["spikformer_attention_step", "spikformer_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def spikformer_attention_step(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    causal: bool = False,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One time step of Spikformer attention on 0/1 spikes.
+
+    Integer-valued matmuls (counts), scaled, then thresholded back to spikes
+    through a Heaviside with surrogate gradient (Spikformer uses an LIF; a
+    stateless threshold is the standard single-step reduction).
+    """
+    n_q, d_k = q.shape[-2], q.shape[-1]
+    n_kv = k.shape[-2]
+    if scale is None:
+        scale = 1.0 / (d_k * max(n_kv, 1)) * 8.0  # keeps counts O(1) pre-threshold
+    scores = jnp.einsum("...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32)
+    mask = visibility_mask(n_q, n_kv, causal=causal, window=window)
+    if mask is not None:
+        scores = scores * mask
+    out = jnp.einsum("...qk,...kd->...qd", scores, v, preferred_element_type=jnp.float32)
+    out = out * jnp.float32(scale)
+    return spike_heaviside(out - 0.5).astype(q.dtype)
+
+
+def spikformer_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    causal: bool = False,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Spikformer attention over a ``(T, ...)`` spike train."""
+    return jax.vmap(
+        lambda qq, kk, vv: spikformer_attention_step(
+            qq, kk, vv, scale=scale, causal=causal, window=window
+        )
+    )(q, k, v)

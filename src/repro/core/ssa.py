@@ -1,0 +1,121 @@
+"""Stochastic Spiking Attention — the paper's core contribution (eq. 5/6).
+
+Per time step ``t`` the binary matrices ``Q^t, K^t, V^t in {0,1}^{N x D_K}``
+are combined with stochastic computing:
+
+    S^t_{ij}    ~ Bern( (1/D_K) sum_d  Q^t_{id} AND K^t_{jd} )       (eq. 5)
+    Attn^t_{id} ~ Bern( (1/N)   sum_j  S^t_{ij} AND V^t_{jd} )       (eq. 6)
+
+TPU adaptation (see DESIGN.md §2): for 0/1 operands the AND-popcount is a
+plain matrix product, so both sums run on the MXU; Bernoulli re-encoding uses
+stateless uniforms + the straight-through estimator, keeping the whole block
+trainable with `jax.grad`.
+
+Causal / sliding-window extensions (needed by the assigned LM architectures —
+the paper's ViT is bidirectional) keep the SC probability semantics by
+normalising each query row by its *visible* token count instead of ``N``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import bernoulli_from_uniform
+
+__all__ = ["ssa_attention_step", "ssa_attention", "visibility_mask"]
+
+
+def visibility_mask(
+    n_q: int,
+    n_kv: int,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    dtype=jnp.float32,
+) -> Optional[jax.Array]:
+    """0/1 mask (n_q, n_kv); None when everything attends to everything."""
+    if not causal and window is None:
+        return None
+    # Align the last query with the last key (supports n_q != n_kv in decode).
+    qi = jnp.arange(n_q)[:, None] + (n_kv - n_q)
+    kj = jnp.arange(n_kv)[None, :]
+    mask = jnp.ones((n_q, n_kv), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    return mask.astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def ssa_attention_step(
+    key: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """SSA for one time step.
+
+    q: (..., N_q, D_K) 0/1 spikes;  k, v: (..., N_kv, D_K) 0/1 spikes.
+    Returns 0/1 spikes of shape (..., N_q, D_K).
+    """
+    n_q, d_k = q.shape[-2], q.shape[-1]
+    n_kv = k.shape[-2]
+    k_s, k_a = jax.random.split(key)
+
+    # --- eq. 5: attention-score spikes -----------------------------------
+    # AND-popcount == matmul for 0/1 operands; f32 accumulation keeps the
+    # integer counts exact for any D_K the hardware supports (<= 2^24).
+    counts_s = jnp.einsum(
+        "...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32
+    )
+    mask = visibility_mask(n_q, n_kv, causal=causal, window=window)
+    p_s = counts_s / jnp.float32(d_k)
+    if mask is not None:
+        p_s = p_s * mask
+    u_s = jax.random.uniform(k_s, p_s.shape, dtype=jnp.float32)
+    s = bernoulli_from_uniform(u_s, p_s)
+
+    # --- eq. 6: attention-output spikes ----------------------------------
+    counts_a = jnp.einsum(
+        "...qk,...kd->...qd", s, v, preferred_element_type=jnp.float32
+    )
+    if mask is None:
+        denom = jnp.float32(n_kv)
+    else:
+        # visible-token count per query row (== N for the paper's full mask)
+        denom = jnp.maximum(mask.sum(axis=-1), 1.0)[..., :, None]
+    p_a = counts_a / denom
+    u_a = jax.random.uniform(k_a, p_a.shape, dtype=jnp.float32)
+    out = bernoulli_from_uniform(u_a, p_a)
+    return out.astype(q.dtype)
+
+
+def ssa_attention(
+    key: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """SSA over a ``(T, ..., N, D_K)`` spike train (leading time axis).
+
+    Time steps are conditionally independent given the Q/K/V spikes (the SAU
+    array pipelines them; on TPU we batch them), so this is a vmap over T
+    with per-step derived keys.
+    """
+    num_steps = q.shape[0]
+    keys = jax.random.split(key, num_steps)
+    return jax.vmap(
+        lambda kk, qq, kk2, vv: ssa_attention_step(
+            kk, qq, kk2, vv, causal=causal, window=window
+        )
+    )(keys, q, k, v)

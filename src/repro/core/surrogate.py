@@ -1,0 +1,88 @@
+"""Surrogate-gradient primitives for stochastic spiking networks.
+
+The paper trains SSA end-to-end "using standard surrogate gradient methods for
+SNNs" [28].  Two non-differentiable operations appear in the forward pass:
+
+  1. Bernoulli sampling  s ~ Bern(p)        -> straight-through estimator (STE):
+     the sample is an unbiased estimate of p, so  d s / d p := 1.
+  2. LIF threshold       s = H(v - theta)   -> sigmoid surrogate:
+     d s / d v := alpha * sigmoid'(alpha (v - theta)).
+
+Both are exposed as `jax.custom_vjp` functions so that every layer built on top
+(LIF encoders, SSA attention, Spikformer baseline) trains with plain
+`jax.grad`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ste_bernoulli",
+    "bernoulli_from_uniform",
+    "spike_heaviside",
+]
+
+
+# ---------------------------------------------------------------------------
+# Straight-through Bernoulli sampling
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def bernoulli_from_uniform(u: jax.Array, p: jax.Array) -> jax.Array:
+    """`(u < p)` as 0/1 in ``p.dtype`` with STE gradient w.r.t. ``p``.
+
+    ``u`` is an externally supplied uniform(0,1) tensor broadcastable against
+    ``p``.  Factoring the randomness out of the custom_vjp keeps the primitive
+    usable with *any* RNG source (threefry keys, in-kernel counter RNG, the
+    bit-exact LFSR hardware emulator).
+    """
+    return (u < p).astype(p.dtype)
+
+
+def _bfu_fwd(u, p):
+    return bernoulli_from_uniform(u, p), p.shape
+
+
+def _bfu_bwd(p_shape, g):
+    # d sample / d p := 1  (straight-through); no gradient to the noise.
+    # ``p`` may have been broadcast against ``u`` (e.g. one rate tensor
+    # encoding T time steps) — sum the cotangent back to p's shape.
+    if g.shape != p_shape:
+        extra = g.ndim - len(p_shape)
+        axes = tuple(range(extra)) + tuple(
+            i + extra for i, d in enumerate(p_shape) if d == 1 and g.shape[i + extra] != 1
+        )
+        g = jnp.sum(g, axis=axes, keepdims=False)
+        g = g.reshape(p_shape)
+    return None, g
+
+
+bernoulli_from_uniform.defvjp(_bfu_fwd, _bfu_bwd)
+
+
+def ste_bernoulli(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Sample ``s ~ Bern(clip(p,0,1))`` with straight-through gradient."""
+    u = jax.random.uniform(key, p.shape, dtype=jnp.float32).astype(p.dtype)
+    return bernoulli_from_uniform(u, p)
+
+
+# ---------------------------------------------------------------------------
+# Sigmoid-surrogate Heaviside (LIF firing function)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def spike_heaviside(v: jax.Array, alpha: float = 4.0) -> jax.Array:
+    """Heaviside step ``H(v)`` with sigmoid-derivative surrogate gradient."""
+    return (v >= 0).astype(v.dtype)
+
+
+def _spike_fwd(v, alpha):
+    return spike_heaviside(v, alpha), (v, alpha)
+
+
+def _spike_bwd(res, g):
+    v, alpha = res
+    sg = jax.nn.sigmoid(alpha * v)
+    return (g * alpha * sg * (1.0 - sg), None)
+
+
+spike_heaviside.defvjp(_spike_fwd, _spike_bwd)

@@ -1,0 +1,3 @@
+from .synthetic import MarkovTextDataset, PatternedImageDataset
+
+__all__ = ["MarkovTextDataset", "PatternedImageDataset"]

@@ -1,0 +1,202 @@
+"""Sharding rules: param-path -> PartitionSpec, activation constraints.
+
+Megatron-style TP over the ``model`` axis, DP/FSDP over ``data`` (+ ``pod``
+as an outer data axis or pipeline axis in multi-pod), with divisibility-aware
+fallbacks (e.g. whisper's vocab 51865 is not 16-divisible -> shard d_model
+instead; mixtral's 8 experts < 16 -> shard expert ffn instead of the expert
+axis).  Models call `constrain(x, "<logical name>")`; the active rules come
+from a contextvar set by the step builders, so model code stays mesh-free.
+"""
+from __future__ import annotations
+
+import re
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: ContextVar[Optional["ShardingRules"]] = ContextVar("rules", default=None)
+
+
+class ShardingRules:
+    """Holds mesh-axis sizes + the data/model axis names for this run."""
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        *,
+        batch_shardable: bool = True,
+        pod_in_data: bool = True,
+        seq_parallel: bool = False,
+        pipeline: bool = False,
+    ):
+        self.mesh = mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.model = sizes.get("model", 1)
+        data_axes = []
+        if "pod" in sizes and pod_in_data:
+            data_axes.append("pod")
+        if "data" in sizes:
+            data_axes.append("data")
+        self.data_axes = tuple(data_axes)
+        self.data_size = int(np.prod([sizes[a] for a in self.data_axes])) if data_axes else 1
+        self.batch_shardable = batch_shardable
+        # Megatron-style sequence parallelism: residual-stream activations
+        # shard their seq dim over `model`; GSPMD inserts the AG/RS pair at
+        # each TP block boundary.  16x less live activation memory per layer.
+        self.seq_parallel = seq_parallel
+        # pipeline mode: layer stacks shard their stack axis over `pod`
+        self.pipeline = pipeline
+
+    # -- data axis spec entry (None when batch can't shard, e.g. batch=1) --
+    @property
+    def data(self):
+        if not self.batch_shardable or not self.data_axes:
+            return None
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def seq_axes(self):
+        """Axes available for sequence-sharding a KV cache when batch=1."""
+        axes = list(self.data_axes) + (["model"] if self.model > 1 else [])
+        if self.batch_shardable:
+            axes = ["model"] if self.model > 1 else []
+        return tuple(axes) if axes else None
+
+    # ------------------------------------------------------------------
+    # activation constraints
+    # ------------------------------------------------------------------
+    def act_spec(self, name: str, shape: tuple[int, ...]) -> Optional[P]:
+        m = self.model
+        if name == "btd_sp":   # residual stream, SP-eligible (transformers)
+            if self.seq_parallel and m > 1 and shape[1] % m == 0 and shape[1] > 1:
+                return P(self.data, "model", None)
+            return P(self.data, None, None)
+        if name == "btd":      # residual stream (B, S, D)
+            return P(self.data, None, None)
+        if name == "btf":      # mlp hidden (B, S, F)
+            if shape[-1] % m == 0:
+                return P(self.data, None, "model")
+            return P(self.data, None, None)
+        if name == "bthd":     # attention heads (B, S, H, hd)
+            if shape[2] % m == 0:
+                return P(self.data, None, "model", None)
+            return None        # let GSPMD propagate (e.g. 56 heads on 16-way)
+        if name == "btv":      # logits (B, S, V)
+            if shape[-1] % m == 0:
+                return P(self.data, None, "model")
+            return P(self.data, None, None)
+        if name == "becd":     # moe per-row expert buffers (B, E, C, d)
+            return P(self.data, None, None, None)
+        return None
+
+    # ------------------------------------------------------------------
+    # parameter specs by path
+    # ------------------------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        m = self.model
+
+        def col(nd):  # shard last dim over model
+            if shape[-1] % m == 0:
+                return P(*([None] * (nd - 1) + ["model"]))
+            return P(*([None] * nd))
+
+        def row(nd):  # shard second-to-last dim over model
+            if shape[-2] % m == 0:
+                return P(*([None] * (nd - 2) + ["model", None]))
+            return P(*([None] * nd))
+
+        nd = len(shape)
+        leaf = path.split("/")[-1]
+        if leaf in ("embed", "pos_embed", "patch_embed"):
+            if shape[0] % m == 0 and leaf == "embed":
+                return P(*(["model"] + [None] * (nd - 1)))
+            if shape[-1] % m == 0:
+                return P(*([None] * (nd - 1) + ["model"]))
+            return P(*([None] * nd))
+        if leaf == "lm_head":
+            return col(nd)
+        if re.search(r"moe", path) and leaf in ("wi", "wg", "wo"):
+            # shard the ffn dim over model (Megatron col/row); the per-row
+            # dispatch keeps tokens data-local, so expert-axis sharding (EP
+            # with token all-to-all) is not required for correctness — see
+            # EXPERIMENTS.md §Perf for the measured comparison
+            ff_axis = nd - 1 if leaf in ("wi", "wg") else nd - 2
+            if shape[ff_axis] % m == 0:
+                spec = [None] * nd
+                spec[ff_axis] = "model"
+                return P(*spec)
+            return P(*([None] * nd))
+        if leaf in ("wq", "wk", "wv", "wi", "wg", "up", "in_proj", "w"):
+            return col(nd)
+        if leaf in ("wo", "down", "out_proj"):
+            return row(nd)
+        if leaf == "router":
+            return P(*([None] * nd))
+        # norms, biases, gates, conv weights, scalars: replicate
+        return P(*([None] * nd))
+
+    def param_pspecs(self, params) -> dict:
+        """Tree of PartitionSpecs matching a params pytree."""
+
+        def visit(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: visit(v, f"{prefix}/{k}") for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                t = [visit(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+                return type(tree)(t)
+            spec = self.param_spec(prefix, tree.shape)
+            if self.pipeline and "/slots/" in prefix:
+                # pipeline mode: every layer-stacked tensor shards its stack
+                # axis (axis 0) over the `pod` axis
+                entries = list(spec) + [None] * (len(tree.shape) - len(spec))
+                entries[0] = "pod"
+                spec = P(*entries)
+            return spec
+
+        return visit(params, "")
+
+
+def current_rules() -> Optional["ShardingRules"]:
+    """The active rules (None outside a distributed step)."""
+    return _ACTIVE.get()
+
+
+def use_rules(rules: Optional[ShardingRules]):
+    """Context token for the active sharding rules (step builders set this)."""
+    return _ACTIVE.set(rules)
+
+
+def reset_rules(token):
+    _ACTIVE.reset(token)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the active activation-sharding constraint (identity when none)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = rules.act_spec(name, x.shape)
+    if spec is None:
+        return x
+    # NamedSharding: constraint works regardless of an ambient mesh context
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec)
+    )
+
+
+def cache_spec(rules: Optional["ShardingRules"], kv_heads: int, window_or_seq: int) -> P:
+    """KV-cache spec (B, S, Hkv, hd): batch over data when shardable, else
+    sequence over all axes; kv heads over model when divisible, else seq."""
+    if rules is None:
+        return P()
+    m = rules.model
+    if rules.batch_shardable:
+        if kv_heads % m == 0:
+            return P(rules.data, None, "model", None)
+        return P(rules.data, "model", None, None)  # seq-shard over model
+    # batch=1 long-context: shard seq over everything available
+    axes = tuple(a for a in (*rules.data_axes, "model") if a)
+    return P(None, axes if len(axes) > 1 else axes[0], None, None)

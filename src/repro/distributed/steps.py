@@ -1,0 +1,206 @@
+"""Step builders: sharded train_step / prefill / decode_step factories.
+
+These close over (model, rules, optimizer) and return pure functions plus
+matching in/out sharding-spec trees — consumed identically by the real
+launcher (`launch/train.py`) and the dry-run (`launch/dryrun.py`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, ShapeConfig, TrainConfig
+from repro.optim.adamw import AdamW, AdamWState, global_norm_clip, lr_schedule, zero1_spec
+from repro.optim.compression import ef_compress
+from .sharding import ShardingRules, cache_spec, reset_rules, use_rules
+
+
+# ---------------------------------------------------------------------------
+# spec trees
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_specs: dict, rules: ShardingRules) -> dict:
+    """Input batch PartitionSpecs: batch axis over data (when shardable)."""
+    out = {}
+    for name, spec in batch_specs.items():
+        nd = len(spec.shape)
+        if name == "positions" and nd == 3:  # mrope (3, B, S)
+            out[name] = P(None, rules.data, None)
+        elif nd >= 1:
+            out[name] = P(rules.data, *([None] * (nd - 1)))
+        else:
+            out[name] = P()
+    return out
+
+
+def _leaf_cache_spec(path: str, shape, rules: ShardingRules) -> P:
+    nd = len(shape)
+    m = rules.model
+    name = path.split("/")[-1]
+    if name in ("k", "v"):
+        base = cache_spec(rules, kv_heads=shape[-2], window_or_seq=shape[-3])
+        if nd == 5:  # stacked layers
+            return P(None, *base)
+        return base
+    if name == "pos":
+        lead = (None,) if nd == 3 else ()
+        return P(*lead, rules.data, None)
+    if name == "memory":  # whisper cross memory (B, S, D)
+        return P(rules.data, None, None)
+    # recurrent states: shard batch over data, heads over model if divisible
+    if nd >= 2:
+        entries = [rules.data] + [None] * (nd - 1)
+        if not rules.batch_shardable:
+            entries[0] = None
+        if nd >= 3 and shape[1] % m == 0 and m > 1:
+            entries[1] = "model"
+        elif shape[-1] % m == 0 and m > 1:
+            entries[-1] = "model"
+        return P(*entries)
+    return P(*([None] * nd))
+
+
+def cache_pspecs(cache_tree, rules: ShardingRules):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    specs = []
+    for path, leaf in paths_leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        specs.append(_leaf_cache_spec(key, leaf.shape, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_pspecs(param_pspecs, param_shapes, rules: ShardingRules,
+                     zero1: bool) -> AdamWState:
+    def z(spec_tree, shapes):
+        if not zero1:
+            return spec_tree
+        return jax.tree.map(
+            lambda sp, sh: zero1_spec(sp, sh.shape, rules.data_size, rules.data_axes),
+            spec_tree,
+            shapes,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    return AdamWState(
+        m=z(param_pspecs, param_shapes),
+        v=z(param_pspecs, param_shapes),
+        master=z(param_pspecs, param_shapes),
+        count=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(model, train_cfg: TrainConfig, parallel: ParallelConfig,
+                     rules: ShardingRules):
+    """Returns (train_step(state, batch) -> (state, metrics))."""
+    opt = AdamW(train_cfg)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        token = use_rules(rules)
+        try:
+            step = state["opt"].count
+            rng = jax.random.fold_in(jax.random.PRNGKey(train_cfg.seed), step)
+
+            def loss_fn(p):
+                return model.loss(p, batch, rng=rng, remat=parallel.remat)
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            # bf16 gradient reduction: upcasts inside the loss otherwise leak
+            # f32 into the cross-replica all-reduces (2x the bytes); the
+            # optimizer re-upcasts to f32 against the fp32 masters
+            grads = jax.tree.map(
+                lambda g, pp: g.astype(pp.dtype), grads, state["params"]
+            )
+            # pin gradient shardings to the param layout: XLA otherwise tends
+            # to materialise replicated f32 grads (full-size all-reduces)
+            pspecs = rules.param_pspecs(grads)
+            grads = jax.tree.map(
+                lambda g, sp: jax.lax.with_sharding_constraint(
+                    g, jax.sharding.NamedSharding(rules.mesh, sp)
+                ),
+                grads,
+                pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            grads, gnorm = global_norm_clip(grads, train_cfg.grad_clip)
+            if parallel.grad_compression == "int8_ef":
+                grads, new_residual = ef_compress(grads, state["residual"])
+            lr = lr_schedule(train_cfg, step)
+            new_params, new_opt = opt.update(grads, state["opt"], state["params"], lr)
+            new_state = {"params": new_params, "opt": new_opt}
+            if parallel.grad_compression == "int8_ef":
+                new_state["residual"] = new_residual
+            return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        finally:
+            reset_rules(token)
+
+    return train_step, opt
+
+
+def init_train_state(model, key, opt: AdamW, parallel: ParallelConfig) -> dict:
+    params = model.init(key)
+    state = {"params": params, "opt": opt.init(params)}
+    if parallel.grad_compression == "int8_ef":
+        from repro.optim.compression import init_residual
+
+        state["residual"] = init_residual(params)
+    return state
+
+
+def train_state_pspecs(state_shapes, rules: ShardingRules, parallel: ParallelConfig):
+    param_specs = rules.param_pspecs(state_shapes["params"])
+    specs = {
+        "params": param_specs,
+        "opt": opt_state_pspecs(
+            param_specs, state_shapes["params"], rules, parallel.zero1
+        ),
+    }
+    if "residual" in state_shapes:
+        specs["residual"] = jax.tree.map(
+            lambda sp, sh: zero1_spec(sp, sh.shape, rules.data_size, rules.data_axes),
+            param_specs,
+            state_shapes["params"],
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(model, rules: ShardingRules):
+    def prefill_step(params, batch, cache):
+        token = use_rules(rules)
+        try:
+            rng = jax.random.PRNGKey(0)
+            return model.prefill(params, batch, cache, rng=rng)
+        finally:
+            reset_rules(token)
+
+    return prefill_step
+
+
+def build_decode_step(model, rules: ShardingRules):
+    def decode_step(params, batch, cache, index):
+        token = use_rules(rules)
+        try:
+            rng = jax.random.fold_in(jax.random.PRNGKey(0), index)
+            return model.decode_step(params, batch, cache, index, rng=rng)
+        finally:
+            reset_rules(token)
+
+    return decode_step

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute of SSA.
+
+Each kernel ships as a subpackage with `kernel.py` (pl.pallas_call +
+BlockSpec), `ops.py` (jitted public wrapper with custom VJP) and `ref.py`
+(pure-jnp oracle, bit-exact where the RNG is shared)."""
+from .bernoulli.ops import bernoulli_encode_kernel
+from .lif.ops import lif_forward
+from .ssa_attention.ops import ssa_attention as ssa_attention_fused
+
+__all__ = ["bernoulli_encode_kernel", "lif_forward", "ssa_attention_fused"]

@@ -1,0 +1,78 @@
+"""Bernoulli rate-encoder Pallas kernel: rates (B, F) -> spikes (T, B, F).
+
+The hardware analogue is the PRNG+comparator bank of Sec. III-D; here one
+program tile owns a (block_b, block_f) neuron patch and emits its full T-step
+spike train from the stateless counter RNG (`kernels.common`), so the encoder
+is reproducible under any sharding of the (B, F) plane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..common import cdiv, uniform_from_counter
+
+SALT_ENC = np.uint32(0xC2B2AE35)
+
+
+def _bernoulli_kernel(
+    seed_ref, p_ref, out_ref, *, block_b, block_f, b_pad, f_pad, num_steps
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    p = p_ref[...].astype(jnp.float32)  # (block_b, block_f)
+    rows = i * block_b + jax.lax.broadcasted_iota(
+        jnp.int32, (num_steps, block_b, block_f), 1
+    )
+    cols = j * block_f + jax.lax.broadcasted_iota(
+        jnp.int32, (num_steps, block_b, block_f), 2
+    )
+    ts = jax.lax.broadcasted_iota(jnp.int32, (num_steps, block_b, block_f), 0)
+    idx = (
+        ts.astype(jnp.uint32) * jnp.uint32((b_pad * f_pad) % (1 << 32))
+        + rows.astype(jnp.uint32) * jnp.uint32(f_pad)
+        + cols.astype(jnp.uint32)
+    )
+    u = uniform_from_counter(seed_ref[0, 0] ^ SALT_ENC, idx)
+    out_ref[...] = (u < p[None]).astype(out_ref.dtype)
+
+
+def build_bernoulli_pallas(
+    *,
+    num_steps: int,
+    batch: int,
+    feat: int,
+    dtype,
+    block_b: int = 8,
+    block_f: int = 512,
+    interpret: bool = False,
+):
+    from jax.experimental.pallas import tpu as pltpu
+
+    block_b = min(block_b, batch)
+    block_f = min(block_f, feat)
+    kernel = functools.partial(
+        _bernoulli_kernel,
+        block_b=block_b,
+        block_f=block_f,
+        b_pad=batch,
+        f_pad=feat,
+        num_steps=num_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(cdiv(batch, block_b), cdiv(feat, block_f)),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seed (1,1)
+            pl.BlockSpec((block_b, block_f), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (num_steps, block_b, block_f), lambda i, j: (0, i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_steps, batch, feat), dtype),
+        interpret=interpret,
+    )

@@ -1,0 +1,50 @@
+"""Jitted public wrapper for the Bernoulli encoder kernel, STE gradient."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import cdiv
+from .kernel import build_bernoulli_pallas
+
+__all__ = ["bernoulli_encode_kernel"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def bernoulli_encode_kernel(
+    p: jax.Array, seed: jax.Array, num_steps: int, interpret: bool = False
+) -> jax.Array:
+    """Encode rates p (B, F) into (T, B, F) spikes; STE gradient to p."""
+    b, f = p.shape
+    bb = 8 if b >= 8 else b
+    bf = 512 if f >= 512 else f
+    b_pad = cdiv(b, bb) * bb
+    f_pad = cdiv(f, bf) * bf
+    pp = jnp.pad(p, ((0, b_pad - b), (0, f_pad - f)))
+    call = build_bernoulli_pallas(
+        num_steps=num_steps,
+        batch=b_pad,
+        feat=f_pad,
+        dtype=p.dtype,
+        block_b=bb,
+        block_f=bf,
+        interpret=interpret,
+    )
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    return call(seed_arr, pp)[:, :b, :f]
+
+
+def _enc_fwd(p, seed, num_steps, interpret):
+    return bernoulli_encode_kernel(p, seed, num_steps, interpret), (jnp.shape(seed))
+
+
+def _enc_bwd(num_steps, interpret, seed_shape, g):
+    # STE: d spikes / d p := 1 per time step -> sum over T.
+    dseed = np.zeros(seed_shape, dtype=jax.dtypes.float0)
+    return g.sum(axis=0), dseed
+
+
+bernoulli_encode_kernel.defvjp(_enc_fwd, _enc_bwd)

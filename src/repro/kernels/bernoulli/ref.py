@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the Bernoulli encoder kernel (kernel-identical RNG)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, uniform_from_counter
+from .kernel import SALT_ENC
+
+
+def bernoulli_reference(
+    p: jax.Array, seed: jax.Array, num_steps: int, *, block_b: int = 8, block_f: int = 512
+) -> jax.Array:
+    """p: (B, F) rates in [0,1] -> (T, B, F) 0/1 spikes."""
+    b, f = p.shape
+    block_b = min(block_b, b)
+    block_f = min(block_f, f)
+    b_pad = cdiv(b, block_b) * block_b
+    f_pad = cdiv(f, block_f) * block_f
+    ts = jnp.arange(num_steps, dtype=jnp.uint32)[:, None, None]
+    rows = jnp.arange(b, dtype=jnp.uint32)[None, :, None]
+    cols = jnp.arange(f, dtype=jnp.uint32)[None, None, :]
+    idx = ts * jnp.uint32((b_pad * f_pad) % (1 << 32)) + rows * jnp.uint32(f_pad) + cols
+    u = uniform_from_counter(jnp.asarray(seed, jnp.uint32) ^ SALT_ENC, idx)
+    return (u < p[None].astype(jnp.float32)).astype(p.dtype)

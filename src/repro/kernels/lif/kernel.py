@@ -1,0 +1,60 @@
+"""LIF neuron-layer Pallas kernel: integrate a (T, B, F) current tensor.
+
+The membrane potential lives in a VMEM scratch tile; the T loop runs inside
+the kernel (one HBM read + one HBM write per element, zero intermediate
+traffic — the same "state stays local" principle as the SAU array's FIFO).
+Grid tiles the (B, F) plane; each program owns its neurons' full time line.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import cdiv
+
+
+def _lif_kernel(x_ref, out_ref, v_ref, *, beta: float, threshold: float, num_steps: int):
+    v_ref[...] = jnp.zeros_like(v_ref)
+
+    def step(t, _):
+        v = v_ref[...] * jnp.float32(beta) + x_ref[t].astype(jnp.float32)
+        s = (v >= jnp.float32(threshold)).astype(jnp.float32)
+        v_ref[...] = v - jnp.float32(threshold) * s
+        out_ref[t] = s.astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, num_steps, step, 0)
+
+
+def build_lif_pallas(
+    *,
+    num_steps: int,
+    batch: int,
+    feat: int,
+    dtype,
+    beta: float,
+    threshold: float,
+    block_b: int = 8,
+    block_f: int = 512,
+    interpret: bool = False,
+):
+    block_b = min(block_b, batch)
+    block_f = min(block_f, feat)
+    kernel = functools.partial(
+        _lif_kernel, beta=beta, threshold=threshold, num_steps=num_steps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(cdiv(batch, block_b), cdiv(feat, block_f)),
+        in_specs=[
+            pl.BlockSpec((num_steps, block_b, block_f), lambda i, j: (0, i, j))
+        ],
+        out_specs=pl.BlockSpec((num_steps, block_b, block_f), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((num_steps, batch, feat), dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_f), jnp.float32)],
+        interpret=interpret,
+    )

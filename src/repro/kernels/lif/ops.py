@@ -1,0 +1,87 @@
+"""Jitted public wrapper for the LIF Pallas kernel (+ surrogate-grad VJP)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv
+from .kernel import build_lif_pallas
+
+__all__ = ["lif_forward"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def lif_forward(
+    x: jax.Array,
+    beta: float = 0.9,
+    threshold: float = 1.0,
+    alpha: float = 4.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """LIF layer over (T, B, F) currents via the Pallas kernel.
+
+    Forward is the kernel; backward is the standard surrogate-gradient BPTT
+    (recomputed in jnp — membrane traces are cheap relative to attention).
+    """
+    t, b, f = x.shape
+    bf = 512 if f % 512 == 0 or f > 512 else f
+    bb = 8 if b % 8 == 0 or b > 8 else b
+    # pad (B, F) to block multiples
+    b_pad = cdiv(b, bb) * bb
+    f_pad = cdiv(f, bf) * bf
+    xp = jnp.pad(x, ((0, 0), (0, b_pad - b), (0, f_pad - f)))
+    call = build_lif_pallas(
+        num_steps=t,
+        batch=b_pad,
+        feat=f_pad,
+        dtype=x.dtype,
+        beta=beta,
+        threshold=threshold,
+        block_b=bb,
+        block_f=bf,
+        interpret=interpret,
+    )
+    return call(xp)[:, :b, :f]
+
+
+def _lif_fwd(x, beta, threshold, alpha, interpret):
+    return lif_forward(x, beta, threshold, alpha, interpret), x
+
+
+def _lif_bwd(beta, threshold, alpha, interpret, x, g):
+    """Surrogate BPTT: recompute membrane trace, backprop through
+    v[t] = beta v[t-1] + x[t] - theta s[t],  s[t] = H(v[t] - theta)."""
+    x32 = x.astype(jnp.float32)
+
+    def fwd_step(v, x_t):
+        v_pre = beta * v + x_t
+        s = (v_pre >= threshold).astype(jnp.float32)
+        v_post = v_pre - threshold * s
+        return v_post, (v_pre, s)
+
+    v0 = jnp.zeros(x.shape[1:], dtype=jnp.float32)
+    _, (v_pre, _) = jax.lax.scan(fwd_step, v0, x32)
+
+    def bwd_step(carry, inp):
+        dv_next, = carry
+        g_t, v_pre_t = inp
+        sg = jax.nn.sigmoid(alpha * (v_pre_t - threshold))
+        ds_dv = alpha * sg * (1.0 - sg)
+        # dL/dv_pre[t] = g[t] * ds/dv + dv_next * (dv_post/dv_pre)
+        #   v_post = v_pre - theta * s  =>  dv_post/dv_pre = 1 - theta * ds/dv
+        dv_pre = g_t * ds_dv + dv_next * (1.0 - threshold * ds_dv)
+        dx_t = dv_pre
+        dv_prev = beta * dv_pre
+        return (dv_prev,), dx_t
+
+    (_, ), dx_rev = jax.lax.scan(
+        bwd_step,
+        (jnp.zeros(x.shape[1:], jnp.float32),),
+        (g.astype(jnp.float32)[::-1], v_pre[::-1]),
+    )
+    return (dx_rev[::-1].astype(x.dtype),)
+
+
+lif_forward.defvjp(_lif_fwd, _lif_bwd)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the LIF kernel — mirrors `core.lif.lif_layer`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_reference(x: jax.Array, *, beta: float = 0.9, threshold: float = 1.0) -> jax.Array:
+    """x: (T, B, F) input currents -> (T, B, F) 0/1 spikes (soft reset)."""
+    v0 = jnp.zeros(x.shape[1:], dtype=jnp.float32)
+
+    def step(v, x_t):
+        v = v * beta + x_t.astype(jnp.float32)
+        s = (v >= threshold).astype(jnp.float32)
+        v = v - threshold * s
+        return v, s.astype(x.dtype)
+
+    _, spikes = jax.lax.scan(step, v0, x)
+    return spikes

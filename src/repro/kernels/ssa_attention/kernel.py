@@ -1,0 +1,183 @@
+"""Fused stochastic-spiking-attention Pallas TPU kernel.
+
+TPU realisation of the SAU-array dataflow (paper Fig. 2/3, DESIGN.md §2):
+
+  * the `N x N` SAU array          -> MXU tiles of a 0/1 matmul (`block_q x
+    block_k` per grid step); the AND+counter column of each SAU is one lane
+    of the dot product (0/1 operands => dot == popcount of AND);
+  * "no intermediate DRAM traffic" -> flash-attention-style fusion: the score
+    tile `S` is Bernoulli-sampled in VMEM/registers and immediately consumed
+    against the streamed `V` tile; `S` never reaches HBM;
+  * per-encoder LFSR PRNGs         -> stateless counter RNG keyed on the
+    *logical* (b, i, j) position, so tiling, remat and the backward pass
+    regenerate identical bits (`kernels.common.uniform_from_counter`);
+  * power-of-two normalisation     -> probabilities stay as raw counts and
+    are compared against `u * D_K` / `u * visible` — no division on the
+    sampling path, mirroring the shift-free hardware comparison.
+
+Grid: ``(B, num_q_tiles, num_kv_tiles)`` with the kv axis innermost
+(reduction).  The attention-count accumulator lives in a VMEM scratch tile
+and is sampled into output spikes when the last kv tile retires.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import cdiv, uniform_from_counter
+
+import numpy as np
+
+# Salts decorrelating the two Bernoulli encoder banks (eq. 5 vs eq. 6).
+# (numpy scalars => jaxpr literals, safe to close over in kernel bodies)
+SALT_S = np.uint32(0x9E3779B9)
+SALT_A = np.uint32(0x85EBCA6B)
+
+
+def _ssa_kernel(
+    seed_ref,       # SMEM (1, 1) uint32
+    q_ref,          # VMEM (1, block_q, d_pad)
+    k_ref,          # VMEM (1, block_k, d_pad)
+    v_ref,          # VMEM (1, block_k, d_pad)
+    out_ref,        # VMEM (1, block_q, d_pad)
+    acc_ref,        # VMEM scratch (block_q, d_pad) f32
+    *,
+    block_q: int,
+    block_k: int,
+    n_q: int,
+    n_kv: int,
+    n_q_pad: int,
+    n_kv_pad: int,
+    d_pad: int,
+    d_k: int,
+    causal: bool,
+    window: Optional[int],
+    num_kv_tiles: int,
+):
+    b = pl.program_id(0)
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- eq. 5 tile: counts = Q-tile @ K-tile^T  (popcount of AND) --------
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    counts_s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_q, block_k)
+
+    # absolute logical positions of this tile
+    qi = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kj = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    # queries align to the END of the kv axis (decode/chunked-prefill support)
+    qpos = qi + (n_kv - n_q)
+
+    valid = kj < n_kv
+    if causal:
+        valid &= kj <= qpos
+    if window is not None:
+        valid &= kj > qpos - window
+
+    # Bernoulli encoder bank #1 — hardware compares count against u * D_K
+    # (shift-free for power-of-two D_K); masked lanes compare against -1.
+    stride_b = (n_q_pad * n_kv_pad) % (1 << 32)  # wrap like the uint32 math
+    idx_s = (
+        b.astype(jnp.uint32) * jnp.uint32(stride_b)
+        + qi.astype(jnp.uint32) * jnp.uint32(n_kv_pad % (1 << 32))
+        + kj.astype(jnp.uint32)
+    )
+    u_s = uniform_from_counter(seed_ref[0, 0] ^ SALT_S, idx_s)
+    s = jnp.where(valid, u_s * jnp.float32(d_k) < counts_s, False)
+    s = s.astype(jnp.float32)
+
+    # ---- eq. 6 partial: acc += S-tile @ V-tile ----------------------------
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # ---- final kv tile: Bernoulli encoder bank #2 -------------------------
+    @pl.when(ik == num_kv_tiles - 1)
+    def _finalize():
+        row = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, d_pad), 0
+        )
+        col = jax.lax.broadcasted_iota(jnp.int32, (block_q, d_pad), 1)
+        rpos = row + (n_kv - n_q)
+        if causal:
+            visible = jnp.minimum(rpos + 1, n_kv)
+            if window is not None:
+                visible = jnp.minimum(visible, window)
+        else:
+            visible = jnp.full_like(rpos, n_kv)
+            if window is not None:
+                visible = jnp.minimum(visible, window)
+        visible = jnp.maximum(visible, 1).astype(jnp.float32)
+
+        idx_a = (
+            b.astype(jnp.uint32) * jnp.uint32((n_q_pad * d_pad) % (1 << 32))
+            + row.astype(jnp.uint32) * jnp.uint32(d_pad)
+            + col.astype(jnp.uint32)
+        )
+        u_a = uniform_from_counter(seed_ref[0, 0] ^ SALT_A, idx_a)
+        out = (u_a * visible < acc_ref[...]).astype(out_ref.dtype)
+        out_ref[0] = out
+
+
+def build_ssa_pallas(
+    *,
+    bsz: int,
+    n_q: int,
+    n_kv: int,
+    d_k: int,
+    n_q_pad: int,
+    n_kv_pad: int,
+    d_pad: int,
+    out_dtype,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+):
+    """Construct the pallas_call for a given padded geometry."""
+    num_q_tiles = cdiv(n_q_pad, block_q)
+    num_kv_tiles = cdiv(n_kv_pad, block_k)
+
+    kernel = functools.partial(
+        _ssa_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        n_q=n_q,
+        n_kv=n_kv,
+        n_q_pad=n_q_pad,
+        n_kv_pad=n_kv_pad,
+        d_pad=d_pad,
+        d_k=d_k,
+        causal=causal,
+        window=window,
+        num_kv_tiles=num_kv_tiles,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, num_q_tiles, num_kv_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seed (1,1)
+            pl.BlockSpec((1, block_q, d_pad), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d_pad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d_pad), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_pad), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_q_pad, d_pad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d_pad), jnp.float32)],
+        interpret=interpret,
+    )

@@ -1,0 +1,149 @@
+"""Public jitted API for the fused SSA attention kernel.
+
+`ssa_attention(...)` pads to tile boundaries, dispatches the Pallas kernel,
+and installs a custom VJP: the backward pass *recomputes* the score spikes
+``S`` from the stateless counter RNG (flash-attention-style memory saving —
+S is never stored) and applies the straight-through estimator through both
+Bernoulli encoders:
+
+    dL/dV = S^T (g / vis)          dL/dS = (g / vis) V^T      (STE on eq. 6)
+    dL/dQ = dL/dS K / D_K          dL/dK = dL/dS^T Q / D_K    (STE on eq. 5)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import uniform_from_counter
+from .kernel import SALT_S, build_ssa_pallas
+from .ref import padded_dims
+
+__all__ = ["ssa_attention"]
+
+
+def _pad3(x, n_to, d_to):
+    b, n, d = x.shape
+    if n == n_to and d == d_to:
+        return x
+    return jnp.pad(x, ((0, 0), (0, n_to - n), (0, d_to - d)))
+
+
+def _visible_counts(n_q, n_kv, causal, window):
+    rpos = jnp.arange(n_q) + (n_kv - n_q)
+    if causal:
+        visible = jnp.minimum(rpos + 1, n_kv)
+        if window is not None:
+            visible = jnp.minimum(visible, window)
+    else:
+        visible = jnp.full_like(rpos, n_kv)
+        if window is not None:
+            visible = jnp.minimum(visible, window)
+    return jnp.maximum(visible, 1).astype(jnp.float32)
+
+
+def _recompute_s(q, k, seed, causal, window, block_q, block_k):
+    """Regenerate the score spikes S from the counter RNG (no storage)."""
+    bsz, n_q, d_k = q.shape
+    n_kv = k.shape[1]
+    n_q_pad, n_kv_pad, _ = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    counts_s = jnp.einsum(
+        "bqd,bkd->bqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    qi = jnp.arange(n_q)[:, None]
+    kj = jnp.arange(n_kv)[None, :]
+    qpos = qi + (n_kv - n_q)
+    valid = jnp.ones((n_q, n_kv), dtype=bool)
+    if causal:
+        valid &= kj <= qpos
+    if window is not None:
+        valid &= kj > qpos - window
+    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
+    idx_s = (
+        b_idx * jnp.uint32((n_q_pad * n_kv_pad) % (1 << 32))
+        + qi.astype(jnp.uint32) * jnp.uint32(n_kv_pad % (1 << 32))
+        + kj.astype(jnp.uint32)
+    )
+    u_s = uniform_from_counter(jnp.asarray(seed, jnp.uint32) ^ SALT_S, idx_s)
+    return jnp.where(valid[None], u_s * jnp.float32(d_k) < counts_s, False).astype(
+        jnp.float32
+    )
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
+)
+def ssa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seed: jax.Array,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused SSA attention.  q: (B, N_q, D_K) 0/1 spikes; k/v: (B, N_kv, D_K).
+
+    ``seed``: uint32 scalar array — vary per (layer, time step, train step).
+    Returns (B, N_q, D_K) 0/1 spikes, bit-exact vs. `ref.ssa_reference`.
+    """
+    bsz, n_q, d_k = q.shape
+    n_kv = k.shape[1]
+    n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    qp = _pad3(q, n_q_pad, d_pad)
+    kp = _pad3(k, n_kv_pad, d_pad)
+    vp = _pad3(v, n_kv_pad, d_pad)
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    call = build_ssa_pallas(
+        bsz=bsz,
+        n_q=n_q,
+        n_kv=n_kv,
+        d_k=d_k,
+        n_q_pad=n_q_pad,
+        n_kv_pad=n_kv_pad,
+        d_pad=d_pad,
+        out_dtype=q.dtype,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    out = call(seed_arr, qp, kp, vp)
+    return out[:, :n_q, :d_k]
+
+
+def _ssa_fwd(q, k, v, seed, causal, window, block_q, block_k, interpret):
+    out = ssa_attention(q, k, v, seed, causal, window, block_q, block_k, interpret)
+    return out, (q, k, v, seed)
+
+
+def _ssa_bwd(causal, window, block_q, block_k, interpret, res, g):
+    q, k, v, seed = res
+    n_q, d_k = q.shape[-2], q.shape[-1]
+    n_kv = k.shape[1]
+    s = _recompute_s(q, k, seed, causal, window, block_q, block_k)
+    vis = _visible_counts(n_q, n_kv, causal, window)[None, :, None]
+    g32 = g.astype(jnp.float32) / vis
+    # STE through eq. 6
+    dv = jnp.einsum("bqk,bqd->bkd", s, g32)
+    ds = jnp.einsum("bqd,bkd->bqk", g32, v.astype(jnp.float32))
+    # STE through eq. 5
+    ds = ds / jnp.float32(d_k)
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k.astype(jnp.float32))
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q.astype(jnp.float32))
+    # seed is integer-typed -> symbolic-zero (float0) cotangent
+    import numpy as np
+
+    dseed = np.zeros(jnp.shape(seed), dtype=jax.dtypes.float0)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dseed
+
+
+ssa_attention.defvjp(_ssa_fwd, _ssa_bwd)

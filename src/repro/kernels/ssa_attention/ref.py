@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for the fused SSA kernel.
+
+Implements eq. 5/6 with full (untiled) matrices and the *same* stateless
+counter RNG + logical indexing as the kernel, so kernel vs. reference is a
+bit-exact comparison (the strongest check we can run without RTL).  The
+statistical oracle (`expected_rate`) closes the loop against the analytic
+expectation E[Attn] = Q K^T V / (D_K N).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, uniform_from_counter
+from .kernel import SALT_A, SALT_S
+
+__all__ = ["ssa_reference", "expected_rate", "padded_dims"]
+
+
+def padded_dims(n_q: int, n_kv: int, d: int, block_q: int, block_k: int):
+    """Padded geometry shared by the kernel wrapper and this oracle."""
+    return (
+        cdiv(n_q, block_q) * block_q,
+        cdiv(n_kv, block_k) * block_k,
+        cdiv(d, 128) * 128,
+    )
+
+
+def ssa_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seed: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Dense-einsum SSA with kernel-identical RNG.  q: (B, N_q, D) 0/1."""
+    bsz, n_q, d_k = q.shape
+    n_kv = k.shape[1]
+    n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    seed = jnp.asarray(seed, jnp.uint32)
+
+    counts_s = jnp.einsum(
+        "bqd,bkd->bqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    qi = jnp.arange(n_q)[:, None]
+    kj = jnp.arange(n_kv)[None, :]
+    qpos = qi + (n_kv - n_q)
+    valid = jnp.ones((n_q, n_kv), dtype=bool)
+    if causal:
+        valid &= kj <= qpos
+    if window is not None:
+        valid &= kj > qpos - window
+
+    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
+    idx_s = (
+        b_idx * jnp.uint32((n_q_pad * n_kv_pad) % (1 << 32))
+        + qi.astype(jnp.uint32) * jnp.uint32(n_kv_pad % (1 << 32))
+        + kj.astype(jnp.uint32)
+    )
+    u_s = uniform_from_counter(seed ^ SALT_S, idx_s)
+    s = jnp.where(valid[None], u_s * jnp.float32(d_k) < counts_s, False)
+    s = s.astype(jnp.float32)
+
+    counts_a = jnp.einsum(
+        "bqk,bkd->bqd", s, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+    row = jnp.arange(n_q)[:, None]
+    col = jnp.arange(d_k)[None, :]
+    rpos = row + (n_kv - n_q)
+    if causal:
+        visible = jnp.minimum(rpos + 1, n_kv)
+        if window is not None:
+            visible = jnp.minimum(visible, window)
+    else:
+        visible = jnp.full_like(rpos, n_kv)
+        if window is not None:
+            visible = jnp.minimum(visible, window)
+    visible = jnp.maximum(visible, 1).astype(jnp.float32)
+
+    idx_a = (
+        b_idx * jnp.uint32((n_q_pad * d_pad) % (1 << 32))
+        + row.astype(jnp.uint32) * jnp.uint32(d_pad)
+        + col.astype(jnp.uint32)
+    )
+    u_a = uniform_from_counter(seed ^ SALT_A, idx_a)
+    out = (u_a * visible < counts_a).astype(q.dtype)
+    return out
+
+
+def expected_rate(pq: jax.Array, pk: jax.Array, pv: jax.Array) -> jax.Array:
+    """Analytic E[Attn] for rate-coded inputs (full attention, no mask)."""
+    d_k = pq.shape[-1]
+    n = pk.shape[-2]
+    return jnp.einsum("...qd,...kd,...ke->...qe", pq, pk, pv) / (d_k * n)

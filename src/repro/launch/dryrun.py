@@ -1,0 +1,462 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_XLA_EXTRA", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Set here (and only here) so tests/benches keep seeing 1 CPU device.
+# REPRO_XLA_EXTRA: escape hatch for XLA:CPU bug workarounds (e.g. the
+# all-reduce-promotion pass crashes on bf16 ARs emitted by the pipeline
+# path; see EXPERIMENTS.md §Perf).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioner accepts it),
+  * the per-device memory footprint (memory_analysis),
+  * HLO FLOPs / bytes (cost_analysis) and per-device collective bytes
+    (parsed from the partitioned HLO) -> EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]   # subprocess per cell
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s/link ICI
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\])\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes by collective kind from partitioned HLO text.
+
+    all-reduce counts 2x (reduce-scatter + all-gather phases of a ring);
+    the others count their result bytes once.
+    """
+    by_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(3)
+        nbytes = _shape_bytes(m.group(2))
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        by_kind[kind] = by_kind.get(kind, 0.0) + nbytes * mult
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": by_kind, "count_by_kind": count,
+            "total_bytes": sum(by_kind.values())}
+
+
+def _compile_cell(cfg, shape, *, mesh, rules, parallel):
+    """Lower + compile one step function for (cfg, shape); returns compiled."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import TrainConfig
+    from repro.distributed.steps import (
+        batch_pspecs,
+        build_decode_step,
+        build_prefill_step,
+        build_train_step,
+        cache_pspecs,
+        train_state_pspecs,
+    )
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    t0 = time.time()
+    with mesh:
+        ns = lambda tree: jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        if shape.kind == "train":
+            train_cfg = TrainConfig()
+            if parallel.pipeline_stages > 1:
+                from repro.distributed.pipeline import build_pp_train_step
+
+                step_fn, opt = build_pp_train_step(model, train_cfg, parallel, rules)
+            else:
+                step_fn, opt = build_train_step(model, train_cfg, parallel, rules)
+            key = jax.random.PRNGKey(0)
+            state_shapes = jax.eval_shape(lambda k: {"params": model.init(k)}, key)
+            state_shapes["opt"] = jax.eval_shape(opt.init, state_shapes["params"])
+            state_specs = train_state_pspecs(state_shapes, rules, parallel)
+            in_specs = model.input_specs(shape)
+            bspecs = batch_pspecs(in_specs, rules)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(ns(state_specs), ns(bspecs)),
+                out_shardings=(ns(state_specs), None),
+                donate_argnums=(0,),
+            ).lower(state_shapes, in_specs)
+        else:
+            key = jax.random.PRNGKey(0)
+            params_shapes = jax.eval_shape(model.init, key)
+            param_specs = rules.param_pspecs(params_shapes)
+            cache_shapes = model.cache_specs(shape)
+            c_specs = cache_pspecs(cache_shapes, rules)
+            in_specs = model.input_specs(shape)
+            bspecs = batch_pspecs(in_specs, rules)
+            if shape.kind == "prefill":
+                step_fn = build_prefill_step(model, rules)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(ns(param_specs), ns(bspecs), ns(c_specs)),
+                    out_shardings=None,
+                    donate_argnums=(2,),
+                ).lower(params_shapes, in_specs, cache_shapes)
+            else:
+                step_fn = build_decode_step(model, rules)
+                idx_spec = jax.ShapeDtypeStruct((), jnp.int32)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(
+                        ns(param_specs), ns(bspecs), ns(c_specs),
+                        NamedSharding(mesh, P()),
+                    ),
+                    out_shardings=None,
+                    donate_argnums=(2,),
+                ).lower(params_shapes, in_specs, cache_shapes, idx_spec)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _cost_record(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_total": coll["total_bytes"],
+        "coll": coll,
+    }
+
+
+def _compile_linear_decode(cfg, shape, *, mesh, rules):
+    """Beyond-paper: SSA-linear O(1)-state decode (dense archs, long ctx)."""
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import reset_rules, use_rules
+    from repro.distributed.steps import batch_pspecs
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    t0 = _time.time()
+    with mesh:
+        key = jax.random.PRNGKey(0)
+        params_shapes = jax.eval_shape(model.init, key)
+        param_specs = rules.param_pspecs(params_shapes)
+        state_shapes = model.linear_state_specs(shape)
+        # state (L, B, H, dk, dk): shard H over model when divisible
+        h = state_shapes[0]["m"].shape[2]
+        hspec = "model" if h % rules.model == 0 else None
+        s_specs = [
+            {"m": P(None, rules.data, hspec, None, None),
+             "count": P(None, rules.data, hspec)}
+            for _ in state_shapes
+        ]
+        in_specs = model.input_specs(shape)
+        bspecs = batch_pspecs(in_specs, rules)
+        ns = lambda t: jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), t, is_leaf=lambda x: isinstance(x, P)
+        )
+
+        def step(params, batch, state):
+            token = use_rules(rules)
+            try:
+                return model.linear_decode_step(params, batch, state)
+            finally:
+                reset_rules(token)
+
+        lowered = jax.jit(
+            step,
+            in_shardings=(ns(param_specs), ns(bspecs), ns(s_specs)),
+            out_shardings=None,
+            donate_argnums=(2,),
+        ).lower(params_shapes, in_specs, state_shapes)
+        t_lower = _time.time() - t0
+        t0 = _time.time()
+        compiled = lowered.compile()
+    return compiled, t_lower, _time.time() - t0
+
+
+# Families whose layer stack is inside a lax.scan: XLA cost_analysis counts a
+# while-loop body ONCE, so the per-layer cost is recovered by compiling two
+# reduced-depth variants and extrapolating linearly in depth (all scan-body
+# costs — flops, bytes, collectives — are affine in L by construction).
+_SCANNED_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def _reduced_cfg(cfg, n_units: int):
+    pat = len(cfg.attention.layer_pattern)
+    kw = {"num_layers": pat * n_units, "scan_layers": False}
+    if cfg.decoder_layers:
+        kw["decoder_layers"] = n_units
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, attn: str | None,
+             remat: str, out_path: Path | None, pad_heads: int = 0,
+             flash_chunk: int = 0, ssa_linear: bool = False,
+             pipeline: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ParallelConfig, get_config, get_shape
+    from repro.configs.applicability import cell_status
+    from repro.distributed.sharding import ShardingRules
+
+    status, why = cell_status(arch, shape_name)
+    if ssa_linear:
+        # beyond-paper: expectation-mode SSA is associative => O(1)-state
+        # decode, which un-skips the long_500k cells of dense archs
+        status = "run"
+    if status == "skip":
+        rec = {"arch": arch, "shape": shape_name, "status": "skip", "why": why}
+        if out_path:
+            out_path.parent.mkdir(parents=True, exist_ok=True)
+            out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    cfg = get_config(arch)
+    attn_over = {}
+    if attn:
+        attn_over["impl"] = attn
+    if pad_heads:
+        attn_over["pad_heads_to"] = pad_heads
+    if flash_chunk:
+        attn_over["flash_chunk"] = flash_chunk
+    if attn_over:
+        cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention, **attn_over)
+        )
+    shape = get_shape(shape_name)
+    parallel = ParallelConfig(
+        multi_pod=multi_pod, remat=remat,
+        pipeline_stages=2 if pipeline else 1,
+    )
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rules = ShardingRules(
+        mesh,
+        batch_shardable=shape.global_batch > 1,
+        seq_parallel=shape.kind in ("train", "prefill"),
+        pod_in_data=not pipeline,
+        pipeline=pipeline,
+    )
+    if ssa_linear:
+        compiled, t_lower, t_compile = _compile_linear_decode(
+            cfg, shape, mesh=mesh, rules=rules
+        )
+    else:
+        compiled, t_lower, t_compile = _compile_cell(
+            cfg, shape, mesh=mesh, rules=rules, parallel=parallel
+        )
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_rec[f] = getattr(mem, f, None)
+    raw = _cost_record(compiled)
+    coll = raw["coll"]
+    flops = raw["flops"]
+    bytes_acc = raw["bytes"]
+    calibration = None
+
+    if cfg.family in _SCANNED_FAMILIES:
+        # depth calibration: two reduced-depth compiles, linear extrapolation
+        pat = len(cfg.attention.layer_pattern)
+        units_full = cfg.num_layers // pat
+        # pipeline cells need stage-divisible reduced stacks
+        u1, u2 = (2, 4) if pipeline else (1, 2)
+        if ssa_linear:
+            compile_fn = lambda c: _compile_linear_decode(c, shape, mesh=mesh, rules=rules)
+        else:
+            compile_fn = lambda c: _compile_cell(c, shape, mesh=mesh, rules=rules, parallel=parallel)
+        c1, *_ = compile_fn(_reduced_cfg(cfg, u1))
+        c2, *_ = compile_fn(_reduced_cfg(cfg, u2))
+        r1, r2 = _cost_record(c1), _cost_record(c2)
+
+        def extrap(a, b):
+            return a + (b - a) * (units_full - u1) / (u2 - u1)
+
+        flops = extrap(r1["flops"], r2["flops"])
+        bytes_acc = extrap(r1["bytes"], r2["bytes"])
+        coll_total = extrap(r1["coll_total"], r2["coll_total"])
+        kinds = set(r1["coll"]["bytes_by_kind"]) | set(r2["coll"]["bytes_by_kind"])
+        coll = {
+            "bytes_by_kind": {
+                k: extrap(r1["coll"]["bytes_by_kind"].get(k, 0.0),
+                          r2["coll"]["bytes_by_kind"].get(k, 0.0))
+                for k in kinds
+            },
+            "count_by_kind": raw["coll"]["count_by_kind"],
+            "total_bytes": coll_total,
+        }
+        calibration = {
+            "method": "two-point depth extrapolation (scan bodies count once)",
+            "units": [u1, u2, units_full],
+            "raw_full_depth": {k: raw[k] for k in ("flops", "bytes", "coll_total")},
+            "points": [
+                {k: r[k] for k in ("flops", "bytes", "coll_total")} for r in (r1, r2)
+            ],
+        }
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * n_active * tokens
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "attn": cfg.attention.impl,
+        "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "chips": int(n_chips),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collectives": coll,
+        "memory_analysis": mem_rec,
+        "params": n_params,
+        "active_params": n_active,
+        "tokens_per_step": tokens,
+        "model_flops_global": model_flops,
+        "remat": remat,
+        "calibration": calibration,
+    }
+    # roofline terms (per instructions; HLO numbers are per-device)
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS if flops > 0 else None,
+        "memory_s": bytes_acc / HBM_BW if bytes_acc > 0 else None,
+        "collective_s": coll["total_bytes"] / LINK_BW,
+    }
+    if out_path:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn", choices=["ann", "ssa", "spikformer"], default=None)
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad q heads to this count (perf lever)")
+    ap.add_argument("--flash-chunk", type=int, default=0,
+                    help="blockwise attention kv-chunk (perf lever)")
+    ap.add_argument("--ssa-linear", action="store_true",
+                    help="expectation-mode SSA O(1)-state decode (beyond-paper)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="multi-pod: pod axis = 2 GPipe stages instead of DP")
+    ap.add_argument("--remat", default="dots", choices=["none", "dots", "full"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import cells
+
+        failures = []
+        for arch, shape, status, why in cells(include_skipped=True):
+            suffix = ("_pod2" if args.multi_pod else "") + (
+                f"_{args.tag}" if args.tag else ""
+            )
+            out = RESULTS_DIR / f"{arch}__{shape}{suffix}.json"
+            if status == "skip":
+                out.parent.mkdir(parents=True, exist_ok=True)
+                out.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "status": "skip", "why": why},
+                    indent=2))
+                print(f"[skip] {arch} x {shape}: {why}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", str(out),
+                   "--remat", args.remat]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            if args.attn:
+                cmd += ["--attn", args.attn]
+            print(f"[run ] {arch} x {shape} ...", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures.append((arch, shape, r.stderr[-2000:]))
+                print(f"[FAIL] {arch} x {shape}\n{r.stderr[-2000:]}")
+            else:
+                print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "ok")
+        if failures:
+            sys.exit(f"{len(failures)} cells failed")
+        print("all cells passed")
+        return
+
+    out = Path(args.out) if args.out else None
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   attn=args.attn, remat=args.remat, out_path=out,
+                   pad_heads=args.pad_heads, flash_chunk=args.flash_chunk,
+                   ssa_linear=args.ssa_linear, pipeline=args.pipeline)
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

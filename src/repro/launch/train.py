@@ -1,0 +1,122 @@
+"""Training launcher: config -> mesh -> sharded step -> elastic loop.
+
+CPU-scale entry point (same code path the pod launcher uses — the mesh is
+the only difference):
+
+  PYTHONPATH=src python -m repro.launch.train --arch codeqwen15_7b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_sharded_train(cfg, train_cfg, parallel, mesh):
+    """(step_fn_jitted, state_template_shapes, state_shardings, model)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import ShardingRules
+    from repro.distributed.steps import (
+        batch_pspecs,
+        build_train_step,
+        init_train_state,
+        train_state_pspecs,
+    )
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    rules = ShardingRules(mesh, batch_shardable=True, seq_parallel=True)
+    step_fn, opt = build_train_step(model, train_cfg, parallel, rules)
+    with mesh:
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(model, k, opt, parallel), jax.random.PRNGKey(0)
+        )
+        state_specs = train_state_pspecs(state_shapes, rules, parallel)
+        ns = lambda tree: jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        shardings = ns(state_specs)
+        jitted = jax.jit(step_fn, in_shardings=(shardings, None),
+                         out_shardings=(shardings, None), donate_argnums=(0,))
+    return jitted, state_shapes, shardings, model, opt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen15_7b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--attn", choices=["ann", "ssa", "spikformer"], default=None)
+    ap.add_argument("--grad-compression", choices=["none", "int8_ef"], default="none")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.checkpoint import CheckpointStore
+    from repro.configs import ParallelConfig, TrainConfig, get_config, get_smoke_config
+    from repro.data import MarkovTextDataset
+    from repro.distributed.steps import init_train_state
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.attn:
+        cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention, impl=args.attn)
+        )
+    train_cfg = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1), checkpoint_every=args.ckpt_every,
+    )
+    parallel = ParallelConfig(remat="none", grad_compression=args.grad_compression)
+    mesh = make_local_mesh()
+    jitted, state_shapes, shardings, model, opt = build_sharded_train(
+        cfg, train_cfg, parallel, mesh
+    )
+    store = CheckpointStore(args.ckpt_dir, keep=train_cfg.keep_checkpoints)
+
+    start = 0
+    if args.resume and store.latest_step() is not None:
+        state = store.restore(store.latest_step(), state_shapes, shardings)
+        start = store.latest_step() + 1
+        print(f"resumed from step {start - 1}")
+    else:
+        with mesh:
+            state = init_train_state(model, jax.random.PRNGKey(train_cfg.seed), opt, parallel)
+
+    data = MarkovTextDataset(cfg.vocab_size, args.seq, seed=1)
+    print(f"entropy floor ~{data.unigram_entropy_bound():.3f} nats")
+
+    t_last = time.time()
+    for step in range(start, args.steps):
+        batch_np = data.batch(step, args.batch)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        state, metrics = jitted(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t_last
+            t_last = time.time()
+            print(
+                f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr {float(metrics['lr']):.2e} ({dt:.2f}s)"
+            )
+        if step and step % train_cfg.checkpoint_every == 0:
+            store.save(step, state, blocking=False)
+    store.wait()
+    store.save(args.steps - 1, state, blocking=True)
+    print(f"final checkpoint at step {args.steps - 1} in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: composable blocks + the 10 assigned architectures + paper ViT."""
+from .api import build_model
+
+__all__ = ["build_model"]

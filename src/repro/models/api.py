@@ -1,0 +1,32 @@
+"""Model factory: ModelConfig -> model object (unified protocol).
+
+Every model exposes: init, loss, prefill, decode_step, input_specs,
+cache_specs (decode archs), init_cache.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from .transformer import DecoderLM
+
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        from .xlstm_model import XLSTMModel
+
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        from .zamba2 import ZambaModel
+
+        return ZambaModel(cfg)
+    if cfg.family == "audio":
+        from .whisper import WhisperModel
+
+        return WhisperModel(cfg)
+    if cfg.family == "spiking_vit":
+        from .spiking_vit import SpikingViT
+
+        return SpikingViT(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,577 @@
+"""Composable model building blocks (pure-functional, pytree params).
+
+Everything the 10 assigned architectures need: RMS/LayerNorm, RoPE / M-RoPE,
+GQA attention with three interchangeable implementations (`ann` softmax /
+`ssa` the paper's stochastic spiking attention / `spikformer` baseline),
+SwiGLU/GeGLU/GELU MLPs, and MoE (shared + routed experts, top-k).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks add a leading L axis
+    and are consumed by `jax.lax.scan`;
+  * activations are (B, S, D); attention heads are folded as (B, S, H, hd);
+  * every apply function is pure; RNG (for SSA sampling) comes in as a key.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
+from repro.core.lif import LIFParams, lif_layer
+from repro.core.spikformer import spikformer_attention
+from repro.core.ssa import ssa_attention
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_params(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_apply(p: dict, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+MROPE_SECTIONS = (16, 24, 24)  # qwen2-vl (t, h, w) frequency-pair split
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    freqs = _rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
+    """qwen2-vl M-RoPE.  positions3: (3, B, S) (temporal, height, width ids).
+
+    Frequency pairs are split into MROPE_SECTIONS; each section rotates with
+    its own position stream.  hd must be 2*sum(sections) (=128 for qwen2-vl).
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)  # (hd/2,)
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.array(MROPE_SECTIONS), total_repeat_length=hd // 2
+    )  # (hd/2,) in {0,1,2}
+    # pick the position stream per frequency pair
+    pos = positions3.astype(jnp.float32)  # (3, B, S)
+    pos_per_freq = pos[sec_ids]  # (hd/2, B, S)
+    angles = jnp.moveaxis(pos_per_freq, 0, -1) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (ann | ssa | spikformer), GQA, optional sliding window / softcap
+# ---------------------------------------------------------------------------
+
+
+def padded_heads(a: AttentionConfig) -> int:
+    return max(a.num_heads, a.pad_heads_to) if a.pad_heads_to else a.num_heads
+
+
+def pad_q_weights(wq: jax.Array, wo: jax.Array, *, num_heads: int, kv: int,
+                  hd: int, h_pad: int) -> tuple[jax.Array, jax.Array]:
+    """Insert zero-weight query heads *per KV group* so GQA grouping (head i
+    -> kv[i // groups]) is preserved exactly under padding."""
+    g_old = num_heads // kv
+    g_new = h_pad // kv
+    d = wq.shape[0]
+    wq4 = wq.reshape(d, kv, g_old, hd)
+    wq4 = jnp.pad(wq4, ((0, 0), (0, 0), (0, g_new - g_old), (0, 0)))
+    wo4 = wo.reshape(kv, g_old, hd, wo.shape[1])
+    wo4 = jnp.pad(wo4, ((0, 0), (0, g_new - g_old), (0, 0), (0, 0)))
+    return wq4.reshape(d, h_pad * hd), wo4.reshape(h_pad * hd, wo.shape[1])
+
+
+def attention_params(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    a = cfg.attention
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    h_pad = padded_heads(a)
+    wq = dense_init(ks[0], d, a.num_heads * a.head_dim, dtype)
+    wo = dense_init(ks[3], a.num_heads * a.head_dim, d, dtype)
+    if h_pad != a.num_heads:
+        # zero-weight padding heads: exact same function (their wo rows are
+        # zero so they contribute nothing), TP-divisible head axis
+        wq, wo = pad_q_weights(
+            wq, wo, num_heads=a.num_heads, kv=a.num_kv_heads,
+            hd=a.head_dim, h_pad=h_pad,
+        )
+    p = {
+        "wq": wq,
+        "wk": dense_init(ks[1], d, a.num_kv_heads * a.head_dim, dtype),
+        "wv": dense_init(ks[2], d, a.num_kv_heads * a.head_dim, dtype),
+        "wo": wo,
+    }
+    if a.impl in ("ssa", "spikformer"):
+        # post-attention rescale (spike rates live in [0,1])
+        p["out_norm"] = norm_params(h_pad * a.head_dim, "rmsnorm")
+    return p
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _sdpa(q, k, v, *, causal, window, softcap, kv_positions=None, q_positions=None):
+    """Batched softmax attention on (B, S, H, hd) with f32 logits."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    n_q, n_kv = q.shape[1], k.shape[1]
+    if q_positions is None:
+        q_pos = jnp.arange(n_q) + (n_kv - n_q)
+    else:
+        q_pos = q_positions
+    if kv_positions is None:
+        kv_pos = jnp.arange(n_kv)
+    else:
+        kv_pos = kv_positions
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    # kv validity (rolling buffers mark empty slots with negative positions)
+    m &= kp >= 0
+    while m.ndim < logits.ndim:
+        m = m[:, None] if m.ndim > 2 else m[None]
+    logits = jnp.where(m, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, *, causal, window, softcap, kv_positions=None,
+                  q_positions=None, chunk=1024):
+    """Blockwise online-softmax attention — the S x S score matrix is never
+    materialised (flash-attention recurrence; the TPU transplant of the
+    paper's 'scores stay in the SAU array' dataflow).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, H, hd); scans over Skv in ``chunk``
+    tiles carrying (running max, running sum, weighted accumulator).
+    """
+    b, n_q, h, hd = q.shape
+    n_kv = k.shape[1]
+    nk = n_kv // chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    q32 = q.astype(jnp.float32)
+
+    if q_positions is None:
+        q_pos = jnp.broadcast_to(jnp.arange(n_q) + (n_kv - n_q), (b, n_q))
+    else:
+        q_pos = jnp.broadcast_to(q_positions, (b, n_q))
+    if kv_positions is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(n_kv), (b, n_kv))
+    else:
+        kv_pos = jnp.broadcast_to(kv_positions, (b, n_kv))
+
+    # (nk, B, chunk, ...) scan layout
+    kc = k.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, nk, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_t, v_t, kp_t = inp
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q32, k_t.astype(jnp.float32)
+        ) * scale
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        mask = jnp.ones((b, n_q, chunk), bool)
+        qp = q_pos[:, :, None]
+        kp = kp_t[:, None, :]
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        mask &= kp >= 0
+        logits = jnp.where(mask[:, None], logits, jnp.float32(-1e30))
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_t.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, n_q), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, n_q), jnp.float32)
+    acc0 = jnp.zeros((b, h, n_q, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(v.dtype)  # (B, Sq, H, hd)
+
+
+def _spiking_qkv(q, k, v, t_steps: int):
+    """Rate-code real-valued q/k/v into T-step spike trains via LIF.
+
+    Paper structure (eq. 4): LIF neurons convert the linear projections into
+    binary streams; constant-current integration over T steps yields rate
+    coding of the (normalised) activations.
+    """
+    lif = LIFParams(beta=0.9, threshold=1.0)
+
+    def enc(x):
+        # normalise to O(1) currents so LIF rates stay informative
+        x32 = x.astype(jnp.float32)
+        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + 1e-6)
+        drive = jnp.broadcast_to(jax.nn.softplus(x32), (t_steps,) + x.shape)
+        return lif_layer(drive, lif)
+
+    return enc(q), enc(k), enc(v)
+
+
+def attention_apply(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    layer_window: Optional[int],
+    positions: jax.Array,
+    rng: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    kv_source: Optional[jax.Array] = None,
+    causal: Optional[bool] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full attention block: proj -> rope -> (ann|ssa|spikformer) -> out proj.
+
+    cache: {"k","v": (B, S_cache, Hkv, hd), "pos": (B, S_cache)} for decode;
+    cache_index: scalar write offset (decode step).  kv_source: cross-attn
+    memory (whisper decoder).  Returns (out, updated_cache).
+    """
+    a = cfg.attention
+    b, s, _ = x.shape
+    h_pad = padded_heads(a)
+    causal = a.causal if causal is None else causal
+    q = (x @ p["wq"]).reshape(b, s, h_pad, a.head_dim)
+    kv_in = x if kv_source is None else kv_source
+    s_kv = kv_in.shape[1]
+    k = (kv_in @ p["wk"]).reshape(b, s_kv, a.num_kv_heads, a.head_dim)
+    v = (kv_in @ p["wv"]).reshape(b, s_kv, a.num_kv_heads, a.head_dim)
+
+    if a.rope_type == "rope":
+        q = apply_rope(q, positions, a.rope_theta)
+        if kv_source is None:
+            k = apply_rope(k, positions, a.rope_theta)
+    elif a.rope_type == "mrope":
+        q = apply_mrope(q, positions, a.rope_theta)
+        if kv_source is None:
+            k = apply_mrope(k, positions, a.rope_theta)
+
+    new_cache = None
+    kv_positions = None
+    q_positions = None
+    # M-RoPE carries (3, B, S) position ids; masking/caching uses the
+    # temporal stream (index 0)
+    pos_1d = positions[0] if positions.ndim == 3 else positions
+    if cache is not None:
+        s_cache = cache["k"].shape[1]
+        if cache_index is not None:
+            # decode: append the new k/v at the rolling/linear write offset.
+            # scalar cache_index = one shared offset (lock-step decode);
+            # (B,)-shaped = per-slot offsets (continuous-batching engine).
+            write = cache_index % s_cache if layer_window is not None else cache_index
+            if jnp.ndim(write) == 1:  # per-row scatter
+                rows = jnp.arange(b)
+                ck = cache["k"].at[rows, write].set(k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, write].set(v[:, 0].astype(cache["v"].dtype))
+                cpos = cache["pos"].at[rows, write].set(
+                    pos_1d[:, 0].astype(jnp.int32)
+                )
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0)
+                )
+                cpos = jax.lax.dynamic_update_slice(
+                    cache["pos"],
+                    jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s)),
+                    (0, write),
+                )
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+            k, v = ck, cv
+            kv_positions = cpos
+            q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
+        else:
+            # prefill: fill cache[0:s]; rolling-window caches keep the tail
+            if s >= s_cache:
+                k_st, v_st = k[:, -s_cache:], v[:, -s_cache:]
+                p_st = pos_1d[:, -s_cache:]
+            else:
+                k_st, v_st, p_st = k, v, pos_1d
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k_st.astype(cache["k"].dtype), (0, 0, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v_st.astype(cache["v"].dtype), (0, 0, 0, 0)
+            )
+            cpos = jax.lax.dynamic_update_slice(
+                cache["pos"], p_st.astype(jnp.int32), (0, 0)
+            )
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    groups = h_pad // a.num_kv_heads
+    k_full = _repeat_kv(k, groups)
+    v_full = _repeat_kv(v, groups)
+
+    if a.impl == "ann":
+        n_kv_now = k_full.shape[1]
+        use_flash = (
+            a.flash_chunk is not None
+            and n_kv_now > a.flash_chunk
+            and n_kv_now % a.flash_chunk == 0
+        )
+        sdpa = _sdpa_chunked if use_flash else _sdpa
+        kwargs = {"chunk": a.flash_chunk} if use_flash else {}
+        out = sdpa(
+            q,
+            k_full,
+            v_full,
+            causal=causal,
+            window=layer_window,
+            softcap=a.softcap,
+            kv_positions=kv_positions,
+            q_positions=q_positions,
+            **kwargs,
+        )
+    else:
+        # spiking path: (B,S,H,hd) -> heads folded into batch -> (T,BH,S,hd)
+        t_steps = a.ssa_time_steps
+        qs, ks, vs = _spiking_qkv(q, k_full, v_full, t_steps)
+
+        def fold(z):  # (T,B,S,H,hd) -> (T, B*H, S, hd)
+            tt, bb, ss, hh, dd = z.shape
+            return z.transpose(0, 1, 3, 2, 4).reshape(tt, bb * hh, ss, dd)
+
+        qs, ks, vs = fold(qs), fold(ks), fold(vs)
+        if a.impl == "ssa":
+            rng = rng if rng is not None else jax.random.PRNGKey(0)
+            spikes = ssa_attention(
+                rng, qs, ks, vs, causal=causal, window=layer_window
+            )
+        else:  # spikformer
+            spikes = spikformer_attention(
+                qs, ks, vs, causal=causal, window=layer_window
+            )
+        rate = spikes.mean(axis=0)  # rate decoding over T
+        out = rate.reshape(b, h_pad, s, a.head_dim).transpose(0, 2, 1, 3)
+        out = out.astype(x.dtype)
+
+    out = out.reshape(b, s, h_pad * a.head_dim)
+    if a.impl in ("ssa", "spikformer"):
+        out = norm_apply(p["out_norm"], out, "rmsnorm", 1e-6)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wg": dense_init(ks[1], d_model, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    if act == "geglu":
+        return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MoE: shared + routed experts, top-k, dense one-hot dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_params(key, d_model: int, moe: MoEConfig, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = moe.num_experts, moe.expert_ffn_dim
+    scale = 1.0 / jnp.sqrt(d_model)
+
+    def ew(k, shape):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d_model, e, jnp.float32),
+        "wi": ew(ks[1], (e, d_model, f)),
+        "wg": ew(ks[2], (e, d_model, f)),
+        "wo": (jax.random.normal(ks[3], (e, f, d_model)) / jnp.sqrt(f)).astype(dtype),
+    }
+    if moe.num_shared_experts:
+        p["shared"] = mlp_params(ks[4], d_model, moe.shared_ffn_dim, act, dtype)
+    return p
+
+
+def moe_apply(p: dict, x: jax.Array, moe: MoEConfig, act: str, capacity_factor: float = 1.25):
+    """Top-k routed experts, *per-sequence-row* sort-based dispatch.
+
+    Routing, capacity ranking and the scatter/gather all happen within each
+    batch row (vmapped over B): under GSPMD the B axis is data-sharded, so
+    the sort and scatters stay shard-local -- a global flat dispatch forces
+    a replicated (N_tokens x d) buffer + collective sort (measured on the
+    256-chip mesh: ~69 GB of all-reduce per layer).  Expert FFN weights
+    shard over `model` on the ffn dim (Megatron col/row style), so the only
+    per-layer collective is the psum of the (B, S, D) combine.  Capacity
+    C = ceil(S*K*cf/E) per row; overflow drops (Switch-style).  Returns
+    (out, aux_loss).
+    """
+    from repro.distributed.sharding import constrain as _constrain
+
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    cap = max(1, int(-(-s * k * capacity_factor // e)))  # per-row capacity
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (B, S, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(x_row, top_i_row):
+        """x_row: (S, d); top_i_row: (S, K) -> (E*cap, d) buffer + indices."""
+        flat_e = top_i_row.reshape(-1)                       # (S*K,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        sorted_tok = order // k
+        rank = jnp.arange(s * k) - jnp.searchsorted(sorted_e, jnp.arange(e))[sorted_e]
+        slot = jnp.where(rank < cap, sorted_e * cap + rank, e * cap)
+        buf = jnp.zeros((e * cap, d), x_row.dtype).at[slot].set(
+            x_row[sorted_tok], mode="drop"
+        )
+        return buf, (order, sorted_tok, rank, slot)
+
+    def expert_ffn_and_combine(x_blk, top_i_blk, top_p_blk, wg_blk, wi_blk, wo_blk):
+        """dispatch -> expert FFN -> combine.  Runs either globally (GSPMD)
+        or as the per-shard body of a shard_map island (explicit psum)."""
+        bufs, (order, sorted_tok, rank, slot) = jax.vmap(dispatch_row)(
+            x_blk, top_i_blk
+        )
+        bb = x_blk.shape[0]
+        he = bufs.reshape(bb, e, cap, d)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", he, wg_blk))
+        h = h * jnp.einsum("becd,edf->becf", he, wi_blk)
+        ye = jnp.einsum("becf,efd->becd", h, wo_blk).reshape(bb, e * cap, d)
+
+        def combine_row(ye_row, order_row, tok_row, rank_row, slot_row, gates_row):
+            gathered = ye_row.at[slot_row].get(mode="fill", fill_value=0)
+            gates_sorted = gates_row.reshape(-1)[order_row].astype(ye_row.dtype)
+            contrib = jnp.where(
+                (rank_row < cap)[:, None], gathered * gates_sorted[:, None], 0.0
+            )
+            return jnp.zeros((s, d), ye_row.dtype).at[tok_row].add(contrib)
+
+        return jax.vmap(combine_row)(ye, order, sorted_tok, rank, slot, top_p_blk)
+
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+    f_dim = p["wg"].shape[-1]
+    if (
+        rules is not None
+        and rules.model > 1
+        and f_dim % rules.model == 0
+        and rules.batch_shardable
+        and b % rules.data_size == 0
+    ):
+        # shard_map island: the combine is LINEAR in the expert output, so it
+        # commutes with the f-contraction psum — doing combine BEFORE psum
+        # reduces the per-layer collective from (B, E*C, d) slot-level f32
+        # all-reduces to one (B, S, d) psum (measured ~6x fewer bytes).
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        dspec = rules.data
+
+        def island(x_l, ti_l, tp_l, wg_l, wi_l, wo_l):
+            out_partial = expert_ffn_and_combine(x_l, ti_l, tp_l, wg_l, wi_l, wo_l)
+            return jax.lax.psum(out_partial, "model")
+
+        out = shard_map(
+            island,
+            mesh=rules.mesh,
+            in_specs=(
+                P(dspec, None, None),       # x
+                P(dspec, None, None),       # top_i
+                P(dspec, None, None),       # top_p
+                P(None, None, "model"),     # wg (E, d, f)
+                P(None, None, "model"),     # wi
+                P(None, "model", None),     # wo (E, f, d)
+            ),
+            out_specs=P(dspec, None, None),
+        )(x, top_i, top_p.astype(x.dtype), p["wg"], p["wi"], p["wo"])
+    else:
+        out = expert_ffn_and_combine(x, top_i, top_p, p["wg"], p["wi"], p["wo"])
+    out = _constrain(out, "btd")
+
+    if moe.num_shared_experts:
+        out = out + mlp_apply(p["shared"], x, act)
+    # load-balancing aux loss (Switch-style)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) * moe.router_aux_coef
+    return out, aux

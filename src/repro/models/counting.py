@@ -1,0 +1,58 @@
+"""Analytic parameter counts (total and active) for the roofline's 6·N·D."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    a = cfg.attention
+    total = cfg.vocab_size * d  # embeddings
+    if not cfg.tie_embeddings and cfg.family not in ("ssm", "hybrid", "audio"):
+        total += d * cfg.vocab_size
+
+    def attn_params() -> int:
+        return d * a.num_heads * a.head_dim + 2 * d * a.num_kv_heads * a.head_dim \
+            + a.num_heads * a.head_dim * d
+
+    def mlp_params(ff: int) -> int:
+        mult = 3 if cfg.act in ("swiglu", "geglu") else 2
+        return mult * d * ff
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        per_layer = attn_params()
+        if cfg.moe:
+            routed = cfg.moe.num_experts * 3 * d * cfg.moe.expert_ffn_dim
+            shared = mlp_params(cfg.moe.shared_ffn_dim) if cfg.moe.num_shared_experts else 0
+            router = d * cfg.moe.num_experts
+            if active_only:
+                routed = cfg.moe.top_k * 3 * d * cfg.moe.expert_ffn_dim
+            per_layer += routed + shared + router
+        else:
+            per_layer += mlp_params(cfg.d_ff)
+        total += cfg.num_layers * per_layer
+    elif cfg.family == "audio":
+        enc_layer = attn_params() + mlp_params(cfg.d_ff)
+        dec_layer = 2 * attn_params() + mlp_params(cfg.d_ff)
+        total += cfg.num_layers * enc_layer + cfg.decoder_layers * dec_layer
+    elif cfg.family == "ssm":
+        x = cfg.xlstm
+        d_inner = int(x.proj_factor * d)
+        n_heads_m = d_inner // x.mlstm_head_dim
+        mlstm = d * 2 * d_inner + 3 * d_inner * d_inner + 2 * d_inner * n_heads_m + d_inner * d
+        hd = d // a.num_heads
+        slstm = d * 4 * d + 4 * a.num_heads * hd * hd + int(4 * d / 3) * 2 * d + int(4 * d / 3) * d
+        n_s = len(x.slstm_layers)
+        total += n_s * slstm + (cfg.num_layers - n_s) * mlstm
+    elif cfg.family == "hybrid":
+        m = cfg.mamba
+        d_inner = m.expand * d
+        n_heads = d_inner // m.head_dim
+        conv_ch = d_inner + 2 * m.state_dim
+        per_mamba = d * (d_inner + conv_ch + n_heads) + m.conv_width * conv_ch + d_inner * d
+        total += cfg.num_layers * per_mamba
+        total += attn_params() + mlp_params(cfg.d_ff)  # one shared block
+    elif cfg.family == "spiking_vit":
+        per_layer = attn_params() + mlp_params(cfg.d_ff)
+        total += cfg.num_layers * per_layer
+    return int(total)

@@ -1,0 +1,182 @@
+"""Mamba2 (SSD) block — chunked-parallel training scan + O(1) decode step.
+
+State-space duality formulation (Dao & Gu, 2024): per head h with scalar
+decay ``a_t = exp(A_h * dt_t)`` the recurrence
+
+    S_t = a_t S_{t-1} + dt_t * B_t x_t^T        (S: (n_state, head_dim))
+    y_t = C_t^T S_t
+
+is evaluated chunk-parallel: intra-chunk via a masked decay matmul, chunk
+boundary states via an associative carry.  One group (B/C shared across
+heads), as in the zamba2 backbone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from .blocks import dense_init, norm_apply, norm_params
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array   # (B, H, n_state, head_dim)
+    conv: jax.Array  # (B, conv_width-1, conv_channels)
+
+
+def mamba_params(key, cfg: ModelConfig) -> dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_inner = m.expand * d
+    n_heads = d_inner // m.head_dim
+    conv_ch = d_inner + 2 * m.state_dim  # x, B, C go through the conv
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z, xBC, dt]
+        "in_proj": dense_init(ks[0], d, d_inner + conv_ch + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.conv_width, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": norm_params(d_inner, "rmsnorm"),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, n_state, n_heads):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner * 2 + 2 * n_state]
+    dt = zxbcdt[..., d_inner * 2 + 2 * n_state :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv1d along seq.  xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i] for i in range(width)
+    ) + b
+    new_state = xp[:, -(width - 1) :, :]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk: int):
+    """Chunk-parallel SSD.  x: (B,L,H,P); dt: (B,L,H); b,c: (B,L,N).
+
+    Returns (y: (B,L,H,P), final_state: (B,H,N,P)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = l // chunk
+    assert nc * chunk == l, "seq must be divisible by chunk"
+    a = -jnp.exp(a_log)[None, None, :] * dt            # (B,L,H) log-decay (<=0)
+    xw = x * dt[..., None]                             # dt-weighted input
+
+    # chunked views
+    ac = a.reshape(bsz, nc, chunk, h)
+    xc = xw.reshape(bsz, nc, chunk, h, p)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+    acum = jnp.cumsum(ac, axis=2)                      # (B,NC,C,H)
+
+    # ---- intra-chunk (masked decay attention) -----------------------------
+    # decay[i,j] = exp(acum_i - acum_j) for i >= j
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,NC,C,C,H)
+    ii = jnp.arange(chunk)
+    tri = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: the upper triangle holds large positive diffs whose
+    # exp would be inf and poison gradients through the where
+    decay = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bzin,bzjn->bzij", cc, bc)           # (B,NC,C,C)
+    y_diag = jnp.einsum("bzij,bzijh,bzjhp->bzihp", scores, decay, xc)
+
+    # ---- chunk states + inter-chunk carry ---------------------------------
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)        # (B,NC,C,H)
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhnp", bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])                 # (B,NC,H)
+
+    def carry(s_prev, inp):
+        s_local, dec = inp                                   # (B,H,N,P), (B,H)
+        s_new = s_prev * dec[..., None, None] + s_local
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p), x.dtype)
+    s_final, s_prevs = jax.lax.scan(
+        carry,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)               # (B,NC,H,N,P)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    decay_from_start = jnp.exp(acum)                         # (B,NC,C,H)
+    y_off = jnp.einsum("bzin,bzih,bzhnp->bzihp", cc, decay_from_start, s_prevs)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, s_final
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[MambaState] = None,
+    decode: bool = False,
+):
+    """Mamba2 block.  Train/prefill: chunked scan; decode: one-step update."""
+    m = cfg.mamba
+    d = cfg.d_model
+    d_inner = m.expand * d
+    n_heads = d_inner // m.head_dim
+    bsz, s, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, m.state_dim, n_heads)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :d_inner].reshape(bsz, s, n_heads, m.head_dim)
+    b_mat = xbc[..., d_inner : d_inner + m.state_dim].astype(jnp.float32)
+    c_mat = xbc[..., d_inner + m.state_dim :].astype(jnp.float32)
+
+    if decode:
+        assert s == 1
+        ssm = state.ssm  # (B,H,N,P)
+        a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt[:, 0])   # (B,H)
+        upd = jnp.einsum(
+            "bn,bhp,bh->bhnp", b_mat[:, 0], xs[:, 0].astype(jnp.float32), dt[:, 0]
+        )
+        ssm = ssm * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_mat[:, 0], ssm)[:, None]  # (B,1,H,P)
+        new_state = MambaState(ssm=ssm, conv=new_conv)
+    else:
+        xs32 = xs.astype(jnp.float32)
+        y, s_final = ssd_chunked(xs32, dt, p["a_log"], b_mat, c_mat, m.chunk)
+        new_state = MambaState(ssm=s_final, conv=new_conv)
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["out_norm"], y, "rmsnorm", cfg.norm_eps)
+    return y @ p["out_proj"], new_state
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    n_heads = d_inner // m.head_dim
+    conv_ch = d_inner + 2 * m.state_dim
+    return MambaState(
+        ssm=jnp.zeros((batch, n_heads, m.state_dim, m.head_dim), dtype),
+        conv=jnp.zeros((batch, m.conv_width - 1, conv_ch), dtype),
+    )

@@ -1,0 +1,129 @@
+"""The paper's model: spiking ViT-Small with SSA / Spikformer / ANN attention.
+
+Faithful to Sec. III/IV: Bernoulli rate coding of the patch embeddings
+(eq. 2), LIF-generated Q/K/V spike trains (eq. 4), SSA over T time steps
+(eq. 5/6), rate decoding into the classifier head.  Trained end-to-end with
+surrogate gradients.  ``attention.impl`` selects the Table-I column: ANN
+(standard softmax, real-valued), Spikformer (integer spike attention [18]),
+or SSA (the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.coding import bernoulli_encode
+from repro.core.lif import LIFParams, lif_layer
+from repro.core.spikformer import spikformer_attention
+from repro.core.ssa import ssa_attention
+from .blocks import dense_init, mlp_apply, mlp_params, norm_apply, norm_params
+
+
+class SpikingViT:
+    """Classifier over pre-extracted patch embeddings (B, N_patches, D_in).
+
+    The patch frontend is a linear projection (not stubbed — CIFAR-scale);
+    vocab_size doubles as the class count.
+    """
+
+    def __init__(self, cfg: ModelConfig, patch_dim: int = 48, num_patches: int = 64):
+        self.cfg = cfg
+        self.patch_dim = patch_dim
+        self.num_patches = num_patches
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        a = cfg.attention
+        ks = jax.random.split(key, cfg.num_layers + 3)
+        d = cfg.d_model
+
+        def layer(k):
+            kk = jax.random.split(k, 5)
+            return {
+                "ln1": norm_params(d, cfg.norm),
+                "wq": dense_init(kk[0], d, a.num_heads * a.head_dim),
+                "wk": dense_init(kk[1], d, a.num_heads * a.head_dim),
+                "wv": dense_init(kk[2], d, a.num_heads * a.head_dim),
+                "wo": dense_init(kk[3], a.num_heads * a.head_dim, d),
+                "ln2": norm_params(d, cfg.norm),
+                "mlp": mlp_params(kk[4], d, cfg.d_ff, cfg.act),
+            }
+
+        return {
+            "patch_embed": dense_init(ks[-1], self.patch_dim, d),
+            "pos_embed": jax.random.normal(ks[-2], (self.num_patches, d)) * 0.02,
+            "layers": [layer(ks[i]) for i in range(cfg.num_layers)],
+            "head_norm": norm_params(d, cfg.norm),
+            "head": dense_init(ks[-3], d, cfg.vocab_size),
+        }
+
+    # ------------------------------------------------------------------
+    def _attention(self, p, x, rng):
+        """One attention block in the configured mode."""
+        cfg = self.cfg
+        a = cfg.attention
+        b, n, _ = x.shape
+        t = a.ssa_time_steps
+        q = (x @ p["wq"]).reshape(b, n, a.num_heads, a.head_dim)
+        k = (x @ p["wk"]).reshape(b, n, a.num_heads, a.head_dim)
+        v = (x @ p["wv"]).reshape(b, n, a.num_heads, a.head_dim)
+
+        def fold(z):  # (B,N,H,hd) -> (B*H, N, hd)
+            return z.transpose(0, 2, 1, 3).reshape(b * a.num_heads, n, a.head_dim)
+
+        if a.impl == "ann":
+            from repro.core.ann_attention import ann_attention
+
+            out = ann_attention(fold(q), fold(k), fold(v))
+        else:
+            # eq. 4: LIF spike generation from the linear projections
+            lif = LIFParams()
+            rq, rk, rv, rs = jax.random.split(rng, 4)
+
+            def spikes(z, kk):
+                # Bernoulli-coded drive (eq. 2) then LIF layer (eq. 4)
+                drive = bernoulli_encode(kk, z, t, norm="sigmoid")
+                return lif_layer(2.0 * drive, lif)
+
+            qs = spikes(fold(q), rq)
+            ks = spikes(fold(k), rk)
+            vs = spikes(fold(v), rv)
+            if a.impl == "ssa":
+                out_spikes = ssa_attention(rs, qs, ks, vs, causal=False)
+            else:
+                out_spikes = spikformer_attention(qs, ks, vs, causal=False)
+            out = out_spikes.mean(axis=0)  # rate decoding
+
+        out = out.reshape(b, a.num_heads, n, a.head_dim).transpose(0, 2, 1, 3)
+        return out.reshape(b, n, a.num_heads * a.head_dim) @ p["wo"]
+
+    def forward(self, params, patches, rng):
+        cfg = self.cfg
+        x = patches @ params["patch_embed"] + params["pos_embed"][None]
+        for i, p in enumerate(params["layers"]):
+            rng, sub = jax.random.split(rng)
+            h = norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps)
+            x = x + self._attention(p, h, sub)
+            h = norm_apply(p["ln2"], x, cfg.norm, cfg.norm_eps)
+            x = x + mlp_apply(p["mlp"], h, cfg.act)
+        x = norm_apply(params["head_norm"], x, cfg.norm, cfg.norm_eps)
+        return x.mean(axis=1) @ params["head"]  # mean-pool -> class logits
+
+    def loss(self, params, batch, rng):
+        logits = self.forward(params, batch["patches"], rng)
+        labels = jax.nn.one_hot(batch["label"], self.cfg.vocab_size)
+        return -jnp.mean(
+            jnp.sum(labels * jax.nn.log_softmax(logits.astype(jnp.float32)), axis=-1)
+        )
+
+    def accuracy(self, params, batch, rng):
+        logits = self.forward(params, batch["patches"], rng)
+        return jnp.mean(jnp.argmax(logits, -1) == batch["label"])
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        b = shape.global_batch
+        return {
+            "patches": jax.ShapeDtypeStruct((b, self.num_patches, self.patch_dim), jnp.float32),
+            "label": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }

@@ -1,0 +1,378 @@
+"""Unified decoder-only transformer LM (dense / MoE / VLM families).
+
+Layers are grouped into *pattern slots* (gemma2's "LG" local/global
+alternation => 2 slots) and scanned: params carry a leading ``L/num_slots``
+stack axis, so HLO size is O(1) in depth and 512-device dry-run compiles stay
+fast.  KV caches are stacked the same way and threaded through the scan.
+
+The attention implementation (`ann` | `ssa` | `spikformer`) is a config
+switch — the paper's technique is a first-class feature of every arch here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import constrain
+from .blocks import (
+    attention_apply,
+    attention_params,
+    mlp_apply,
+    mlp_params,
+    moe_apply,
+    moe_params,
+    norm_apply,
+    norm_params,
+)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array]):
+    """Vocab-sharding-friendly CE: one-hot contraction (reduces over the
+    sharded vocab axis as a psum) + f32 logsumexp; no full-vocab gather."""
+    logits = constrain(logits, "btv")
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(l32 * onehot.astype(jnp.float32), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+class DecoderLM:
+    """Families: dense, moe, vlm.  VLM/audio frontends are stubbed: the model
+    accepts precomputed embeddings via ``batch["embeds"]``."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = list(cfg.attention.layer_pattern)
+        assert cfg.num_layers % len(self.pattern) == 0
+        self.steps = cfg.num_layers // len(self.pattern)
+        # gemma-style sqrt(d) embedding scale
+        self.embed_scale = (
+            float(jnp.sqrt(jnp.float32(cfg.d_model))) if cfg.post_norms else 1.0
+        )
+
+    # ------------------------------------------------------------------
+    def _slot_window(self, slot: int) -> Optional[int]:
+        return (
+            self.cfg.attention.sliding_window
+            if self.pattern[slot] == "L"
+            else None
+        )
+
+    def _layer_params(self, key) -> dict:
+        cfg = self.cfg
+        ka, kf = jax.random.split(key)
+        p = {"ln_attn": norm_params(cfg.d_model, cfg.norm), "attn": attention_params(ka, cfg)}
+        p["ln_mlp"] = norm_params(cfg.d_model, cfg.norm)
+        if cfg.moe:
+            p["moe"] = moe_params(kf, cfg.d_model, cfg.moe, cfg.act, jnp.dtype(cfg.dtype))
+        else:
+            p["mlp"] = mlp_params(kf, cfg.d_model, cfg.d_ff, cfg.act, jnp.dtype(cfg.dtype))
+        if cfg.post_norms:
+            p["ln_attn_post"] = norm_params(cfg.d_model, cfg.norm)
+            p["ln_mlp_post"] = norm_params(cfg.d_model, cfg.norm)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k_embed, k_layers, k_head = jax.random.split(key, 3)
+        params: dict[str, Any] = {
+            "embed": (
+                jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02
+            ).astype(dtype),
+            "final_norm": norm_params(cfg.d_model, cfg.norm),
+        }
+        # stacked per pattern slot
+        slots = []
+        for s in range(len(self.pattern)):
+            keys = jax.random.split(jax.random.fold_in(k_layers, s), self.steps)
+            stacked = jax.vmap(self._layer_params)(keys)
+            slots.append(stacked)
+        params["slots"] = slots
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size)) * 0.02
+            ).astype(dtype)
+        return params
+
+    # ------------------------------------------------------------------
+    def _block(self, p, x, *, slot, positions, rng, cache, cache_index):
+        cfg = self.cfg
+        h = norm_apply(p["ln_attn"], x, cfg.norm, cfg.norm_eps)
+        attn_out, new_cache = attention_apply(
+            p["attn"],
+            h,
+            cfg=cfg,
+            layer_window=self._slot_window(slot),
+            positions=positions,
+            rng=rng,
+            cache=cache,
+            cache_index=cache_index,
+        )
+        if cfg.post_norms:
+            attn_out = norm_apply(p["ln_attn_post"], attn_out, cfg.norm, cfg.norm_eps)
+        x = x + attn_out
+        x = constrain(x, "btd_sp")
+        h = norm_apply(p["ln_mlp"], x, cfg.norm, cfg.norm_eps)
+        aux = 0.0
+        if cfg.moe:
+            ff, aux = moe_apply(p["moe"], h, cfg.moe, cfg.act)
+        else:
+            ff = mlp_apply(p["mlp"], h, cfg.act)
+        if cfg.post_norms:
+            ff = norm_apply(p["ln_mlp_post"], ff, cfg.norm, cfg.norm_eps)
+        x = x + ff
+        return constrain(x, "btd_sp"), new_cache, aux
+
+    def forward(
+        self,
+        params: dict,
+        batch: dict,
+        *,
+        cache: Optional[list] = None,
+        cache_index: Optional[jax.Array] = None,
+        rng: Optional[jax.Array] = None,
+        remat: str = "none",
+    ):
+        """Returns (hidden (B,S,D), new_cache, aux_loss)."""
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x * jnp.asarray(self.embed_scale, x.dtype)
+        x = constrain(x, "btd_sp")
+        positions = batch["positions"]
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        nslots = len(self.pattern)
+
+        def body(carry, xs):
+            x, key, aux_acc = carry
+            slot_params, slot_caches = xs
+            new_caches = []
+            for s in range(nslots):
+                key, sub = jax.random.split(key)
+                c = slot_caches[s] if slot_caches is not None else None
+                x, nc, aux = self._block(
+                    slot_params[s],
+                    x,
+                    slot=s,
+                    positions=positions,
+                    rng=sub,
+                    cache=c,
+                    cache_index=cache_index,
+                )
+                new_caches.append(nc)
+            if slot_caches is None:
+                new_caches = None
+            return (x, key, aux_acc + aux), new_caches
+
+        if remat != "none":
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if remat == "dots"
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            body = jax.checkpoint(body, policy=policy)
+
+        xs = (params["slots"], cache)
+        if cfg.scan_layers:
+            (x, _, aux_total), new_cache = jax.lax.scan(body, (x, rng, 0.0), xs)
+        else:
+            # unrolled (depth-calibration mode): same body, python loop
+            carry = (x, rng, 0.0)
+            outs = []
+            for i in range(self.steps):
+                xs_i = jax.tree.map(lambda a: a[i], xs)
+                carry, ys = body(carry, xs_i)
+                outs.append(ys)
+            (x, _, aux_total) = carry
+            new_cache = (
+                jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                if cache is not None
+                else None
+            )
+        x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return x, new_cache, aux_total
+
+    def logits(self, params, hidden):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            out = hidden @ params["embed"].T.astype(hidden.dtype)
+        else:
+            out = hidden @ params["lm_head"]
+        if cfg.final_softcap is not None:
+            out = (jnp.tanh(out.astype(jnp.float32) / cfg.final_softcap)
+                   * cfg.final_softcap).astype(out.dtype)
+        return constrain(out, "btv")
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, rng=None, remat: str = "none"):
+        hidden, _, aux = self.forward(params, batch, rng=rng, remat=remat)
+        logits = self.logits(params, hidden)
+        return cross_entropy(logits, batch["labels"], batch.get("mask")) + aux
+
+    def prefill(self, params, batch, cache, rng=None):
+        hidden, new_cache, _ = self.forward(params, batch, cache=cache, rng=rng)
+        return self.logits(params, hidden[:, -1:]), new_cache
+
+    def decode_step(self, params, batch, cache, cache_index, rng=None):
+        hidden, new_cache, _ = self.forward(
+            params, batch, cache=cache, cache_index=cache_index, rng=rng
+        )
+        return self.logits(params, hidden), new_cache
+
+    # ------------------------------------------------------------------
+    # beyond-paper: SSA-linear (expectation-mode) O(1)-state decode.
+    # E[SSA] = Q (K^T V) / (N D_K) is associative, so dense archs can run
+    # long-context decode with a (D_K x D_K) running state per head instead
+    # of a seq-length KV cache (DESIGN.md §5; core/linear_decode.py).
+    # ------------------------------------------------------------------
+    def linear_decode_step(self, params, batch, state, rng=None):
+        """state: list per slot of {"m": (L, B, H, dk, dk), "count": (L, B, H)}."""
+        from repro.core.linear_decode import LinearSSAState
+        from repro.models.blocks import apply_rope, padded_heads
+
+        cfg = self.cfg
+        a = cfg.attention
+        h_pad = padded_heads(a)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x * jnp.asarray(self.embed_scale, x.dtype)
+        positions = batch["positions"]
+        nslots = len(self.pattern)
+
+        def body(carry, xs):
+            x, = carry
+            slot_params, slot_states = xs
+            new_states = []
+            for s_idx in range(nslots):
+                p = slot_params[s_idx]
+                st = slot_states[s_idx]
+                from .blocks import mlp_apply, moe_apply, norm_apply
+
+                h = norm_apply(p["ln_attn"], x, cfg.norm, cfg.norm_eps)
+                b, s, _ = h.shape
+                q = (h @ p["attn"]["wq"]).reshape(b, s, h_pad, a.head_dim)
+                k = (h @ p["attn"]["wk"]).reshape(b, s, a.num_kv_heads, a.head_dim)
+                v = (h @ p["attn"]["wv"]).reshape(b, s, a.num_kv_heads, a.head_dim)
+                if a.rope_type == "rope":
+                    q = apply_rope(q, positions, a.rope_theta)
+                    k = apply_rope(k, positions, a.rope_theta)
+                # rate coding in expectation: sigmoid-normalised projections
+                q_r = jax.nn.sigmoid(q.astype(jnp.float32))[:, 0]  # (B, H, dk)
+                k_r = jax.nn.sigmoid(k.astype(jnp.float32))[:, 0]
+                v_r = jax.nn.sigmoid(v.astype(jnp.float32))[:, 0]
+                groups = h_pad // a.num_kv_heads
+                k_r = jnp.repeat(k_r, groups, axis=1)
+                v_r = jnp.repeat(v_r, groups, axis=1)
+                # state update: m += k v^T ; count += 1   (eq. 5/6 in E[.])
+                m_new = st["m"] + k_r[..., :, None] * v_r[..., None, :]
+                c_new = st["count"] + 1.0
+                num = jnp.einsum("bhd,bhde->bhe", q_r, m_new)
+                rate = num / (jnp.maximum(c_new, 1.0)[..., None] * a.head_dim)
+                out = rate[:, None].transpose(0, 1, 2, 3)  # (B, 1, H, dk)
+                out = out.reshape(b, s, h_pad * a.head_dim).astype(x.dtype)
+                if "out_norm" in p["attn"]:
+                    out = norm_apply(p["attn"]["out_norm"], out, "rmsnorm", 1e-6)
+                x = x + out @ p["attn"]["wo"]
+                h2 = norm_apply(p["ln_mlp"], x, cfg.norm, cfg.norm_eps)
+                if cfg.moe:
+                    ff, _ = moe_apply(p["moe"], h2, cfg.moe, cfg.act)
+                else:
+                    ff = mlp_apply(p["mlp"], h2, cfg.act)
+                x = x + ff
+                new_states.append({"m": m_new, "count": c_new})
+            return (x,), new_states
+
+        (x,), new_state = jax.lax.scan(body, (x,), (params["slots"], state))
+        from .blocks import norm_apply
+
+        x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return self.logits(params, x), new_state
+
+    def linear_state_specs(self, shape: ShapeConfig) -> list:
+        from repro.models.blocks import padded_heads
+
+        a = self.cfg.attention
+        b = shape.global_batch
+        h = padded_heads(a)
+        return [
+            {
+                "m": jax.ShapeDtypeStruct(
+                    (self.steps, b, h, a.head_dim, a.head_dim), jnp.float32
+                ),
+                "count": jax.ShapeDtypeStruct((self.steps, b, h), jnp.float32),
+            }
+            for _ in range(len(self.pattern))
+        ]
+
+    # ------------------------------------------------------------------
+    # dry-run specs
+    # ------------------------------------------------------------------
+    def _positions_spec(self, b, s):
+        if self.cfg.attention.rope_type == "mrope":
+            return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        b = shape.global_batch
+        cfg = self.cfg
+        if shape.kind == "train":
+            s = shape.seq_len
+            base = {
+                "positions": self._positions_spec(b, s),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        elif shape.kind == "prefill":
+            s = shape.seq_len
+            base = {"positions": self._positions_spec(b, s)}
+        else:  # decode: one new token against a seq_len cache
+            s = 1
+            base = {"positions": self._positions_spec(b, 1)}
+        if cfg.frontend == "embeddings":
+            base["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        else:
+            base["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return base
+
+    def cache_specs(self, shape: ShapeConfig) -> list:
+        """Stacked KV-cache ShapeDtypeStructs per pattern slot."""
+        cfg = self.cfg
+        a = cfg.attention
+        b = shape.global_batch
+        dtype = jnp.dtype(cfg.dtype)
+        slots = []
+        for s_idx in range(len(self.pattern)):
+            w = self._slot_window(s_idx)
+            s_cache = min(w, shape.seq_len) if w is not None else shape.seq_len
+            slots.append(
+                {
+                    "k": jax.ShapeDtypeStruct(
+                        (self.steps, b, s_cache, a.num_kv_heads, a.head_dim), dtype
+                    ),
+                    "v": jax.ShapeDtypeStruct(
+                        (self.steps, b, s_cache, a.num_kv_heads, a.head_dim), dtype
+                    ),
+                    "pos": jax.ShapeDtypeStruct((self.steps, b, s_cache), jnp.int32),
+                }
+            )
+        return slots
+
+    def init_cache(self, batch: int, seq: int) -> list:
+        shape = ShapeConfig("tmp", seq, batch, "decode")
+        return jax.tree.map(
+            lambda s: jnp.full(s.shape, -1, s.dtype)
+            if s.dtype == jnp.int32
+            else jnp.zeros(s.shape, s.dtype),
+            self.cache_specs(shape),
+        )

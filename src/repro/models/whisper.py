@@ -1,0 +1,214 @@
+"""whisper-small: encoder-decoder transformer.  Conv frontend STUBBED per
+instructions — `input_specs()` provides precomputed frame embeddings
+(B, S_enc, d).  Learned absolute positions, GELU, LayerNorm, pre-norm."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import constrain
+from .blocks import (
+    attention_apply,
+    attention_params,
+    mlp_apply,
+    mlp_params,
+    norm_apply,
+    norm_params,
+)
+from .transformer import cross_entropy
+
+MAX_POS = 65_536  # learned position table (stress shapes go to 32k)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _enc_layer(self, key):
+        cfg = self.cfg
+        ka, kf = jax.random.split(key)
+        return {
+            "ln_attn": norm_params(cfg.d_model, cfg.norm),
+            "attn": attention_params(ka, cfg),
+            "ln_mlp": norm_params(cfg.d_model, cfg.norm),
+            "mlp": mlp_params(kf, cfg.d_model, cfg.d_ff, cfg.act, jnp.dtype(cfg.dtype)),
+        }
+
+    def _dec_layer(self, key):
+        cfg = self.cfg
+        ka, kx, kf = jax.random.split(key, 3)
+        return {
+            "ln_self": norm_params(cfg.d_model, cfg.norm),
+            "self_attn": attention_params(ka, cfg),
+            "ln_cross": norm_params(cfg.d_model, cfg.norm),
+            "cross_attn": attention_params(kx, cfg),
+            "ln_mlp": norm_params(cfg.d_model, cfg.norm),
+            "mlp": mlp_params(kf, cfg.d_model, cfg.d_ff, cfg.act, jnp.dtype(cfg.dtype)),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 6)
+        enc_keys = jax.random.split(ks[0], cfg.num_layers)
+        dec_keys = jax.random.split(ks[1], cfg.decoder_layers)
+        return {
+            "embed": (jax.random.normal(ks[2], (cfg.vocab_size, cfg.d_model)) * 0.02
+                      ).astype(dtype),
+            "pos_embed": (jax.random.normal(ks[3], (MAX_POS, cfg.d_model)) * 0.01
+                          ).astype(dtype),
+            "enc": jax.vmap(self._enc_layer)(enc_keys),
+            "dec": jax.vmap(self._dec_layer)(dec_keys),
+            "enc_norm": norm_params(cfg.d_model, cfg.norm),
+            "dec_norm": norm_params(cfg.d_model, cfg.norm),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, embeds):
+        cfg = self.cfg
+        b, s, _ = embeds.shape
+        pos = jnp.arange(s)
+        x = embeds.astype(jnp.dtype(cfg.dtype)) + params["pos_embed"][pos][None]
+        x = constrain(x, "btd_sp")
+        positions = jnp.broadcast_to(pos[None], (b, s))
+
+        def body(x, p):
+            h = norm_apply(p["ln_attn"], x, cfg.norm, cfg.norm_eps)
+            out, _ = attention_apply(
+                p["attn"], h, cfg=cfg, layer_window=None,
+                positions=positions, causal=False,
+            )
+            x = constrain(x + out, "btd_sp")
+            h = norm_apply(p["ln_mlp"], x, cfg.norm, cfg.norm_eps)
+            x = constrain(x + mlp_apply(p["mlp"], h, cfg.act), "btd_sp")
+            return x, None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["enc"])
+        else:
+            for i in range(cfg.num_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc"]))
+        return norm_apply(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+    def decode(self, params, tokens, memory, *, cache=None, cache_index=None,
+               positions=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(x.dtype)
+        x = constrain(x, "btd_sp")
+
+        def body(carry, xs):
+            x = carry
+            p, c = xs
+            h = norm_apply(p["ln_self"], x, cfg.norm, cfg.norm_eps)
+            out, nc = attention_apply(
+                p["self_attn"], h, cfg=cfg, layer_window=None,
+                positions=positions, causal=True,
+                cache=c, cache_index=cache_index,
+            )
+            x = constrain(x + out, "btd_sp")
+            h = norm_apply(p["ln_cross"], x, cfg.norm, cfg.norm_eps)
+            out, _ = attention_apply(
+                p["cross_attn"], h, cfg=cfg, layer_window=None,
+                positions=positions, causal=False, kv_source=memory,
+            )
+            x = constrain(x + out, "btd_sp")
+            h = norm_apply(p["ln_mlp"], x, cfg.norm, cfg.norm_eps)
+            x = constrain(x + mlp_apply(p["mlp"], h, cfg.act), "btd_sp")
+            return x, nc
+
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+        else:
+            outs = []
+            for i in range(cfg.decoder_layers):
+                x, ys = body(x, jax.tree.map(lambda a: a[i], (params["dec"], cache)))
+                outs.append(ys)
+            new_cache = (
+                jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                if cache is not None
+                else None
+            )
+        x = norm_apply(params["dec_norm"], x, cfg.norm, cfg.norm_eps)
+        return x, new_cache
+
+    def logits(self, params, hidden):
+        return constrain(hidden @ params["embed"].T.astype(hidden.dtype), "btv")
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, rng=None, remat: str = "none"):
+        memory = self.encode(params, batch["embeds"])
+        hidden, _ = self.decode(params, batch["tokens"], memory)
+        return cross_entropy(self.logits(params, hidden), batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch, cache, rng=None):
+        memory = self.encode(params, batch["embeds"])
+        self_cache = cache["self"] if isinstance(cache, dict) and "self" in cache else cache
+        hidden, new_cache = self.decode(params, batch["tokens"], memory, cache=self_cache)
+        return self.logits(params, hidden[:, -1:]), {"self": new_cache, "memory": memory}
+
+    def decode_step(self, params, batch, cache, cache_index, rng=None):
+        hidden, new_self = self.decode(
+            params,
+            batch["tokens"],
+            cache["memory"],
+            cache=cache["self"],
+            cache_index=cache_index,
+            positions=batch["positions"],
+        )
+        return self.logits(params, hidden), {"self": new_self, "memory": cache["memory"]}
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            # encoder sees seq_len frames; decoder trains on max_target_len
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, shape.seq_len, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((b, cfg.max_target_len), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, cfg.max_target_len), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, shape.seq_len, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            }
+        # decode stress shape: 1 token vs seq_len self-cache + cross memory
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        }
+
+    def cache_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        a = cfg.attention
+        b = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.decoder_layers
+        return {
+            "self": {
+                "k": jax.ShapeDtypeStruct((L, b, shape.seq_len, a.num_kv_heads, a.head_dim), dt),
+                "v": jax.ShapeDtypeStruct((L, b, shape.seq_len, a.num_kv_heads, a.head_dim), dt),
+                "pos": jax.ShapeDtypeStruct((L, b, shape.seq_len), jnp.int32),
+            },
+            "memory": jax.ShapeDtypeStruct((b, shape.seq_len, cfg.d_model), dt),
+        }
+
+    def init_cache(self, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        a = cfg.attention
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.decoder_layers
+        return {
+            "k": jnp.zeros((L, batch, seq, a.num_kv_heads, a.head_dim), dt),
+            "v": jnp.zeros((L, batch, seq, a.num_kv_heads, a.head_dim), dt),
+            "pos": jnp.full((L, batch, seq), -1, jnp.int32),
+        }

@@ -1,0 +1,133 @@
+"""xLSTM-125m model: 12 blocks (mLSTM default, sLSTM at configured indices).
+
+Small model => python-unrolled blocks (no scan needed for HLO size); decode
+carries O(1) recurrent state per block — this is why xlstm runs the
+``long_500k`` cell that quadratic-attention archs skip.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import constrain
+from .blocks import norm_apply, norm_params
+from .transformer import cross_entropy
+from .xlstm import (
+    mlstm_apply,
+    mlstm_params,
+    mlstm_state_specs,
+    slstm_apply,
+    slstm_params,
+    slstm_state_specs,
+)
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.block_kinds = [
+            "slstm" if i in cfg.xlstm.slstm_layers else "mlstm"
+            for i in range(cfg.num_layers)
+        ]
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.num_layers + 2)
+        blocks = []
+        for i, kind in enumerate(self.block_kinds):
+            pf = slstm_params if kind == "slstm" else mlstm_params
+            blocks.append(
+                {"ln": norm_params(cfg.d_model, cfg.norm), "core": pf(keys[i], cfg)}
+            )
+        params = {
+            "embed": (jax.random.normal(keys[-2], (cfg.vocab_size, cfg.d_model)) * 0.02
+                      ).astype(dtype),
+            "blocks": blocks,
+            "final_norm": norm_params(cfg.d_model, cfg.norm),
+        }
+        return params
+
+    def forward(self, params, batch, *, state: Optional[list] = None, decode=False,
+                rng=None, remat: str = "none"):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = constrain(x, "btd")
+        new_states = []
+
+        def block(apply_fn, p, x, st):
+            h = norm_apply(p["ln"], x, cfg.norm, cfg.norm_eps)
+            out, ns = apply_fn(p["core"], h, cfg, state=st, decode=decode)
+            return constrain(x + out, "btd"), ns
+
+        if remat != "none":
+            block = jax.checkpoint(
+                block,
+                policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(0,),
+            )
+        for i, kind in enumerate(self.block_kinds):
+            st = state[i] if state is not None else None
+            apply = slstm_apply if kind == "slstm" else mlstm_apply
+            x, ns = block(apply, params["blocks"][i], x, st)
+            new_states.append(ns)
+        x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return x, new_states, 0.0
+
+    def logits(self, params, hidden):
+        out = hidden @ params["embed"].T.astype(hidden.dtype)
+        return constrain(out, "btv")
+
+    def loss(self, params, batch, rng=None, remat: str = "none"):
+        hidden, _, _ = self.forward(params, batch, rng=rng, remat=remat)
+        logits = self.logits(params, hidden)
+        return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch, cache, rng=None):
+        hidden, states, _ = self.forward(params, batch, state=cache, rng=rng)
+        return self.logits(params, hidden[:, -1:]), states
+
+    def decode_step(self, params, batch, cache, cache_index, rng=None):
+        hidden, states, _ = self.forward(
+            params, batch, state=cache, decode=True, rng=rng
+        )
+        return self.logits(params, hidden), states
+
+    # -- specs ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        base = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            base["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return base
+
+    def cache_specs(self, shape: ShapeConfig) -> list:
+        """Recurrent state specs (shape-independent of seq_len: O(1) decode)."""
+        b = shape.global_batch
+        cfg = self.cfg
+        as_spec = lambda t: jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t
+        )
+        return [
+            as_spec(
+                slstm_state_specs(cfg, b)
+                if kind == "slstm"
+                else mlstm_state_specs(cfg, b)
+            )
+            for kind in self.block_kinds
+        ]
+
+    def init_cache(self, batch: int, seq: int) -> list:
+        return [
+            slstm_state_specs(self.cfg, batch)
+            if kind == "slstm"
+            else mlstm_state_specs(self.cfg, batch)
+            for kind in self.block_kinds
+        ]

@@ -1,0 +1,169 @@
+"""zamba2-1.2b hybrid: 38 Mamba2 blocks + ONE shared attention block
+(weights reused) applied before mamba blocks {0, 6, 12, 18, 24, 30, 36}.
+
+Each shared-attention application keeps its own KV cache (weights shared,
+state not).  Mamba decode state is O(1), the shared-attn cache is the only
+seq-length-dependent state => long_500k runs with the cache seq-sharded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import constrain
+from .blocks import (
+    attention_apply,
+    attention_params,
+    mlp_apply,
+    mlp_params,
+    norm_apply,
+    norm_params,
+)
+from .mamba2 import mamba_apply, mamba_params, mamba_state_specs
+from .transformer import cross_entropy
+
+
+class ZambaModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        k = cfg.hybrid_attn_every
+        self.attn_sites = tuple(range(0, cfg.num_layers, k))  # before these blocks
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, cfg.num_layers + 3)
+        return {
+            "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model)) * 0.02
+                      ).astype(dtype),
+            "shared_attn": {
+                "ln": norm_params(cfg.d_model, cfg.norm),
+                "attn": attention_params(keys[-2], cfg),
+                "ln_mlp": norm_params(cfg.d_model, cfg.norm),
+                "mlp": mlp_params(keys[-3], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+            },
+            "mamba_blocks": [
+                {"ln": norm_params(cfg.d_model, cfg.norm), "core": mamba_params(keys[i], cfg)}
+                for i in range(cfg.num_layers)
+            ],
+            "final_norm": norm_params(cfg.d_model, cfg.norm),
+        }
+
+    def _shared_attn(self, params, x, *, positions, rng, cache, cache_index):
+        cfg = self.cfg
+        p = params["shared_attn"]
+        h = norm_apply(p["ln"], x, cfg.norm, cfg.norm_eps)
+        out, new_cache = attention_apply(
+            p["attn"], h, cfg=cfg, layer_window=None, positions=positions,
+            rng=rng, cache=cache, cache_index=cache_index,
+        )
+        x = constrain(x + out, "btd")
+        h = norm_apply(p["ln_mlp"], x, cfg.norm, cfg.norm_eps)
+        x = constrain(x + mlp_apply(p["mlp"], h, cfg.act), "btd")
+        return x, new_cache
+
+    def forward(self, params, batch, *, cache: Optional[dict] = None,
+                cache_index=None, decode=False, rng=None, remat: str = "none"):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = constrain(x, "btd")
+        positions = batch["positions"]
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        attn_caches = cache["attn"] if cache is not None else [None] * len(self.attn_sites)
+        mamba_states = cache["mamba"] if cache is not None else [None] * cfg.num_layers
+        new_attn, new_mamba = [], []
+        site = 0
+
+        def mamba_block(p, x, st):
+            h = norm_apply(p["ln"], x, cfg.norm, cfg.norm_eps)
+            out, ns = mamba_apply(p["core"], h, cfg, state=st, decode=decode)
+            return constrain(x + out, "btd"), ns
+
+        if remat != "none":
+            # unrolled blocks otherwise keep every intermediate live for the
+            # backward pass (~174 GB/device for train_4k)
+            mamba_block = jax.checkpoint(
+                mamba_block, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        for i in range(cfg.num_layers):
+            if site < len(self.attn_sites) and self.attn_sites[site] == i:
+                rng, sub = jax.random.split(rng)
+                x, nc = self._shared_attn(
+                    params, x, positions=positions, rng=sub,
+                    cache=attn_caches[site], cache_index=cache_index,
+                )
+                new_attn.append(nc)
+                site += 1
+            x, ns = mamba_block(params["mamba_blocks"][i], x, mamba_states[i])
+            new_mamba.append(ns)
+        x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        new_cache = None
+        if cache is not None or decode:
+            new_cache = {"attn": new_attn, "mamba": new_mamba}
+        return x, new_cache, 0.0
+
+    def logits(self, params, hidden):
+        return constrain(hidden @ params["embed"].T.astype(hidden.dtype), "btv")
+
+    def loss(self, params, batch, rng=None, remat: str = "none"):
+        hidden, _, _ = self.forward(params, batch, rng=rng, remat=remat)
+        return cross_entropy(self.logits(params, hidden), batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch, cache, rng=None):
+        hidden, new_cache, _ = self.forward(params, batch, cache=cache, rng=rng)
+        return self.logits(params, hidden[:, -1:]), new_cache
+
+    def decode_step(self, params, batch, cache, cache_index, rng=None):
+        hidden, new_cache, _ = self.forward(
+            params, batch, cache=cache, cache_index=cache_index, decode=True, rng=rng
+        )
+        return self.logits(params, hidden), new_cache
+
+    # -- specs ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        base = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            base["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return base
+
+    def cache_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        a = cfg.attention
+        b = shape.global_batch
+        dtype = jnp.dtype(cfg.dtype)
+        attn = [
+            {
+                "k": jax.ShapeDtypeStruct((b, shape.seq_len, a.num_kv_heads, a.head_dim), dtype),
+                "v": jax.ShapeDtypeStruct((b, shape.seq_len, a.num_kv_heads, a.head_dim), dtype),
+                "pos": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+            }
+            for _ in self.attn_sites
+        ]
+        mstate = mamba_state_specs(cfg, b)
+        as_spec = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), mstate)
+        return {"attn": attn, "mamba": [as_spec] * cfg.num_layers}
+
+    def init_cache(self, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        a = cfg.attention
+        dtype = jnp.dtype(cfg.dtype)
+        attn = [
+            {
+                "k": jnp.zeros((batch, seq, a.num_kv_heads, a.head_dim), dtype),
+                "v": jnp.zeros((batch, seq, a.num_kv_heads, a.head_dim), dtype),
+                "pos": jnp.full((batch, seq), -1, jnp.int32),
+            }
+            for _ in self.attn_sites
+        ]
+        return {
+            "attn": attn,
+            "mamba": [mamba_state_specs(cfg, batch) for _ in range(cfg.num_layers)],
+        }

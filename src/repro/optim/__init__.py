@@ -1,0 +1,4 @@
+from .adamw import AdamW, AdamWState, global_norm_clip, lr_schedule
+from .compression import ef_compress, init_residual
+
+__all__ = ["AdamW", "AdamWState", "global_norm_clip", "lr_schedule", "ef_compress", "init_residual"]

@@ -1,0 +1,104 @@
+"""AdamW with fp32 master weights and ZeRO-1-style state sharding.
+
+Optimizer state (m, v, master) is sharded over the ``data`` axis on each
+tensor's largest divisible, not-already-sharded axis; under GSPMD the update
+then lowers to reduce-scatter(grad) -> shard-local update -> all-gather(new
+params) — the ZeRO-1 communication pattern — without manual collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    master: dict
+    count: jax.Array
+
+
+class AdamW:
+    def __init__(self, cfg: TrainConfig):
+        self.cfg = cfg
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return AdamWState(
+            m=f32(params),
+            v=f32(params),
+            # copy=True: when params are already f32, astype would alias the
+            # same buffer and break donation (donate(a), donate(a))
+            master=jax.tree.map(
+                lambda x: jnp.array(x, jnp.float32, copy=True), params
+            ),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads, state: AdamWState, params, lr: jax.Array):
+        c = self.cfg
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        bc1 = 1.0 - c.beta1**t
+        bc2 = 1.0 - c.beta2**t
+
+        def upd(g, m, v, master):
+            g32 = g.astype(jnp.float32)
+            m = c.beta1 * m + (1 - c.beta1) * g32
+            v = c.beta2 * v + (1 - c.beta2) * g32 * g32
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+            master = master - lr * (step + c.weight_decay * master)
+            return m, v, master
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_ma = treedef.flatten_up_to(state.master)
+        out = [upd(g, m, v, ma) for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+        new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+        # bf16 forward weights re-cast from fp32 masters
+        new_params = jax.tree.map(
+            lambda ma, p: ma.astype(p.dtype), new_master, params
+        )
+        return new_params, AdamWState(new_m, new_v, new_master, count)
+
+
+def zero1_spec(param_spec: P, shape: tuple[int, ...], data_size: int,
+               data_axes) -> P:
+    """Add the data axis to an optimizer-state tensor's spec (ZeRO-1)."""
+    if not data_axes or data_size <= 1:
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % data_size == 0:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*entries)
+    return param_spec  # no divisible free axis -> keep param sharding
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm_clip(grads, max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm

@@ -1,0 +1,3 @@
+from .elastic import ElasticRunner, FailureInjector, StragglerDetector
+
+__all__ = ["ElasticRunner", "FailureInjector", "StragglerDetector"]

@@ -1,0 +1,138 @@
+"""Serving engine: continuous batching over fixed decode slots.
+
+vLLM-style at the granularity JAX likes (static shapes):
+  * `B` decode slots, each with a fixed-size KV-cache region (the cache is
+    one batched tree — slot i is batch row i);
+  * requests queue up; free slots are filled by running prefill for one
+    request at a time (chunked prefill would slot in here) and scattering
+    its KV into the slot's cache rows;
+  * one fused decode step advances ALL active slots each tick (inactive
+    slots decode garbage that is masked out — the static-shape trade);
+  * finished sequences (EOS or max_len) free their slot immediately.
+
+Greedy sampling by default; temperature hook provided.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, num_slots: int, max_seq: int,
+                 rng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.b = num_slots
+        self.max_seq = max_seq
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: dict[int, Request] = {}          # slot -> request
+        self.slot_pos = np.zeros(num_slots, np.int32)  # next position per slot
+        self.cache = model.init_cache(num_slots, max_seq)
+        self.key = jax.random.PRNGKey(rng_seed)
+        self._decode = jax.jit(
+            lambda p, batch, cache, idx: model.decode_step(p, batch, cache, idx)
+        )
+        self.steps_run = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i in range(self.b) if i not in self.active]
+
+    def _admit(self):
+        """Fill free slots: per-request prefill scattered into the batch cache."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            p = len(req.prompt)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            positions = jnp.arange(p, dtype=jnp.int32)[None]
+            # prefill on a single-row cache, then scatter into slot row
+            row_cache = self.model.init_cache(1, self.max_seq)
+            logits, row_cache = self.model.prefill(
+                self.params, {"tokens": tokens, "positions": positions}, row_cache
+            )
+            self.cache = jax.tree.map(
+                lambda full, row, s=slot: _scatter_slot(full, row, s),
+                self.cache,
+                row_cache,
+            )
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.out_tokens.append(nxt)
+            self.active[slot] = req
+            self.slot_pos[slot] = p
+            self.key, _ = jax.random.split(self.key)
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit + one fused decode step for all slots."""
+        self._admit()
+        if not self.active:
+            return
+        tokens = np.zeros((self.b, 1), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.out_tokens[-1]
+        positions = self.slot_pos[:, None].astype(np.int32)
+        # NOTE: static-shape engine uses one shared cache_index per tick via
+        # per-slot positions; the cache write offset is each slot's position
+        batch = {"tokens": jnp.asarray(tokens), "positions": jnp.asarray(positions)}
+        idx = jnp.asarray(self.slot_pos, jnp.int32)  # per-slot write offsets
+        logits, self.cache = self._decode(self.params, batch, self.cache, idx)
+        self.steps_run += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.slot_pos[slot] += 1
+            if (
+                (req.eos_id is not None and tok == req.eos_id)
+                or len(req.out_tokens) >= req.max_new_tokens
+                or self.slot_pos[slot] >= self.max_seq - 1
+            ):
+                req.done = True
+                finished.append(slot)
+        for slot in finished:
+            del self.active[slot]
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            before = set(self.active)
+            self.step()
+            ticks += 1
+        return done
+
+
+def _scatter_slot(full: jax.Array, row: jax.Array, slot: int) -> jax.Array:
+    """Write a batch-1 cache leaf into batch row ``slot`` of the full cache.
+
+    Cache trees mix (B, ...) and (L, B, ...) leaves; the batch axis is the
+    unique axis where the shapes differ (full has B, row has 1)."""
+    diffs = [ax for ax in range(full.ndim) if full.shape[ax] != row.shape[ax]]
+    if not diffs:  # B == 1 engine: shapes identical
+        return row.astype(full.dtype)
+    ax = diffs[0]
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, row.astype(full.dtype), slot, axis=ax
+    )

@@ -1,0 +1,189 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+shape/dtype sweeps, hypothesis property tests, gradient checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bernoulli.ops import bernoulli_encode_kernel
+from repro.kernels.bernoulli.ref import bernoulli_reference
+from repro.kernels.lif.ops import lif_forward
+from repro.kernels.lif.ref import lif_reference
+from repro.kernels.ssa_attention.ops import ssa_attention
+from repro.kernels.ssa_attention.ref import expected_rate, ssa_reference
+
+INTERP = True  # CPU container: Pallas kernels run in interpret mode
+
+
+def _spikes(key, shape, rate=0.5, dtype=jnp.float32):
+    return (jax.random.uniform(key, shape) < rate).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused SSA attention kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,n_q,n_kv,d,causal,window",
+    [
+        (1, 16, 16, 16, False, None),
+        (2, 128, 128, 64, True, None),
+        (3, 200, 200, 48, True, 64),       # non-multiple shapes
+        (1, 1, 96, 32, True, None),        # decode: 1 query vs cache
+        (2, 64, 256, 128, True, None),     # chunked prefill alignment
+        (1, 257, 129, 40, False, None),    # adversarial padding
+    ],
+)
+def test_ssa_kernel_bitexact_vs_ref(b, n_q, n_kv, d, causal, window, dtype):
+    key = jax.random.PRNGKey(n_q * 7 + n_kv)
+    q = _spikes(key, (b, n_q, d), 0.4, dtype)
+    k = _spikes(jax.random.fold_in(key, 1), (b, n_kv, d), 0.6, dtype)
+    v = _spikes(jax.random.fold_in(key, 2), (b, n_kv, d), 0.5, dtype)
+    seed = jnp.uint32(1234)
+    out_k = ssa_attention(q, k, v, seed, causal, window, 128, 128, INTERP)
+    out_r = ssa_reference(q, k, v, seed, causal=causal, window=window)
+    assert out_k.shape == (b, n_q, d)
+    assert out_k.dtype == dtype
+    np.testing.assert_array_equal(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32)
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    d=st.integers(2, 70),
+    seed=st.integers(0, 2**31 - 1),
+    causal=st.booleans(),
+)
+def test_ssa_kernel_property_sweep(n, d, seed, causal):
+    key = jax.random.PRNGKey(seed % 997)
+    q = _spikes(key, (1, n, d), 0.5)
+    k = _spikes(jax.random.fold_in(key, 1), (1, n, d), 0.5)
+    v = _spikes(jax.random.fold_in(key, 2), (1, n, d), 0.5)
+    out_k = ssa_attention(q, k, v, jnp.uint32(seed), causal, None, 128, 128, INTERP)
+    out_r = ssa_reference(q, k, v, jnp.uint32(seed), causal=causal)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    # outputs are spikes
+    assert set(np.unique(np.asarray(out_k)).tolist()) <= {0.0, 1.0}
+
+
+def test_ssa_kernel_block_invariance():
+    """Same logical bits regardless of block size (stateless counter RNG)."""
+    key = jax.random.PRNGKey(5)
+    q = _spikes(key, (2, 256, 128), 0.5)
+    k = _spikes(jax.random.fold_in(key, 1), (2, 256, 128), 0.5)
+    v = _spikes(jax.random.fold_in(key, 2), (2, 256, 128), 0.5)
+    seed = jnp.uint32(7)
+    a = ssa_attention(q, k, v, seed, True, None, 128, 128, INTERP)
+    b = ssa_attention(q, k, v, seed, True, None, 64, 256, INTERP)
+    c = ssa_attention(q, k, v, seed, True, None, 256, 64, INTERP)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_ssa_kernel_statistical_rate():
+    """Kernel rates over many seeds converge to E[Attn]=QK^TV/(D_K N)."""
+    key = jax.random.PRNGKey(9)
+    n, d, trials = 16, 32, 600
+    pq = jax.random.uniform(key, (1, n, d))
+    pk = jax.random.uniform(jax.random.fold_in(key, 1), (1, n, d))
+    pv = jax.random.uniform(jax.random.fold_in(key, 2), (1, n, d))
+
+    def one(i):
+        kk = jax.random.fold_in(key, 100 + i)
+        ks = jax.random.split(kk, 3)
+        q = (jax.random.uniform(ks[0], pq.shape) < pq).astype(jnp.float32)
+        k_ = (jax.random.uniform(ks[1], pk.shape) < pk).astype(jnp.float32)
+        v = (jax.random.uniform(ks[2], pv.shape) < pv).astype(jnp.float32)
+        return ssa_attention(q, k_, v, jnp.uint32(i), False, None, 128, 128, INTERP)
+
+    outs = jnp.stack([one(i) for i in range(trials)])
+    rate = outs.mean(axis=0)
+    exp = expected_rate(pq, pk, pv)
+    err = np.abs(np.asarray(rate - exp))
+    assert err.max() < 6 * 0.5 / np.sqrt(trials), err.max()
+
+
+def test_ssa_kernel_gradients_match_ste_formula():
+    key = jax.random.PRNGKey(11)
+    b, n, d = 2, 64, 32
+    q = _spikes(key, (b, n, d), 0.5)
+    k = _spikes(jax.random.fold_in(key, 1), (b, n, d), 0.5)
+    v = _spikes(jax.random.fold_in(key, 2), (b, n, d), 0.5)
+    seed = jnp.uint32(3)
+
+    def loss_kernel(q, k, v):
+        return (ssa_attention(q, k, v, seed, True, None, 128, 128, INTERP) ** 2).sum()
+
+    gq, gk, gv = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    # Manual STE formula on the recomputed S
+    from repro.kernels.ssa_attention.ops import _recompute_s, _visible_counts
+
+    s = _recompute_s(q, k, seed, True, None, 128, 128)
+    out = ssa_reference(q, k, v, seed, causal=True)
+    g = 2 * out  # d(sum out^2)/d out
+    vis = _visible_counts(n, n, True, None)[None, :, None]
+    g32 = g / vis
+    dv = jnp.einsum("bqk,bqd->bkd", s, g32)
+    ds = jnp.einsum("bqd,bkd->bqk", g32, v) / d
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(dq), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(dk), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(dv), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# LIF kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,b,f", [(4, 4, 64), (10, 3, 100), (8, 16, 512), (2, 1, 7)])
+def test_lif_kernel_matches_ref(t, b, f, dtype):
+    key = jax.random.PRNGKey(t + b + f)
+    x = (jax.random.normal(key, (t, b, f)) * 1.5).astype(dtype)
+    out_k = lif_forward(x, 0.9, 1.0, 4.0, INTERP)
+    out_r = lif_reference(x, beta=0.9, threshold=1.0)
+    assert out_k.shape == x.shape and out_k.dtype == dtype
+    np.testing.assert_array_equal(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32)
+    )
+
+
+def test_lif_kernel_grad_matches_core_scan():
+    """Kernel surrogate BPTT == autodiff through core.lif (same surrogate)."""
+    from repro.core import LIFParams, lif_layer
+
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (6, 2, 32)) * 1.5
+    g1 = jax.grad(lambda z: (lif_forward(z, 0.9, 1.0, 4.0, INTERP) ** 2).sum())(x)
+    g2 = jax.grad(
+        lambda z: (lif_layer(z, LIFParams(0.9, 1.0, 4.0)) ** 2).sum()
+    )(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Bernoulli encoder kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t,b,f", [(4, 4, 64), (10, 5, 333), (1, 1, 1)])
+def test_bernoulli_kernel_matches_ref(t, b, f):
+    key = jax.random.PRNGKey(t * 31 + f)
+    p = jax.random.uniform(key, (b, f))
+    seed = jnp.uint32(99)
+    out_k = bernoulli_encode_kernel(p, seed, t, INTERP)
+    out_r = bernoulli_reference(p, seed, t)
+    assert out_k.shape == (t, b, f)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_bernoulli_kernel_rate_and_grad():
+    key = jax.random.PRNGKey(3)
+    p = jax.random.uniform(key, (8, 256))
+    out = bernoulli_encode_kernel(p, jnp.uint32(5), 500, INTERP)
+    np.testing.assert_allclose(
+        np.asarray(out.mean(axis=0)), np.asarray(p), atol=0.09
+    )
+    g = jax.grad(lambda pp: bernoulli_encode_kernel(pp, jnp.uint32(5), 7, INTERP).sum())(p)
+    np.testing.assert_allclose(np.asarray(g), 7.0 * np.ones_like(np.asarray(g)))

@@ -1,0 +1,198 @@
+"""Semantics of the paper's SSA block: bit-exactness vs. the hardware
+simulator, statistical correctness of the SC stages, surrogate gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LIFParams,
+    bernoulli_encode,
+    bernoulli_from_uniform,
+    lif_layer,
+    spike_heaviside,
+    ssa_attention,
+    ssa_attention_step,
+)
+from repro.core.linear_decode import decode_rate, init_state, update_state
+from repro.core.sau_sim import sau_forward
+from repro.core.ssa import visibility_mask
+
+
+def _random_spikes(key, shape):
+    return (jax.random.uniform(key, shape) < 0.5).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact equivalence: vectorised JAX SSA == scalar SAU hardware simulator
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    d_k=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ssa_matches_sau_hardware_sim(n, d_k, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 2, (n, d_k)).astype(np.uint8)
+    k = rng.integers(0, 2, (n, d_k)).astype(np.uint8)
+    v = rng.integers(0, 2, (n, d_k)).astype(np.uint8)
+    u_s = rng.random((n, n)).astype(np.float32)
+    u_a = rng.random((n, d_k)).astype(np.float32)
+
+    s_hw, attn_hw = sau_forward(q, k, v, u_s, u_a)
+
+    # Same uniforms through the JAX path.
+    qf, kf, vf = (jnp.asarray(x, jnp.float32) for x in (q, k, v))
+    counts_s = qf @ kf.T
+    s_jax = bernoulli_from_uniform(jnp.asarray(u_s), counts_s / d_k)
+    counts_a = s_jax @ vf
+    attn_jax = bernoulli_from_uniform(jnp.asarray(u_a), counts_a / n)
+
+    np.testing.assert_array_equal(np.asarray(s_jax, np.uint8), s_hw)
+    np.testing.assert_array_equal(np.asarray(attn_jax, np.uint8), attn_hw)
+
+
+# ---------------------------------------------------------------------------
+# Statistical semantics: E[SSA] -> linear attention  (rate coding, eq. 5/6)
+# ---------------------------------------------------------------------------
+def test_ssa_expectation_matches_linear_attention():
+    key = jax.random.PRNGKey(0)
+    n, d_k, t = 8, 16, 4000
+    kq, kk, kv, ks = jax.random.split(key, 4)
+    # token rates in [0,1]
+    pq = jax.random.uniform(kq, (n, d_k))
+    pk = jax.random.uniform(kk, (n, d_k))
+    pv = jax.random.uniform(kv, (n, d_k))
+    # i.i.d. spike trains over T steps
+    k1, k2, k3, k4 = jax.random.split(ks, 4)
+    q = (jax.random.uniform(k1, (t, n, d_k)) < pq).astype(jnp.float32)
+    k_ = (jax.random.uniform(k2, (t, n, d_k)) < pk).astype(jnp.float32)
+    v = (jax.random.uniform(k3, (t, n, d_k)) < pv).astype(jnp.float32)
+
+    out = ssa_attention(k4, q, k_, v)
+    rate = out.mean(axis=0)
+
+    expected = (pq @ pk.T @ pv) / (d_k * n)
+    err = np.abs(np.asarray(rate - expected))
+    # Bernoulli std at T=4000 is <= 0.5/sqrt(T) ~ 0.008; allow 6 sigma.
+    assert err.max() < 6 * 0.5 / np.sqrt(t), err.max()
+
+
+def test_linear_decode_state_matches_expectation():
+    key = jax.random.PRNGKey(1)
+    n, d_k = 12, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    pq = jax.random.uniform(kq, (d_k,))
+    pk = jax.random.uniform(kk, (n, d_k))
+    pv = jax.random.uniform(kv, (n, d_k))
+    state = init_state((), d_k)
+    for j in range(n):
+        state = update_state(state, pk[j], pv[j])
+    out = decode_rate(state, pq)
+    expected = (pq @ pk.T @ pv) / (d_k * n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Masking semantics (causal / sliding window extensions for LM archs)
+# ---------------------------------------------------------------------------
+def test_causal_ssa_ignores_future_tokens():
+    key = jax.random.PRNGKey(2)
+    n, d_k, t = 6, 8, 512
+    kq, kk, kv, ks, kalt = jax.random.split(key, 5)
+    q = _random_spikes(kq, (t, n, d_k))
+    k_ = _random_spikes(kk, (t, n, d_k))
+    v = _random_spikes(kv, (t, n, d_k))
+    out1 = ssa_attention(ks, q, k_, v, causal=True)
+    # Perturb the *last* key/value token: rows < n-1 must be unaffected.
+    k2 = k_.at[:, -1, :].set(_random_spikes(kalt, (t, d_k)))
+    v2 = v.at[:, -1, :].set(_random_spikes(jax.random.fold_in(kalt, 1), (t, d_k)))
+    out2 = ssa_attention(ks, q, k2, v2, causal=True)
+    np.testing.assert_array_equal(np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]))
+
+
+def test_visibility_mask_window():
+    m = visibility_mask(5, 5, causal=True, window=2)
+    expected = np.array(
+        [
+            [1, 0, 0, 0, 0],
+            [1, 1, 0, 0, 0],
+            [0, 1, 1, 0, 0],
+            [0, 0, 1, 1, 0],
+            [0, 0, 0, 1, 1],
+        ],
+        dtype=np.float32,
+    )
+    np.testing.assert_array_equal(np.asarray(m), expected)
+
+
+def test_decode_alignment_mask():
+    # 1 query against a 6-token cache: the query is the *last* position.
+    m = visibility_mask(1, 6, causal=True)
+    np.testing.assert_array_equal(np.asarray(m), np.ones((1, 6), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Spiking primitives
+# ---------------------------------------------------------------------------
+def test_bernoulli_encode_rate_and_grad():
+    key = jax.random.PRNGKey(3)
+    x = jnp.linspace(-3, 3, 64)
+    t = 2000
+    spikes = bernoulli_encode(key, x, t)
+    assert spikes.shape == (t, 64)
+    rate = spikes.mean(axis=0)
+    np.testing.assert_allclose(
+        np.asarray(rate), np.asarray(jax.nn.sigmoid(x)), atol=0.05
+    )
+    # STE gradient: d mean(spikes) / dx == sigmoid'(x) / 64 per element
+    g = jax.grad(lambda xx: bernoulli_encode(key, xx, 8).mean())(x)
+    assert np.all(np.isfinite(np.asarray(g))) and np.abs(np.asarray(g)).max() > 0
+
+
+def test_lif_layer_spikes_and_grad():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (16, 8, 4)) * 2.0
+    s = lif_layer(x, LIFParams(beta=0.9, threshold=1.0))
+    assert s.shape == x.shape
+    vals = np.unique(np.asarray(s))
+    assert set(vals.tolist()) <= {0.0, 1.0}
+    # constant super-threshold input must fire
+    s2 = lif_layer(jnp.ones((10, 4)) * 2.0)
+    assert np.asarray(s2).sum() > 0
+    g = jax.grad(lambda xx: lif_layer(xx).sum())(x)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_spike_heaviside_surrogate():
+    g = jax.grad(lambda v: spike_heaviside(v).sum())(jnp.array([-1.0, 0.0, 1.0]))
+    g = np.asarray(g)
+    assert g[1] == g.max() and g[0] > 0 and g[2] > 0
+
+
+def test_ssa_gradients_flow_to_rates():
+    """End-to-end surrogate path: grads reach the pre-encoding rates."""
+    key = jax.random.PRNGKey(5)
+    n, d_k, t = 4, 8, 16
+
+    def loss(x):
+        ks = jax.random.split(key, 4)
+        q = bernoulli_encode(ks[0], x, t)
+        k_ = bernoulli_encode(ks[1], x * 0.5, t)
+        v = bernoulli_encode(ks[2], x * 2.0, t)
+        out = ssa_attention(ks[3], q, k_, v)
+        return out.mean()
+
+    g = jax.grad(loss)(jnp.ones((n, d_k)) * 0.3)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+def test_ssa_attention_step_shapes_and_binary():
+    key = jax.random.PRNGKey(6)
+    q = _random_spikes(key, (2, 3, 8, 16))  # (B, H, N, D_K)
+    out = ssa_attention_step(key, q, q, q)
+    assert out.shape == (2, 3, 8, 16)
+    assert set(np.unique(np.asarray(out)).tolist()) <= {0.0, 1.0}

@@ -110,6 +110,83 @@ def ssa_attention_energy(w: Workload) -> dict:
     return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
 
 
+# ---------------------------------------------------------------------------
+# KV-cache traffic model: dense vs packed spike storage (repro.bitpack)
+# ---------------------------------------------------------------------------
+
+
+def _words(bits_n: int) -> int:
+    # single source of truth for the word granularity is repro.bitpack
+    from repro.bitpack import packed_width
+
+    return packed_width(bits_n)
+
+
+def kv_decode_traffic(
+    n_ctx: int,
+    n_kv_heads: int,
+    d_k: int,
+    t: int,
+    storage: str,
+    cache_dtype_bytes: int = 2,
+) -> dict:
+    """Modeled bytes for one spiking-attention decode step over an
+    ``n_ctx``-token KV cache (per layer, per sequence).
+
+    dense  — the seed hot path: real-valued K/V are read back every step and
+             re-encoded into T-step spike trains materialised as f32 lanes
+             (written once, read once by the attention contraction);
+    packed — spike trains live in the cache as uint32 bit-planes
+             (1 bit/spike, ``repro.bitpack``): decode reads the packed words
+             and writes only the new token's planes.
+
+    This is the serving-side analogue of the paper's Table II memory column
+    (SSA's 1.7x memory-access win comes from spikes staying bits); the
+    packed/dense ratio is what `benchmarks/run.py --compare-storage` reports.
+    """
+    lanes = n_ctx * n_kv_heads * d_k
+    if storage == "dense":
+        real_read = 2 * lanes * cache_dtype_bytes          # K and V reals
+        spike_planes = 2 * t * lanes * 4                    # f32 spike lanes
+        moved = real_read + 2 * spike_planes                # write + read
+        resident = 2 * lanes * cache_dtype_bytes
+    elif storage == "packed":
+        plane_words = 2 * n_ctx * n_kv_heads * t * _words(d_k)
+        new_token_words = 2 * n_kv_heads * t * _words(d_k)
+        moved = plane_words * 4 + new_token_words * 4
+        resident = plane_words * 4
+    else:
+        raise ValueError(f"unknown storage {storage!r}")
+    return {"bytes_moved": moved, "bytes_resident": resident}
+
+
+def storage_comparison(
+    n_ctx: int = 4096,
+    n_kv_heads: int = 8,
+    t: int = 4,
+    d_ks=(32, 64, 128),
+    cache_dtype_bytes: int = 2,
+) -> dict:
+    """Dense-vs-packed decode traffic across head dims; ratio >= 8x is the
+    acceptance bar for D_K >= 64 (actual model ratio is far higher: a bf16
+    lane alone is 16 bits/spike vs 1)."""
+    rows = {}
+    for d_k in d_ks:
+        dense = kv_decode_traffic(
+            n_ctx, n_kv_heads, d_k, t, "dense", cache_dtype_bytes
+        )
+        packed = kv_decode_traffic(
+            n_ctx, n_kv_heads, d_k, t, "packed", cache_dtype_bytes
+        )
+        rows[d_k] = {
+            "dense": dense,
+            "packed": packed,
+            "moved_ratio": dense["bytes_moved"] / packed["bytes_moved"],
+            "resident_ratio": dense["bytes_resident"] / packed["bytes_resident"],
+        }
+    return rows
+
+
 PAPER_TABLE2 = {
     "ANN": {"processing_uJ": 7.77, "memory_uJ": 89.96, "total_uJ": 97.73},
     "Spikformer": {"processing_uJ": 6.20, "memory_uJ": 102.85, "total_uJ": 109.05},

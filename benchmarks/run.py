@@ -1,7 +1,13 @@
 """Benchmark harness: one function per paper table + kernel microbench +
-roofline summary.  Prints ``name,us_per_call,derived`` CSV lines."""
+roofline summary.  Prints ``name,us_per_call,derived`` CSV lines.
+
+``--compare-storage`` runs the dense-vs-packed spike-storage comparison
+(modeled KV decode traffic + measured cache bytes and decode latency on a
+smoke SSA model) — the in-simulator reproduction of the paper's
+memory-access-reduction claim."""
 from __future__ import annotations
 
+import argparse
 import time
 
 
@@ -117,11 +123,74 @@ def bench_roofline_summary():
         print("roofline_cells,0,none_found=run `python -m repro.launch.dryrun --all`")
 
 
+def bench_storage_compare():
+    """Dense vs packed spike storage: modeled decode traffic + measured
+    cache footprint and decode-step latency (smoke SSA model, CPU)."""
+    import jax
+    import jax.numpy as jnp
+
+    from .energy_model import storage_comparison
+
+    # ---- modeled bytes moved per decode step (per layer/sequence) --------
+    rows = storage_comparison(n_ctx=4096, n_kv_heads=8, t=4)
+    for d_k, r in rows.items():
+        print(
+            f"kv_storage_model/dk{d_k},0,"
+            f"dense_MB={r['dense']['bytes_moved'] / 2**20:.2f}"
+            f";packed_MB={r['packed']['bytes_moved'] / 2**20:.3f}"
+            f";moved_ratio={r['moved_ratio']:.1f}"
+            f";resident_ratio={r['resident_ratio']:.1f}"
+        )
+    ok = all(r["moved_ratio"] >= 8.0 for d_k, r in rows.items() if d_k >= 64)
+    print(f"kv_storage_model/claim,0,ge8x_for_dk_ge_64={ok}")
+
+    # ---- measured: smoke SSA engine caches + one fused decode step -------
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+
+    cfg = with_overrides(get_smoke_config("codeqwen15_7b"), attention__impl="ssa")
+    variants = {
+        "dense": build_model(cfg),
+        "packed": build_model(with_overrides(cfg, attention__spike_storage="packed")),
+    }
+    params = variants["dense"].init(jax.random.PRNGKey(0))
+    stats = {}
+    for name, model in variants.items():
+        cache = model.init_cache(4, 64)
+        nbytes = sum(int(l.nbytes) for l in jax.tree.leaves(cache))
+        batch = {
+            "tokens": jnp.zeros((4, 1), jnp.int32),
+            "positions": jnp.full((4, 1), 8, jnp.int32),
+        }
+        idx = jnp.full((4,), 8, jnp.int32)
+        step = jax.jit(lambda p, b, c, i, m=model: m.decode_step(p, b, c, i))
+        step(params, batch, cache, idx)[0].block_until_ready()
+        us = _bench(
+            lambda: step(params, batch, cache, idx)[0].block_until_ready(),
+            iters=5,
+        )
+        stats[name] = (nbytes, us)
+        print(f"kv_storage_measured/{name},{us:.0f},cache_bytes={nbytes}")
+    ratio = stats["dense"][0] / stats["packed"][0]
+    print(f"kv_storage_measured/ratio,0,cache_bytes_dense_over_packed={ratio:.2f}")
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--compare-storage",
+        action="store_true",
+        help="only run the dense-vs-packed spike-storage comparison",
+    )
+    args = parser.parse_args()
+    if args.compare_storage:
+        bench_storage_compare()
+        return
     bench_table2_energy()
     bench_table3_latency()
     bench_ssa_kernel()
     bench_roofline_summary()
+    bench_storage_compare()
     bench_table1_accuracy()
 
 

@@ -6,6 +6,7 @@ the decode loop, demonstrating slot reuse, per-slot cache offsets and EOS
 handling.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
+      PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed
 """
 import argparse
 import time
@@ -13,7 +14,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_smoke_config
+from repro.configs import get_smoke_config, with_overrides
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
 
@@ -24,9 +25,18 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--impl", default=None, choices=["ann", "ssa", "spikformer"],
+                    help="override the attention implementation")
+    ap.add_argument("--spike-storage", default=None, choices=["dense", "packed"],
+                    help="KV-cache spike storage (packed = uint32 bit-planes; "
+                         "ssa impl only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
+    if args.impl:
+        cfg = with_overrides(cfg, attention__impl=args.impl)
+    if args.spike_storage:
+        cfg = with_overrides(cfg, attention__spike_storage=args.spike_storage)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, num_slots=args.slots, max_seq=args.max_seq)
@@ -58,6 +68,8 @@ def main():
     print(f"\n{sum(r.done for r in reqs)}/{len(reqs)} requests finished, "
           f"{total_tokens} tokens in {ticks} engine ticks ({dt:.1f}s, "
           f"{total_tokens / max(dt, 1e-9):.1f} tok/s on CPU)")
+    print(f"kv cache: {engine.kv_cache_nbytes() / 2**20:.2f} MiB "
+          f"(impl={cfg.attention.impl}, storage={cfg.attention.spike_storage})")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}...")
 

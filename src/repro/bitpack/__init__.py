@@ -1,0 +1,23 @@
+"""Bit-plane spike subsystem: packed {0,1} tensors + popcount matmul.
+
+Spikes are bits (the whole premise of the paper's SAU array); this package
+makes that true in memory: ``pack_spikes`` / ``unpack_spikes`` fold a spike
+axis into uint32 bit-planes (1 bit/spike in HBM instead of 16-32), and
+``popcount_matmul_ref`` defines the AND-popcount contraction the Pallas
+kernel (``repro.kernels.popcount_matmul``) computes on packed words.
+
+Consumers: the packed fused SSA kernel (``kernels.ssa_attention`` with
+``packed=True``) and the packed spiking KV cache in the serving engine
+(``AttentionConfig.spike_storage = "packed"``).  See docs/bitpack.md.
+"""
+from .pack import WORD_BITS, pack_spikes, packed_width, unpack_spikes
+from .popcount import popcount32, popcount_matmul_ref
+
+__all__ = [
+    "WORD_BITS",
+    "pack_spikes",
+    "packed_width",
+    "unpack_spikes",
+    "popcount32",
+    "popcount_matmul_ref",
+]

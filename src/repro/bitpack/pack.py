@@ -1,0 +1,70 @@
+"""Bit-plane packing of {0,1} spike tensors into ``uint32`` words.
+
+The paper's hardware treats spikes as single wires; storing them as f32/bf16
+lanes on TPU is a 16-32x memory blow-up on every spike-carrying hot path.
+``pack_spikes`` folds a spike axis into ``ceil(n / 32)`` uint32 words so the
+HBM-resident representation is 1 bit/spike; consumers (the popcount-matmul
+kernel, the packed SSA kernel, the packed spiking KV cache) unpack per-tile
+in VMEM, never materialising dense planes in HBM.
+
+Bit order is little-endian within a word: bit ``j`` of word ``w`` along the
+packed axis holds the spike at index ``w * 32 + j``.  Trailing pad bits
+(when the axis length is not a multiple of 32) are always zero, which keeps
+AND-popcount counts exact without masking.
+
+The packed axis is arbitrary (``axis=``): the trailing feature axis ``D_K``
+is the serving-cache layout; ``axis=0`` folds the T time axis instead
+(T <= 32 bit-planes in one word), matching the paper's streamed view.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["WORD_BITS", "packed_width", "pack_spikes", "unpack_spikes"]
+
+WORD_BITS = 32
+
+_SHIFTS = np.arange(WORD_BITS, dtype=np.uint32)
+
+
+def packed_width(n: int) -> int:
+    """Number of uint32 words needed to hold ``n`` bits."""
+    return -(-n // WORD_BITS)
+
+
+def pack_spikes(spikes: jax.Array, *, axis: int = -1) -> jax.Array:
+    """Pack a {0,1} tensor into uint32 words along ``axis``.
+
+    Any dtype whose nonzero entries mean "spike" is accepted (f32/bf16/bool/
+    int).  Returns a uint32 array with ``axis`` shrunk to ``ceil(n / 32)``.
+    """
+    x = jnp.moveaxis(spikes, axis, -1)
+    n = x.shape[-1]
+    w = packed_width(n)
+    bits = (x != 0)
+    pad = w * WORD_BITS - n
+    if pad:
+        cfg = [(0, 0)] * (bits.ndim - 1) + [(0, pad)]
+        bits = jnp.pad(bits, cfg)
+    bits = bits.reshape(*bits.shape[:-1], w, WORD_BITS).astype(jnp.uint32)
+    # disjoint bit positions => sum == bitwise OR, no carries
+    words = jnp.sum(bits << _SHIFTS, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(words, -1, axis)
+
+
+def unpack_spikes(
+    packed: jax.Array, n: int, *, axis: int = -1, dtype=jnp.float32
+) -> jax.Array:
+    """Inverse of :func:`pack_spikes`: uint32 words -> {0,1} tensor.
+
+    ``n`` is the original (unpadded) axis length; pad bits are dropped.
+    """
+    x = jnp.moveaxis(packed, axis, -1)
+    w = x.shape[-1]
+    if w != packed_width(n):
+        raise ValueError(f"packed width {w} inconsistent with n={n}")
+    bits = (x[..., None] >> _SHIFTS) & jnp.uint32(1)
+    flat = bits.reshape(*x.shape[:-1], w * WORD_BITS)[..., :n]
+    return jnp.moveaxis(flat.astype(dtype), -1, axis)

@@ -1,0 +1,45 @@
+"""Pure-JAX popcount primitives over packed uint32 spike words.
+
+``popcount_matmul_ref`` is the semantic reference for the Pallas kernel in
+``repro.kernels.popcount_matmul``: for 0/1 operands the eq. 5/6 AND-popcount
+is exactly the integer matmul of the unpacked planes, so
+
+    popcount_matmul_ref(pack(A), pack(B)) == A @ B.T          (integer counts)
+
+holds bit-exactly for any {0,1} A, B.  The SWAR popcount runs unchanged
+inside Pallas kernel bodies (uint32 shifts/multiplies only — all numpy-scalar
+constants, so they stay jaxpr literals).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["popcount32", "popcount_matmul_ref"]
+
+_C1 = np.uint32(0x55555555)
+_C2 = np.uint32(0x33333333)
+_C4 = np.uint32(0x0F0F0F0F)
+_MUL = np.uint32(0x01010101)
+
+
+def popcount32(x: jax.Array) -> jax.Array:
+    """Per-lane population count of a uint32 tensor (SWAR, branch-free)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & _C1)
+    x = (x & _C2) + ((x >> 2) & _C2)
+    x = (x + (x >> 4)) & _C4
+    return (x * _MUL) >> np.uint32(24)
+
+
+def popcount_matmul_ref(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """AND-popcount "matmul" over packed words.
+
+    a_packed: (..., M, W) uint32;  b_packed: (..., N, W) uint32 with the same
+    word count W.  Returns (..., M, N) int32 counts —
+    ``counts[m, n] = sum_w popcount(a[m, w] & b[n, w])``, i.e. the integer
+    matmul of the unpacked 0/1 planes (paper eq. 5/6 numerators).
+    """
+    anded = a_packed[..., :, None, :] & b_packed[..., None, :, :]
+    return jnp.sum(popcount32(anded), axis=-1, dtype=jnp.int32)

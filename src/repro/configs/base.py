@@ -29,6 +29,12 @@ class AttentionConfig:
     # layer i is local (sliding-window) iff pattern[i % len(pattern)] == "L"
     layer_pattern: str = "G"          # e.g. "LG" = gemma2 alternating
     ssa_time_steps: int = 4           # T for ssa/spikformer impls
+    # KV-cache representation for spiking decode ("ssa" impl only):
+    #   dense  — real-valued K/V cached, spike trains re-encoded every step
+    #   packed — K/V spike trains cached as uint32 bit-planes (1 bit/spike,
+    #            repro.bitpack); decode reads packed words, bit-identical
+    #            outputs to dense for the same seed
+    spike_storage: str = "dense"      # dense | packed
     causal: bool = True
     # --- perf knobs (hillclimb levers; defaults = paper-faithful baseline) --
     # pad query heads up to this count with zero-weight heads: exact same

@@ -5,6 +5,12 @@ BlockSpec), `ops.py` (jitted public wrapper with custom VJP) and `ref.py`
 (pure-jnp oracle, bit-exact where the RNG is shared)."""
 from .bernoulli.ops import bernoulli_encode_kernel
 from .lif.ops import lif_forward
+from .popcount_matmul.ops import popcount_matmul
 from .ssa_attention.ops import ssa_attention as ssa_attention_fused
 
-__all__ = ["bernoulli_encode_kernel", "lif_forward", "ssa_attention_fused"]
+__all__ = [
+    "bernoulli_encode_kernel",
+    "lif_forward",
+    "popcount_matmul",
+    "ssa_attention_fused",
+]

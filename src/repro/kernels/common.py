@@ -11,10 +11,17 @@ oracles, and in interpret mode on CPU.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["mix32", "uniform_from_counter", "pad_to_multiple", "cdiv"]
+__all__ = [
+    "mix32",
+    "uniform_from_counter",
+    "unpack_words_to_lanes",
+    "pad_to_multiple",
+    "cdiv",
+]
 
 # numpy scalars stay jaxpr literals (jnp constants would be captured consts,
 # which pallas_call rejects inside kernel bodies).
@@ -42,6 +49,20 @@ def uniform_from_counter(seed: jnp.ndarray, counter: jnp.ndarray) -> jnp.ndarray
     """
     h = mix32(counter.astype(jnp.uint32) + mix32(seed))
     return (h >> np.uint32(8)).astype(jnp.float32) * np.float32(1.0 / (1 << 24))
+
+
+def unpack_words_to_lanes(words):
+    """(rows, W) uint32 bit-planes -> (rows, W * 32) f32 0/1 lanes.
+
+    Little-endian bit order, matching ``repro.bitpack.pack_spikes``.  Pure
+    jnp on uint32 shifts, so it runs identically inside Pallas kernel bodies
+    (VMEM tiles) and in jnp reference paths — the single place the packed
+    word layout is decoded on the kernel side.
+    """
+    rows, w = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (words[:, :, None] >> shifts) & np.uint32(1)
+    return bits.reshape(rows, w * 32).astype(jnp.float32)
 
 
 def cdiv(a: int, b: int) -> int:

@@ -1,0 +1,4 @@
+from .ops import popcount_matmul
+from .ref import popcount_matmul_ref
+
+__all__ = ["popcount_matmul", "popcount_matmul_ref"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the popcount-matmul kernel.
+
+The semantic definition lives with the packing code in ``repro.bitpack``
+(SWAR popcount over AND-ed words); re-exported here so every kernel
+subpackage keeps the kernel.py / ops.py / ref.py layout.
+"""
+from repro.bitpack.popcount import popcount32, popcount_matmul_ref
+
+__all__ = ["popcount32", "popcount_matmul_ref"]

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import cdiv, uniform_from_counter
+from ..common import cdiv, uniform_from_counter, unpack_words_to_lanes
 
 import numpy as np
 
@@ -39,13 +39,13 @@ SALT_S = np.uint32(0x9E3779B9)
 SALT_A = np.uint32(0x85EBCA6B)
 
 
-def _ssa_kernel(
-    seed_ref,       # SMEM (1, 1) uint32
-    q_ref,          # VMEM (1, block_q, d_pad)
-    k_ref,          # VMEM (1, block_k, d_pad)
-    v_ref,          # VMEM (1, block_k, d_pad)
-    out_ref,        # VMEM (1, block_q, d_pad)
-    acc_ref,        # VMEM scratch (block_q, d_pad) f32
+def _ssa_tile_body(
+    seed_ref,
+    out_ref,
+    acc_ref,
+    q,              # (block_q, d_pad) f32 0/1 tile
+    k,              # (block_k, d_pad) f32 0/1 tile
+    v,              # (block_k, d_pad) f32 0/1 tile
     *,
     block_q: int,
     block_k: int,
@@ -59,6 +59,10 @@ def _ssa_kernel(
     window: Optional[int],
     num_kv_tiles: int,
 ):
+    """Shared eq. 5/6 tile math: the dense and packed kernels differ only in
+    how the Q/K/V tiles reach VMEM (f32 lanes vs uint32 words unpacked here);
+    everything downstream — counts, masks, counter-RNG indices — is identical,
+    which is what makes the packed path bit-exact vs the dense one."""
     b = pl.program_id(0)
     iq = pl.program_id(1)
     ik = pl.program_id(2)
@@ -68,8 +72,6 @@ def _ssa_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # ---- eq. 5 tile: counts = Q-tile @ K-tile^T  (popcount of AND) --------
-    q = q_ref[0].astype(jnp.float32)
-    k = k_ref[0].astype(jnp.float32)
     counts_s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (block_q, block_k)
@@ -99,7 +101,6 @@ def _ssa_kernel(
     s = s.astype(jnp.float32)
 
     # ---- eq. 6 partial: acc += S-tile @ V-tile ----------------------------
-    v = v_ref[0].astype(jnp.float32)
     acc_ref[...] += jax.lax.dot_general(
         s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -132,6 +133,35 @@ def _ssa_kernel(
         out_ref[0] = out
 
 
+def _ssa_kernel(seed_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, **geom):
+    """Dense entry point: Q/K/V tiles arrive as 0/1 lanes."""
+    _ssa_tile_body(
+        seed_ref,
+        out_ref,
+        acc_ref,
+        q_ref[0].astype(jnp.float32),
+        k_ref[0].astype(jnp.float32),
+        v_ref[0].astype(jnp.float32),
+        **geom,
+    )
+
+
+def _ssa_kernel_packed(seed_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, **geom):
+    """Packed entry point: tiles arrive as uint32 words (1 bit/spike in HBM)
+    and expand to MXU lanes only here, in VMEM.  w_pad * 32 == d_pad, so the
+    unpacked tiles have exactly the dense kernel's geometry and the shared
+    body (same counter-RNG indices) produces bit-identical spikes."""
+    _ssa_tile_body(
+        seed_ref,
+        out_ref,
+        acc_ref,
+        unpack_words_to_lanes(q_ref[0]),
+        unpack_words_to_lanes(k_ref[0]),
+        unpack_words_to_lanes(v_ref[0]),
+        **geom,
+    )
+
+
 def build_ssa_pallas(
     *,
     bsz: int,
@@ -147,13 +177,18 @@ def build_ssa_pallas(
     block_q: int,
     block_k: int,
     interpret: bool,
+    packed: bool = False,
 ):
-    """Construct the pallas_call for a given padded geometry."""
+    """Construct the pallas_call for a given padded geometry.
+
+    ``packed=True`` takes Q/K/V as uint32 bit-planes of width
+    ``w_pad = d_pad // 32`` (see ``repro.bitpack``); output spikes stay
+    dense — bit-identical to the dense kernel for the same seed."""
     num_q_tiles = cdiv(n_q_pad, block_q)
     num_kv_tiles = cdiv(n_kv_pad, block_k)
 
     kernel = functools.partial(
-        _ssa_kernel,
+        _ssa_kernel_packed if packed else _ssa_kernel,
         block_q=block_q,
         block_k=block_k,
         n_q=n_q,
@@ -167,14 +202,15 @@ def build_ssa_pallas(
         num_kv_tiles=num_kv_tiles,
     )
 
+    d_in = d_pad // 32 if packed else d_pad
     return pl.pallas_call(
         kernel,
         grid=(bsz, num_q_tiles, num_kv_tiles),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # seed (1,1)
-            pl.BlockSpec((1, block_q, d_pad), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, d_pad), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d_pad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_q, d_in), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d_in), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d_in), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d_pad), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, n_q_pad, d_pad), out_dtype),

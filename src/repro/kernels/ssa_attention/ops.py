@@ -75,9 +75,6 @@ def _recompute_s(q, k, seed, causal, window, block_q, block_k):
     )
 
 
-@functools.partial(
-    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
-)
 def ssa_attention(
     q: jax.Array,
     k: jax.Array,
@@ -88,8 +85,81 @@ def ssa_attention(
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
+    *,
+    packed: bool = False,
+    d_k: Optional[int] = None,
 ) -> jax.Array:
-    """Fused SSA attention.  q: (B, N_q, D_K) 0/1 spikes; k/v: (B, N_kv, D_K).
+    """Fused SSA attention; dense spikes by default, bit-planes with
+    ``packed=True``.
+
+    Dense: q (B, N_q, D_K) 0/1 spikes, k/v (B, N_kv, D_K); differentiable
+    (STE custom VJP).  Packed: q/k/v are uint32 bit-planes of shape
+    (B, N, ceil(D_K/32)) from ``repro.bitpack.pack_spikes`` and ``d_k`` must
+    be given; HBM traffic is 1 bit/spike, words unpack to MXU tiles in VMEM,
+    and the output (dense 0/1 spikes, (B, N_q, D_K)) is bit-identical to the
+    dense path for the same seed.  The packed path is inference-only.
+    """
+    if not packed:
+        return _ssa_attention_dense(
+            q, k, v, seed, causal, window, block_q, block_k, interpret
+        )
+    if d_k is None:
+        raise ValueError("packed=True requires d_k (unpadded feature size)")
+    from repro.bitpack import packed_width
+
+    for name, arr in (("q", q), ("k", k), ("v", v)):
+        if arr.dtype != jnp.uint32:
+            raise TypeError(
+                f"packed {name} must be uint32 words, got {arr.dtype}"
+            )
+        if arr.shape[-1] != packed_width(d_k):
+            raise ValueError(
+                f"packed {name} width {arr.shape[-1]} inconsistent with "
+                f"d_k={d_k} (expected {packed_width(d_k)})"
+            )
+    bsz, n_q, _ = q.shape
+    n_kv = k.shape[1]
+    n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    w_pad = d_pad // 32
+    qp = _pad3(q, n_q_pad, w_pad)
+    kp = _pad3(k, n_kv_pad, w_pad)
+    vp = _pad3(v, n_kv_pad, w_pad)
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    call = build_ssa_pallas(
+        bsz=bsz,
+        n_q=n_q,
+        n_kv=n_kv,
+        d_k=d_k,
+        n_q_pad=n_q_pad,
+        n_kv_pad=n_kv_pad,
+        d_pad=d_pad,
+        out_dtype=jnp.float32,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+        packed=True,
+    )
+    out = call(seed_arr, qp, kp, vp)
+    return out[:, :n_q, :d_k]
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
+)
+def _ssa_attention_dense(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seed: jax.Array,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dense fused SSA.  q: (B, N_q, D_K) 0/1 spikes; k/v: (B, N_kv, D_K).
 
     ``seed``: uint32 scalar array — vary per (layer, time step, train step).
     Returns (B, N_q, D_K) 0/1 spikes, bit-exact vs. `ref.ssa_reference`.
@@ -121,7 +191,9 @@ def ssa_attention(
 
 
 def _ssa_fwd(q, k, v, seed, causal, window, block_q, block_k, interpret):
-    out = ssa_attention(q, k, v, seed, causal, window, block_q, block_k, interpret)
+    out = _ssa_attention_dense(
+        q, k, v, seed, causal, window, block_q, block_k, interpret
+    )
     return out, (q, k, v, seed)
 
 
@@ -146,4 +218,4 @@ def _ssa_bwd(causal, window, block_q, block_k, interpret, res, g):
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dseed
 
 
-ssa_attention.defvjp(_ssa_fwd, _ssa_bwd)
+_ssa_attention_dense.defvjp(_ssa_fwd, _ssa_bwd)

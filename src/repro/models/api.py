@@ -7,9 +7,37 @@ from __future__ import annotations
 
 from repro.configs.base import ModelConfig
 
+_SPIKE_STORAGE = ("dense", "packed")
+# families served by models.transformer.DecoderLM (the only model with a
+# packed-cache implementation); keep in sync with build_model's dispatch
+_DECODER_LM_FAMILIES = ("dense", "moe", "vlm")
+
+
+def validate_config(cfg: ModelConfig) -> None:
+    """Cross-field invariants that individual dataclasses can't express."""
+    a = cfg.attention
+    if a.spike_storage not in _SPIKE_STORAGE:
+        raise ValueError(
+            f"attention.spike_storage must be one of {_SPIKE_STORAGE}, "
+            f"got {a.spike_storage!r}"
+        )
+    if a.spike_storage == "packed" and a.impl != "ssa":
+        raise ValueError(
+            "attention.spike_storage='packed' stores the KV cache as uint32 "
+            "spike bit-planes and is only meaningful for the spiking "
+            f"attention path (impl='ssa'); got impl={a.impl!r}"
+        )
+    if a.spike_storage == "packed" and cfg.family not in _DECODER_LM_FAMILIES:
+        raise ValueError(
+            "packed spike storage is implemented for the decoder-LM cache "
+            "(families dense/moe/vlm); other families would silently build "
+            f"dense caches — got family={cfg.family!r}"
+        )
+
 
 def build_model(cfg: ModelConfig):
-    if cfg.family in ("dense", "moe", "vlm"):
+    validate_config(cfg)
+    if cfg.family in _DECODER_LM_FAMILIES:
         from .transformer import DecoderLM
 
         return DecoderLM(cfg)

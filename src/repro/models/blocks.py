@@ -253,6 +253,22 @@ def _sdpa_chunked(q, k, v, *, causal, window, softcap, kv_positions=None,
     return out.transpose(0, 2, 1, 3).astype(v.dtype)  # (B, Sq, H, hd)
 
 
+def spike_encode(x: jax.Array, t_steps: int) -> jax.Array:
+    """Rate-code real activations into a ``(T, ...)`` 0/1 spike train (eq. 4).
+
+    Deterministic and element-wise per token (the normalisation reduces over
+    the trailing feature axis only), so encoding a token once at cache-insert
+    time and encoding the whole cache every decode step produce identical
+    spikes — the property the packed spiking KV cache relies on.
+    """
+    lif = LIFParams(beta=0.9, threshold=1.0)
+    # normalise to O(1) currents so LIF rates stay informative
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + 1e-6)
+    drive = jnp.broadcast_to(jax.nn.softplus(x32), (t_steps,) + x.shape)
+    return lif_layer(drive, lif)
+
+
 def _spiking_qkv(q, k, v, t_steps: int):
     """Rate-code real-valued q/k/v into T-step spike trains via LIF.
 
@@ -260,16 +276,55 @@ def _spiking_qkv(q, k, v, t_steps: int):
     binary streams; constant-current integration over T steps yields rate
     coding of the (normalised) activations.
     """
-    lif = LIFParams(beta=0.9, threshold=1.0)
+    return (
+        spike_encode(q, t_steps),
+        spike_encode(k, t_steps),
+        spike_encode(v, t_steps),
+    )
 
-    def enc(x):
-        # normalise to O(1) currents so LIF rates stay informative
-        x32 = x.astype(jnp.float32)
-        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + 1e-6)
-        drive = jnp.broadcast_to(jax.nn.softplus(x32), (t_steps,) + x.shape)
-        return lif_layer(drive, lif)
 
-    return enc(q), enc(k), enc(v)
+def _cache_write(
+    cache: dict,
+    updates: dict,
+    *,
+    cache_index,
+    layer_window: Optional[int],
+    batch: int,
+) -> dict:
+    """Write per-token ``updates`` ({leaf: (B, s, ...) array}) into a KV
+    cache whose leaves all carry the sequence axis at position 1 — shared by
+    the dense ({"k","v","pos"}) and packed ({"ks","vs","pos"}) layouts.
+
+    decode (``cache_index`` given): scalar index = one shared write offset
+    (lock-step decode), (B,)-shaped = per-slot offsets (continuous-batching
+    engine); rolling-window caches wrap the offset.  prefill
+    (``cache_index is None``): fill [0:s], keeping the tail when the update
+    overflows the window.
+    """
+    s_cache = cache["pos"].shape[1]
+    new = {}
+    if cache_index is not None:
+        write = cache_index % s_cache if layer_window is not None else cache_index
+        per_row = jnp.ndim(write) == 1
+        rows = jnp.arange(batch)
+        for name, upd in updates.items():
+            leaf = cache[name]
+            if per_row:
+                new[name] = leaf.at[rows, write].set(upd[:, 0].astype(leaf.dtype))
+            else:
+                start = (0, write) + (0,) * (leaf.ndim - 2)
+                new[name] = jax.lax.dynamic_update_slice(
+                    leaf, upd.astype(leaf.dtype), start
+                )
+    else:
+        for name, upd in updates.items():
+            leaf = cache[name]
+            if upd.shape[1] >= s_cache:
+                upd = upd[:, -s_cache:]
+            new[name] = jax.lax.dynamic_update_slice(
+                leaf, upd.astype(leaf.dtype), (0,) * leaf.ndim
+            )
+    return new
 
 
 def attention_apply(
@@ -313,60 +368,78 @@ def attention_apply(
     new_cache = None
     kv_positions = None
     q_positions = None
+    # packed spiking KV cache ({"ks","vs","pos"}): decode reads these
+    # uint32 bit-planes instead of re-encoding real-valued K/V
+    packed_kv = None
     # M-RoPE carries (3, B, S) position ids; masking/caching uses the
     # temporal stream (index 0)
     pos_1d = positions[0] if positions.ndim == 3 else positions
-    if cache is not None:
-        s_cache = cache["k"].shape[1]
-        if cache_index is not None:
-            # decode: append the new k/v at the rolling/linear write offset.
-            # scalar cache_index = one shared offset (lock-step decode);
-            # (B,)-shaped = per-slot offsets (continuous-batching engine).
-            write = cache_index % s_cache if layer_window is not None else cache_index
-            if jnp.ndim(write) == 1:  # per-row scatter
-                rows = jnp.arange(b)
-                ck = cache["k"].at[rows, write].set(k[:, 0].astype(cache["k"].dtype))
-                cv = cache["v"].at[rows, write].set(v[:, 0].astype(cache["v"].dtype))
-                cpos = cache["pos"].at[rows, write].set(
-                    pos_1d[:, 0].astype(jnp.int32)
-                )
-            else:
-                ck = jax.lax.dynamic_update_slice(
-                    cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0)
-                )
-                cv = jax.lax.dynamic_update_slice(
-                    cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0)
-                )
-                cpos = jax.lax.dynamic_update_slice(
-                    cache["pos"],
-                    jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s)),
-                    (0, write),
-                )
-            new_cache = {"k": ck, "v": cv, "pos": cpos}
-            k, v = ck, cv
-            kv_positions = cpos
-            q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
-        else:
-            # prefill: fill cache[0:s]; rolling-window caches keep the tail
-            if s >= s_cache:
-                k_st, v_st = k[:, -s_cache:], v[:, -s_cache:]
-                p_st = pos_1d[:, -s_cache:]
-            else:
-                k_st, v_st, p_st = k, v, pos_1d
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k_st.astype(cache["k"].dtype), (0, 0, 0, 0)
-            )
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v_st.astype(cache["v"].dtype), (0, 0, 0, 0)
-            )
-            cpos = jax.lax.dynamic_update_slice(
-                cache["pos"], p_st.astype(jnp.int32), (0, 0)
-            )
-            new_cache = {"k": ck, "v": cv, "pos": cpos}
+    if cache is not None and "ks" in cache:
+        # --- packed spiking KV cache (spike_storage="packed", SSA only) ---
+        # Spike planes are packed along head_dim at kv-head granularity:
+        # leaves (B, S_cache, T, H_kv, ceil(hd/32)) uint32.  New tokens are
+        # LIF-encoded ONCE here and stored as bits; the dense path instead
+        # re-encodes the full real-valued cache every decode step.
+        from repro.bitpack import pack_spikes, unpack_spikes
 
-    groups = h_pad // a.num_kv_heads
-    k_full = _repeat_kv(k, groups)
-    v_full = _repeat_kv(v, groups)
+        t_steps = a.ssa_time_steps
+        groups_kv = h_pad // a.num_kv_heads
+        # (T, B, s, H_kv, hd) spike trains -> packed (B, s, T, H_kv, W)
+        ks_enc = spike_encode(k, t_steps)
+        vs_enc = spike_encode(v, t_steps)
+        new_cache = _cache_write(
+            cache,
+            {
+                "ks": jnp.moveaxis(pack_spikes(ks_enc), 0, 2),
+                "vs": jnp.moveaxis(pack_spikes(vs_enc), 0, 2),
+                "pos": jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s)),
+            },
+            cache_index=cache_index,
+            layer_window=layer_window,
+            batch=b,
+        )
+        if cache_index is not None:
+            # Decode attends over the cached spike planes.  NOTE: this XLA
+            # path unpacks them to dense activations (the fused Pallas path
+            # that consumes packed words directly in VMEM is
+            # kernels.ssa_attention packed=True); the wins realised here are
+            # cache residency (1 bit/spike in HBM) and skipping the per-step
+            # LIF re-encode of the whole cache.
+            ks_all = jnp.moveaxis(unpack_spikes(new_cache["ks"], a.head_dim), 2, 0)
+            vs_all = jnp.moveaxis(unpack_spikes(new_cache["vs"], a.head_dim), 2, 0)
+        else:
+            # prefill attention reuses the trains encoded above (over ALL s
+            # current tokens, pre-truncation) instead of re-encoding k_full —
+            # encode-then-repeat == repeat-then-encode, so still bit-identical
+            # to the dense path
+            ks_all, vs_all = ks_enc, vs_enc
+        if groups_kv > 1:
+            ks_all = jnp.repeat(ks_all, groups_kv, axis=3)
+            vs_all = jnp.repeat(vs_all, groups_kv, axis=3)
+        packed_kv = (ks_all, vs_all)  # (T, B, S, H_pad, hd)
+    elif cache is not None:
+        # decode: append the new k/v at the rolling/linear write offset;
+        # prefill: fill [0:s] (see _cache_write)
+        new_cache = _cache_write(
+            cache,
+            {
+                "k": k,
+                "v": v,
+                "pos": jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s)),
+            },
+            cache_index=cache_index,
+            layer_window=layer_window,
+            batch=b,
+        )
+        if cache_index is not None:
+            k, v = new_cache["k"], new_cache["v"]
+            kv_positions = new_cache["pos"]
+            q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
+
+    if packed_kv is None:
+        groups = h_pad // a.num_kv_heads
+        k_full = _repeat_kv(k, groups)
+        v_full = _repeat_kv(v, groups)
 
     if a.impl == "ann":
         n_kv_now = k_full.shape[1]
@@ -391,7 +464,15 @@ def attention_apply(
     else:
         # spiking path: (B,S,H,hd) -> heads folded into batch -> (T,BH,S,hd)
         t_steps = a.ssa_time_steps
-        qs, ks, vs = _spiking_qkv(q, k_full, v_full, t_steps)
+        if packed_kv is not None:
+            # K/V spike trains come straight from the packed cache (encoded
+            # once at insert); repeat-then-encode == encode-then-repeat and
+            # the LIF encoder is per-token, so this is bit-identical to the
+            # dense re-encoding path for the same RNG.
+            qs = spike_encode(q, t_steps)
+            ks, vs = packed_kv
+        else:
+            qs, ks, vs = _spiking_qkv(q, k_full, v_full, t_steps)
 
         def fold(z):  # (T,B,S,H,hd) -> (T, B*H, S, hd)
             tt, bb, ss, hh, dd = z.shape

@@ -346,15 +346,41 @@ class DecoderLM:
         return base
 
     def cache_specs(self, shape: ShapeConfig) -> list:
-        """Stacked KV-cache ShapeDtypeStructs per pattern slot."""
+        """Stacked KV-cache ShapeDtypeStructs per pattern slot.
+
+        ``spike_storage="packed"`` (SSA impl) swaps the real-valued k/v
+        leaves for uint32 spike bit-planes — (steps, B, S, T, H_kv,
+        ceil(hd/32)) — 1 bit per cached spike instead of a 16/32-bit lane
+        (see repro.bitpack / docs/bitpack.md)."""
         cfg = self.cfg
         a = cfg.attention
         b = shape.global_batch
         dtype = jnp.dtype(cfg.dtype)
+        packed = a.impl == "ssa" and a.spike_storage == "packed"
+        if packed:
+            from repro.bitpack import packed_width
+
+            words = packed_width(a.head_dim)
         slots = []
         for s_idx in range(len(self.pattern)):
             w = self._slot_window(s_idx)
             s_cache = min(w, shape.seq_len) if w is not None else shape.seq_len
+            if packed:
+                plane = jax.ShapeDtypeStruct(
+                    (self.steps, b, s_cache, a.ssa_time_steps, a.num_kv_heads,
+                     words),
+                    jnp.uint32,
+                )
+                slots.append(
+                    {
+                        "ks": plane,
+                        "vs": plane,
+                        "pos": jax.ShapeDtypeStruct(
+                            (self.steps, b, s_cache), jnp.int32
+                        ),
+                    }
+                )
+                continue
             slots.append(
                 {
                     "k": jax.ShapeDtypeStruct(
@@ -370,9 +396,27 @@ class DecoderLM:
 
     def init_cache(self, batch: int, seq: int) -> list:
         shape = ShapeConfig("tmp", seq, batch, "decode")
-        return jax.tree.map(
-            lambda s: jnp.full(s.shape, -1, s.dtype)
-            if s.dtype == jnp.int32
-            else jnp.zeros(s.shape, s.dtype),
-            self.cache_specs(shape),
-        )
+        a = self.cfg.attention
+        fill_u32 = None
+        if a.impl == "ssa" and a.spike_storage == "packed":
+            # Empty packed slots must hold the spike pattern the LIF encoder
+            # emits for zero input (enc(0) fires — softplus(0) > 0 drives the
+            # membrane), because the dense path re-encodes its zero-filled
+            # real cache every step.  Packing enc(0) keeps the two storage
+            # modes bit-identical even over never-written slots.
+            from repro.bitpack import pack_spikes
+            from .blocks import spike_encode
+
+            zero = jnp.zeros((1, 1, a.num_kv_heads, a.head_dim), jnp.float32)
+            zp = pack_spikes(spike_encode(zero, a.ssa_time_steps))
+            # (T, 1, 1, H_kv, W) -> (1, 1, T, H_kv, W), broadcast per leaf
+            fill_u32 = jnp.moveaxis(zp, 0, 2)
+
+        def init_leaf(s):
+            if s.dtype == jnp.int32:
+                return jnp.full(s.shape, -1, s.dtype)
+            if s.dtype == jnp.uint32 and fill_u32 is not None:
+                return jnp.broadcast_to(fill_u32[None], s.shape)
+            return jnp.zeros(s.shape, s.dtype)
+
+        return jax.tree.map(init_leaf, self.cache_specs(shape))

@@ -83,11 +83,13 @@ class ServingEngine:
             self.key, _ = jax.random.split(self.key)
 
     # ------------------------------------------------------------------
-    def step(self):
-        """One engine tick: admit + one fused decode step for all slots."""
+    def step(self) -> list[Request]:
+        """One engine tick: admit + one fused decode step for all slots.
+
+        Returns the requests that finished on this tick."""
         self._admit()
         if not self.active:
-            return
+            return []
         tokens = np.zeros((self.b, 1), np.int32)
         for slot, req in self.active.items():
             tokens[slot, 0] = req.out_tokens[-1]
@@ -99,7 +101,7 @@ class ServingEngine:
         logits, self.cache = self._decode(self.params, batch, self.cache, idx)
         self.steps_run += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        finished = []
+        finished: list[Request] = []
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
             req.out_tokens.append(tok)
@@ -110,18 +112,28 @@ class ServingEngine:
                 or self.slot_pos[slot] >= self.max_seq - 1
             ):
                 req.done = True
-                finished.append(slot)
-        for slot in finished:
-            del self.active[slot]
+                finished.append(req)
+                del self.active[slot]
+        return finished
 
     def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
+        """Drive the engine until queue + slots drain; returns finished
+        requests in completion order."""
         done: list[Request] = []
         ticks = 0
         while (self.queue or self.active) and ticks < max_ticks:
-            before = set(self.active)
-            self.step()
+            done.extend(self.step())
             ticks += 1
         return done
+
+    # ------------------------------------------------------------------
+    def kv_cache_nbytes(self) -> int:
+        """Resident bytes of the slot KV cache (all leaves, all layers).
+
+        With ``spike_storage="packed"`` the spiking K/V planes are uint32
+        bit-planes (1 bit/spike) instead of f32/bf16 lanes — the serving-side
+        realisation of the paper's memory-access saving."""
+        return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.cache))
 
 
 def _scatter_slot(full: jax.Array, row: jax.Array, slot: int) -> jax.Array:

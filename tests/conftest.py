@@ -1,0 +1,31 @@
+"""Shared test helpers.
+
+`hypothesis_or_stubs` lets modules mix hypothesis property tests with plain
+pytest tests and still run the latter when hypothesis isn't installed (the
+container only bakes in the jax toolchain): property tests skip individually
+instead of the whole module disappearing behind importorskip.
+"""
+import pytest
+
+
+def hypothesis_or_stubs():
+    """Returns (given, settings, st); stubs mark tests skipped if hypothesis
+    is missing, so non-property tests in the same module keep running."""
+    try:
+        from hypothesis import given, settings, strategies as st
+
+        return given, settings, st
+    except ModuleNotFoundError:
+        def _skip_decorator(*_args, **_kwargs):
+            def deco(fn):
+                return pytest.mark.skip(
+                    reason="hypothesis not installed (see requirements-dev.txt)"
+                )(fn)
+
+            return deco
+
+        class _AnyStrategy:
+            def __getattr__(self, _name):
+                return lambda *a, **k: None
+
+        return _skip_decorator, _skip_decorator, _AnyStrategy()

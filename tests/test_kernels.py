@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.kernels.bernoulli.ops import bernoulli_encode_kernel
 from repro.kernels.bernoulli.ref import bernoulli_reference

@@ -4,10 +4,18 @@ roofline summary.  Prints ``name,us_per_call,derived`` CSV lines.
 ``--compare-storage`` runs the dense-vs-packed spike-storage comparison
 (modeled KV decode traffic + measured cache bytes and decode latency on a
 smoke SSA model) — the in-simulator reproduction of the paper's
-memory-access-reduction claim."""
+memory-access-reduction claim.
+
+``--compare-backends`` times one decode step per attention backend
+(ssa-xla / ssa-fused / ssa-fused-packed) on the smoke config, pairs it with
+the modeled bytes-moved for the backend's KV dataflow, and appends a JSON
+record to ``benchmarks/perf_trajectory.jsonl`` so the per-PR perf history
+accumulates."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 
@@ -175,6 +183,83 @@ def bench_storage_compare():
     print(f"kv_storage_measured/ratio,0,cache_bytes_dense_over_packed={ratio:.2f}")
 
 
+def bench_backend_compare(record_path: str | None = None):
+    """Decode-step time + modeled bytes-moved per attention backend.
+
+    Off-TPU the fused backends run the Pallas kernels in interpret mode, so
+    their *latency* here is a correctness probe, not a perf number (the CSV
+    marks it); bytes-moved comes from the traffic model and describes the
+    fused-kernel dataflow each backend realises.  One JSON record per
+    backend is appended to ``benchmarks/perf_trajectory.jsonl``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.attention import default_interpret
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+
+    from .energy_model import kv_decode_traffic
+
+    base = with_overrides(get_smoke_config("codeqwen15_7b"), attention__impl="ssa")
+    variants = {
+        "ssa-xla": with_overrides(base, attention__backend="xla"),
+        "ssa-fused": with_overrides(base, attention__backend="fused"),
+        "ssa-fused-packed": with_overrides(
+            base, attention__backend="fused", attention__spike_storage="packed"
+        ),
+    }
+    b, n_ctx, pos = 4, 64, 8
+    interpret = default_interpret()
+    if record_path is None:
+        record_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "perf_trajectory.jsonl"
+        )
+    params = build_model(variants["ssa-xla"]).init(jax.random.PRNGKey(0))
+    records = []
+    for name, cfg in variants.items():
+        a = cfg.attention
+        model = build_model(cfg)
+        cache = model.init_cache(b, n_ctx)
+        nbytes = sum(int(l.nbytes) for l in jax.tree.leaves(cache))
+        batch = {
+            "tokens": jnp.zeros((b, 1), jnp.int32),
+            "positions": jnp.full((b, 1), pos, jnp.int32),
+        }
+        idx = jnp.full((b,), pos, jnp.int32)
+        step = jax.jit(lambda p, bt, c, i, m=model: m.decode_step(p, bt, c, i))
+        step(params, batch, cache, idx)[0].block_until_ready()
+        us = _bench(
+            lambda: step(params, batch, cache, idx)[0].block_until_ready(),
+            iters=3, warmup=1,
+        )
+        storage = "packed" if a.spike_storage == "packed" else "dense"
+        traffic = kv_decode_traffic(
+            n_ctx, a.num_kv_heads, a.head_dim, a.ssa_time_steps, storage, 4
+        )
+        rec = {
+            "bench": "backend_compare",
+            "backend": name,
+            "decode_us": round(us, 1),
+            "interpret_mode": interpret,
+            "cache_bytes": nbytes,
+            "modeled_bytes_moved_per_layer": traffic["bytes_moved"],
+            "batch": b,
+            "n_ctx": n_ctx,
+            "ts": time.time(),
+        }
+        records.append(rec)
+        print(
+            f"backend_compare/{name},{us:.0f},"
+            f"cache_bytes={nbytes};moved_B={traffic['bytes_moved']}"
+            f";interpret={interpret}"
+        )
+    with open(record_path, "a") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    print(f"backend_compare/records,0,appended={len(records)};path={record_path}")
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -182,9 +267,18 @@ def main() -> None:
         action="store_true",
         help="only run the dense-vs-packed spike-storage comparison",
     )
+    parser.add_argument(
+        "--compare-backends",
+        action="store_true",
+        help="only run the attention-backend decode comparison "
+        "(appends to benchmarks/perf_trajectory.jsonl)",
+    )
     args = parser.parse_args()
     if args.compare_storage:
         bench_storage_compare()
+        return
+    if args.compare_backends:
+        bench_backend_compare()
         return
     bench_table2_energy()
     bench_table3_latency()

@@ -7,6 +7,8 @@ handling.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed
+      PYTHONPATH=src python examples/serve_lm.py --impl ssa --backend fused \
+          --spike-storage packed --temperature 0.8 --top-k 40
 """
 import argparse
 import time
@@ -16,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config, with_overrides
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingEngine, make_sampler
 
 
 def main():
@@ -30,6 +32,13 @@ def main():
     ap.add_argument("--spike-storage", default=None, choices=["dense", "packed"],
                     help="KV-cache spike storage (packed = uint32 bit-planes; "
                          "ssa impl only)")
+    ap.add_argument("--backend", default=None, choices=["auto", "xla", "fused"],
+                    help="attention backend (fused = Pallas kernels; "
+                         "interpret-mode and slow on CPU)")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="sample with this temperature instead of greedy argmax")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="restrict sampling to the k highest logits")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -37,9 +46,18 @@ def main():
         cfg = with_overrides(cfg, attention__impl=args.impl)
     if args.spike_storage:
         cfg = with_overrides(cfg, attention__spike_storage=args.spike_storage)
+    if args.backend:
+        cfg = with_overrides(cfg, attention__backend=args.backend)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, num_slots=args.slots, max_seq=args.max_seq)
+    sampler = None
+    if args.temperature is not None or args.top_k is not None:
+        sampler = make_sampler(
+            temperature=args.temperature if args.temperature is not None else 1.0,
+            top_k=args.top_k,
+        )
+    engine = ServingEngine(model, params, num_slots=args.slots,
+                           max_seq=args.max_seq, sampler=sampler)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -69,7 +87,10 @@ def main():
           f"{total_tokens} tokens in {ticks} engine ticks ({dt:.1f}s, "
           f"{total_tokens / max(dt, 1e-9):.1f} tok/s on CPU)")
     print(f"kv cache: {engine.kv_cache_nbytes() / 2**20:.2f} MiB "
-          f"(impl={cfg.attention.impl}, storage={cfg.attention.spike_storage})")
+          f"(impl={cfg.attention.impl}, storage={cfg.attention.spike_storage}, "
+          f"backend={cfg.attention.backend})")
+    print(f"prefill compiles: {engine.num_prefill_compiles} "
+          f"(power-of-two length buckets)")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}...")
 

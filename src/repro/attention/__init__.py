@@ -1,0 +1,51 @@
+"""Attention backend-dispatch subsystem.
+
+``models`` and ``serving`` never call attention math directly: the
+orchestration layer (projections / RoPE / cache writes / spike encoding)
+builds an :class:`AttentionInvocation` and hands it to the backend that
+:func:`resolve_backend` selects from ``AttentionConfig.impl`` /
+``.backend`` / ``.spike_storage`` and the call mode.  The kernel ``ops``
+modules are the backend implementations' only entry points.
+
+Importing this package registers the built-in backends:
+``ann-xla``, ``ssa-xla``, ``ssa-fused``, ``ssa-fused-packed``,
+``spikformer-xla`` (see docs/attention_backends.md).
+"""
+from .base import (
+    MODES,
+    AttentionBackend,
+    AttentionInvocation,
+    available_backends,
+    default_interpret,
+    derive_step_seeds,
+    fold_heads,
+    get_backend,
+    register_backend,
+    resolve_backend,
+    resolve_backend_name,
+    unfold_heads,
+)
+from .encoding import spike_encode
+
+# built-in backend registration (import side effect, order irrelevant)
+from . import ann_xla as _ann_xla            # noqa: F401
+from . import spikformer_xla as _spikformer  # noqa: F401
+from . import ssa_fused as _ssa_fused        # noqa: F401
+from . import ssa_fused_packed as _ssa_fp    # noqa: F401
+from . import ssa_xla as _ssa_xla            # noqa: F401
+
+__all__ = [
+    "MODES",
+    "AttentionBackend",
+    "AttentionInvocation",
+    "available_backends",
+    "default_interpret",
+    "derive_step_seeds",
+    "fold_heads",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+    "resolve_backend_name",
+    "spike_encode",
+    "unfold_heads",
+]

@@ -1,0 +1,152 @@
+"""``ann-xla`` backend: conventional softmax attention (eq. 1) in XLA.
+
+Hosts the two sdpa variants that previously lived inline in
+``models.blocks.attention_apply``: a vanilla masked softmax and the
+blockwise online-softmax ("flash") recurrence selected by
+``AttentionConfig.flash_chunk``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import AttentionInvocation, register_backend
+
+__all__ = ["sdpa", "sdpa_chunked", "AnnXlaBackend"]
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def sdpa(q, k, v, *, causal, window, softcap, kv_positions=None, q_positions=None):
+    """Batched softmax attention on (B, S, H, hd) with f32 logits."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    n_q, n_kv = q.shape[1], k.shape[1]
+    if q_positions is None:
+        q_pos = jnp.arange(n_q) + (n_kv - n_q)
+    else:
+        q_pos = q_positions
+    if kv_positions is None:
+        kv_pos = jnp.arange(n_kv)
+    else:
+        kv_pos = kv_positions
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    # kv validity (rolling buffers mark empty slots with negative positions)
+    m &= kp >= 0
+    while m.ndim < logits.ndim:
+        m = m[:, None] if m.ndim > 2 else m[None]
+    logits = jnp.where(m, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def sdpa_chunked(q, k, v, *, causal, window, softcap, kv_positions=None,
+                 q_positions=None, chunk=1024):
+    """Blockwise online-softmax attention — the S x S score matrix is never
+    materialised (flash-attention recurrence; the TPU transplant of the
+    paper's 'scores stay in the SAU array' dataflow).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, H, hd); scans over Skv in ``chunk``
+    tiles carrying (running max, running sum, weighted accumulator).
+    """
+    b, n_q, h, hd = q.shape
+    n_kv = k.shape[1]
+    nk = n_kv // chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    q32 = q.astype(jnp.float32)
+
+    if q_positions is None:
+        q_pos = jnp.broadcast_to(jnp.arange(n_q) + (n_kv - n_q), (b, n_q))
+    else:
+        q_pos = jnp.broadcast_to(q_positions, (b, n_q))
+    if kv_positions is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(n_kv), (b, n_kv))
+    else:
+        kv_pos = jnp.broadcast_to(kv_positions, (b, n_kv))
+
+    # (nk, B, chunk, ...) scan layout
+    kc = k.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, nk, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_t, v_t, kp_t = inp
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q32, k_t.astype(jnp.float32)
+        ) * scale
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        mask = jnp.ones((b, n_q, chunk), bool)
+        qp = q_pos[:, :, None]
+        kp = kp_t[:, None, :]
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        mask &= kp >= 0
+        logits = jnp.where(mask[:, None], logits, jnp.float32(-1e30))
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_t.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, n_q), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, n_q), jnp.float32)
+    acc0 = jnp.zeros((b, h, n_q, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(v.dtype)  # (B, Sq, H, hd)
+
+
+class AnnXlaBackend:
+    name = "ann-xla"
+
+    def supports(self, a, mode: str) -> bool:
+        return a.impl == "ann"
+
+    def apply(self, inv: AttentionInvocation) -> jax.Array:
+        a = inv.a
+        k_full = _repeat_kv(inv.k, inv.groups)
+        v_full = _repeat_kv(inv.v, inv.groups)
+        n_kv_now = k_full.shape[1]
+        use_flash = (
+            a.flash_chunk is not None
+            and n_kv_now > a.flash_chunk
+            and n_kv_now % a.flash_chunk == 0
+        )
+        fn = sdpa_chunked if use_flash else sdpa
+        kwargs = {"chunk": a.flash_chunk} if use_flash else {}
+        return fn(
+            inv.q,
+            k_full,
+            v_full,
+            causal=inv.causal,
+            window=inv.window,
+            softcap=inv.softcap,
+            kv_positions=inv.kv_positions,
+            q_positions=inv.q_positions,
+            **kwargs,
+        )
+
+
+register_backend(AnnXlaBackend())

@@ -1,0 +1,232 @@
+"""Attention backend protocol, registry, and selection rules.
+
+The model layer (``models.blocks.attention_apply``) is thin orchestration:
+projections, RoPE, KV-cache writes, and spike encoding.  Everything after
+that — eq. 1 softmax, eq. 5/6 stochastic spiking attention, the Spikformer
+baseline — is a registered :class:`AttentionBackend`, selected per call by
+:func:`resolve_backend` from ``AttentionConfig.impl``/``.backend``/
+``.spike_storage`` and the call mode.
+
+Registered backends (see docs/attention_backends.md):
+
+  * ``ann-xla``          — softmax attention (vanilla / flash-chunked XLA)
+  * ``ssa-xla``          — eq. 5/6 in plain XLA with the fused kernel's
+                           counter RNG (bit-identical to ``ssa-fused``)
+  * ``ssa-fused``        — fused Pallas SSA kernel on dense spike lanes
+  * ``ssa-fused-packed`` — fused Pallas SSA kernel reading uint32 bit-planes
+                           (packed KV decode; no unpack in the hot loop)
+  * ``spikformer-xla``   — Spikformer baseline [18]
+
+Seed derivation: every SSA backend draws its per-time-step uint32 counter
+seeds with :func:`derive_step_seeds` from the layer rng (which the
+transformer scan splits per layer), so the mapping ``(rng, layer, t_step) ->
+seed`` is identical across backends, trace-stable under scan/vmap, and
+reproducible between prefill and decode.  Same rng => same spikes on every
+backend; that is what makes backend choice a pure performance knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+
+__all__ = [
+    "MODES",
+    "AttentionInvocation",
+    "AttentionBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "resolve_backend_name",
+    "resolve_backend",
+    "derive_step_seeds",
+    "fold_heads",
+    "unfold_heads",
+    "default_interpret",
+]
+
+MODES = ("train", "prefill", "decode")
+
+# Tile geometry shared by every SSA backend.  The counter-RNG index scheme
+# strides by the *padded* dims, so all backends must agree on these for
+# bit-identical sampling (see kernels.ssa_attention.ref.padded_dims).
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+@dataclasses.dataclass
+class AttentionInvocation:
+    """Everything a backend may consume, prepared by the orchestration layer.
+
+    Dense activations are post-RoPE; ``k``/``v`` stay at KV-head granularity
+    (``groups`` = query heads per kv head, the backend repeats as needed).
+    Spiking callers provide pre-encoded trains (``spike_*``, shape
+    ``(T, B, S, H, hd)``) and/or packed uint32 bit-planes (``packed_*``,
+    shape ``(B, S, T, H_kv, ceil(hd/32))`` — the packed KV-cache layout).
+    Fields irrelevant to the selected backend stay ``None``.
+    """
+
+    a: AttentionConfig
+    mode: str                                 # train | prefill | decode
+    q: jax.Array                              # (B, S, H_pad, hd)
+    k: Optional[jax.Array]                    # (B, S_kv, H_kv, hd)
+    v: Optional[jax.Array]
+    groups: int
+    causal: bool
+    window: Optional[int] = None
+    softcap: Optional[float] = None
+    rng: Optional[jax.Array] = None
+    kv_positions: Optional[jax.Array] = None  # ann decode masking
+    q_positions: Optional[jax.Array] = None
+    spike_q: Optional[jax.Array] = None       # (T, B, S, H_pad, hd)
+    spike_k: Optional[jax.Array] = None       # (T, B, S_kv, H_kv, hd)
+    spike_v: Optional[jax.Array] = None
+    packed_k: Optional[jax.Array] = None      # (B, S_kv, T, H_kv, W) uint32
+    packed_v: Optional[jax.Array] = None
+
+
+@runtime_checkable
+class AttentionBackend(Protocol):
+    """One registered attention implementation."""
+
+    name: str
+
+    def supports(self, a: AttentionConfig, mode: str) -> bool:
+        """Whether this backend can serve ``(config, mode)``."""
+        ...
+
+    def apply(self, inv: AttentionInvocation) -> jax.Array:
+        """Run attention; returns real-valued (B, S, H_pad, hd) output
+        (rate-decoded over T for spiking backends)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, AttentionBackend] = {}
+
+
+def register_backend(backend: AttentionBackend) -> AttentionBackend:
+    """Register (or override) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+
+def resolve_backend_name(
+    a: AttentionConfig, mode: str, platform: Optional[str] = None
+) -> str:
+    """Map (config, mode, platform) -> backend name.
+
+    ``a.backend``: ``"xla"`` forces the XLA reference implementations,
+    ``"fused"`` forces the Pallas kernels (interpret-mode on CPU), ``"auto"``
+    picks fused on TPU and XLA elsewhere.  With ``spike_storage="packed"``
+    the fused decode path consumes the uint32 KV bit-planes directly
+    (``ssa-fused-packed``); every other (impl, mode) cell has exactly one
+    implementation per xla/fused choice.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    choice = getattr(a, "backend", "auto")
+    if choice not in ("auto", "xla", "fused"):
+        raise ValueError(
+            f"attention.backend must be 'auto', 'xla' or 'fused', got {choice!r}"
+        )
+    if a.impl == "ann":
+        if choice == "fused":
+            raise ValueError(
+                "attention.backend='fused' requires impl='ssa' (the fused "
+                f"Pallas kernels implement stochastic spiking attention); "
+                f"got impl={a.impl!r}"
+            )
+        return "ann-xla"
+    if a.impl == "spikformer":
+        if choice == "fused":
+            raise ValueError(
+                "attention.backend='fused' requires impl='ssa'; "
+                f"got impl={a.impl!r}"
+            )
+        return "spikformer-xla"
+    if a.impl != "ssa":
+        raise ValueError(f"unknown attention impl {a.impl!r}")
+    if platform is None:
+        platform = jax.default_backend()
+    use_fused = choice == "fused" or (choice == "auto" and platform == "tpu")
+    if not use_fused:
+        return "ssa-xla"
+    if mode == "decode" and a.spike_storage == "packed":
+        return "ssa-fused-packed"
+    return "ssa-fused"
+
+
+def resolve_backend(
+    a: AttentionConfig, mode: str, platform: Optional[str] = None
+) -> AttentionBackend:
+    name = resolve_backend_name(a, mode, platform)
+    backend = get_backend(name)
+    if not backend.supports(a, mode):
+        raise ValueError(
+            f"backend {name!r} does not support (impl={a.impl!r}, "
+            f"mode={mode!r}, spike_storage={a.spike_storage!r})"
+        )
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def derive_step_seeds(rng: Optional[jax.Array], t_steps: int) -> jax.Array:
+    """(T,) uint32 counter-RNG seeds for the SSA time steps.
+
+    The single place seeds are derived: the transformer scan already splits
+    ``rng`` per layer, so seed ``t`` is a pure function of (rng, layer,
+    t_step).  All SSA backends call this, which is what makes xla / fused /
+    fused-packed sample identical spikes for the same rng.
+    """
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    return jax.random.bits(rng, (t_steps,), jnp.uint32)
+
+
+def fold_heads(z: jax.Array) -> jax.Array:
+    """(T, B, S, H, hd) -> (T, B*H, S, hd): heads become batch rows (one
+    counter-RNG stream per head)."""
+    t, b, s, h, d = z.shape
+    return z.transpose(0, 1, 3, 2, 4).reshape(t, b * h, s, d)
+
+
+def unfold_heads(z: jax.Array, b: int, h: int) -> jax.Array:
+    """(B*H, S, hd) -> (B, S, H, hd) (inverse of one fold_heads slice)."""
+    bh, s, d = z.shape
+    return z.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels need interpret mode off-TPU (the CPU CI fallback)."""
+    return jax.default_backend() != "tpu"

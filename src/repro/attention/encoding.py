@@ -1,0 +1,30 @@
+"""Rate-coding front end shared by the spiking backends and the KV cache.
+
+Moved out of ``models.blocks`` so the attention package never imports the
+model layer (dependency direction: models -> attention -> kernels/core).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, lif_layer
+
+__all__ = ["spike_encode"]
+
+
+def spike_encode(x: jax.Array, t_steps: int) -> jax.Array:
+    """Rate-code real activations into a ``(T, ...)`` 0/1 spike train (eq. 4).
+
+    Deterministic and element-wise per token (the normalisation reduces over
+    the trailing feature axis only), so encoding a token once at cache-insert
+    time and encoding the whole cache every decode step produce identical
+    spikes — the property the packed spiking KV cache relies on.  It also
+    means encode-then-repeat == repeat-then-encode for GQA head groups.
+    """
+    lif = LIFParams(beta=0.9, threshold=1.0)
+    # normalise to O(1) currents so LIF rates stay informative
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + 1e-6)
+    drive = jnp.broadcast_to(jax.nn.softplus(x32), (t_steps,) + x.shape)
+    return lif_layer(drive, lif)

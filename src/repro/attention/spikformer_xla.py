@@ -1,0 +1,35 @@
+"""``spikformer-xla`` backend: the Spikformer baseline [18] over spike trains.
+
+Deterministic (no sampling stage — integer score matmuls re-binarised
+through a surrogate Heaviside), so there is no fused variant to pair with;
+it exists as a registered backend so the Table-I/II comparison column runs
+through the same dispatch path as SSA.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.spikformer import spikformer_attention
+
+from .base import AttentionInvocation, register_backend
+from .spiking import folded_spike_trains, rate_decode
+
+__all__ = ["SpikformerXlaBackend"]
+
+
+class SpikformerXlaBackend:
+    name = "spikformer-xla"
+
+    def supports(self, a, mode: str) -> bool:
+        return a.impl == "spikformer"
+
+    def apply(self, inv: AttentionInvocation) -> jnp.ndarray:
+        qs, ks, vs = folded_spike_trains(inv)
+        spikes = spikformer_attention(
+            qs, ks, vs, causal=inv.causal, window=inv.window
+        )
+        b, h = inv.q.shape[0], inv.q.shape[2]
+        return rate_decode(spikes, b, h)
+
+
+register_backend(SpikformerXlaBackend())

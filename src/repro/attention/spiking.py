@@ -1,0 +1,48 @@
+"""Shared input prep for the spiking backends.
+
+All three SSA backends and the Spikformer baseline consume per-time-step
+spike matrices with heads folded into the batch axis.  This module turns an
+:class:`~repro.attention.base.AttentionInvocation` into that layout — from
+pre-encoded dense trains or, for the XLA fallback over a packed KV cache, by
+unpacking the uint32 bit-planes (the fused packed backend never calls this
+for K/V; it keeps the words packed all the way to VMEM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import AttentionInvocation, fold_heads
+
+__all__ = ["folded_spike_trains", "rate_decode"]
+
+
+def folded_spike_trains(inv: AttentionInvocation, *, unpack_kv: bool = True):
+    """Returns (qs, ks, vs) as (T, B*H_pad, S, hd) 0/1 trains."""
+    if inv.spike_q is None:
+        raise ValueError("spiking backend invoked without spike_q train")
+    qs = fold_heads(inv.spike_q)
+    if inv.spike_k is not None:
+        ks5, vs5 = inv.spike_k, inv.spike_v
+    elif inv.packed_k is not None and unpack_kv:
+        from repro.bitpack import unpack_spikes
+
+        hd = inv.q.shape[-1]
+        # (B, S, T, H_kv, W) planes -> (T, B, S, H_kv, hd) trains
+        ks5 = jnp.moveaxis(unpack_spikes(inv.packed_k, hd), 2, 0)
+        vs5 = jnp.moveaxis(unpack_spikes(inv.packed_v, hd), 2, 0)
+    else:
+        raise ValueError("spiking backend invoked without K/V spikes")
+    if inv.groups > 1:
+        # encode-then-repeat == repeat-then-encode (per-token encoder), so
+        # GQA expansion on trains is exact
+        ks5 = jnp.repeat(ks5, inv.groups, axis=3)
+        vs5 = jnp.repeat(vs5, inv.groups, axis=3)
+    return qs, fold_heads(ks5), fold_heads(vs5)
+
+
+def rate_decode(spikes: jax.Array, b: int, h: int) -> jax.Array:
+    """(T, B*H, S, hd) spike train -> (B, S, H, hd) f32 rates (mean over T)."""
+    rate = spikes.astype(jnp.float32).mean(axis=0)
+    bh, s, d = rate.shape
+    return rate.reshape(b, h, s, d).transpose(0, 2, 1, 3)

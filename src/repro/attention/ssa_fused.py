@@ -1,0 +1,57 @@
+"""``ssa-fused`` backend: the fused Pallas SSA kernel on dense spike lanes.
+
+One kernel launch per SSA time step (T is small and static); heads are
+folded into the kernel batch axis so every head draws its own counter-RNG
+stream.  Differentiable (the kernel installs an STE custom VJP), so this is
+the training-and-serving fast path.  Off-TPU the kernel runs in interpret
+mode — slow, but bit-identical, which is how the CPU CI lane exercises it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssa_attention.ops import ssa_attention as fused_ssa_attention
+
+from .base import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    AttentionInvocation,
+    default_interpret,
+    derive_step_seeds,
+    register_backend,
+)
+from .spiking import folded_spike_trains, rate_decode
+
+__all__ = ["SsaFusedBackend"]
+
+
+class SsaFusedBackend:
+    name = "ssa-fused"
+
+    def supports(self, a, mode: str) -> bool:
+        return a.impl == "ssa"
+
+    def apply(self, inv: AttentionInvocation) -> jnp.ndarray:
+        qs, ks, vs = folded_spike_trains(inv)
+        t_steps = qs.shape[0]
+        seeds = derive_step_seeds(inv.rng, t_steps)
+        interpret = default_interpret()
+        outs = [
+            fused_ssa_attention(
+                qs[t],
+                ks[t],
+                vs[t],
+                seeds[t],
+                inv.causal,
+                inv.window,
+                DEFAULT_BLOCK_Q,
+                DEFAULT_BLOCK_K,
+                interpret,
+            )
+            for t in range(t_steps)
+        ]
+        b, h = inv.q.shape[0], inv.q.shape[2]
+        return rate_decode(jnp.stack(outs), b, h)
+
+
+register_backend(SsaFusedBackend())

@@ -1,0 +1,139 @@
+"""``ssa-xla`` backend: eq. 5/6 in plain XLA with the kernel's counter RNG.
+
+This is the fused kernel's jnp oracle made trainable: the same stateless
+counter-RNG indices and division-free comparisons as the Pallas tile body
+(``u * D_K < counts`` / ``u * visible < counts``), wrapped in a
+straight-through estimator whose cotangent scaling matches the fused
+kernel's custom VJP.  Forward outputs are therefore **bit-identical** to
+``ssa-fused`` / ``ssa-fused-packed`` for the same derived seeds, on any
+platform, which turns backend selection into a pure performance choice and
+makes cross-backend serving tests exact instead of statistical.
+
+(The historical threefry-keyed reference lives on in ``core.ssa``; it
+agrees with this path in distribution — see tests/test_attention_backends.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uniform_from_counter
+from repro.kernels.ssa_attention.kernel import SALT_A, SALT_S
+from repro.kernels.ssa_attention.ref import (
+    output_counter_idx,
+    padded_dims,
+    score_counter_idx,
+    visible_counts,
+)
+
+from .base import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    AttentionInvocation,
+    derive_step_seeds,
+    register_backend,
+)
+from .spiking import folded_spike_trains, rate_decode
+
+__all__ = ["SsaXlaBackend", "ssa_xla_attention"]
+
+
+@jax.custom_vjp
+def _ste_threshold(u_scaled, counts, inv_scale):
+    """``(u_scaled < counts)`` as f32 with STE cotangent ``g * inv_scale``.
+
+    The comparison is the kernel's division-free form (uniforms pre-scaled
+    by the normaliser), so the forward bits match the Pallas tile body for
+    *any* D_K; ``inv_scale`` restores the probability-space gradient
+    (1/D_K for eq. 5, 1/visible for eq. 6) that the fused VJP applies.
+    """
+    return (u_scaled < counts).astype(jnp.float32)
+
+
+def _ste_fwd(u_scaled, counts, inv_scale):
+    return _ste_threshold(u_scaled, counts, inv_scale), (
+        jnp.shape(u_scaled),
+        inv_scale,
+    )
+
+
+def _ste_bwd(res, g):
+    u_shape, inv_scale = res
+    du = jnp.zeros(u_shape, g.dtype)
+    return du, g * inv_scale, jnp.zeros_like(inv_scale)
+
+
+_ste_threshold.defvjp(_ste_fwd, _ste_bwd)
+
+
+def ssa_xla_attention(
+    qs: jax.Array,
+    ks: jax.Array,
+    vs: jax.Array,
+    seeds: jax.Array,
+    *,
+    causal: bool,
+    window,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """SSA over folded trains (T, B, N, D) with per-step counter seeds (T,).
+
+    Returns (T, B, N, D) 0/1 spikes, bit-identical to running the fused
+    kernel per time step with the same seeds.
+    """
+    t_steps, bsz, n_q, d_k = qs.shape
+    n_kv = ks.shape[2]
+    n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    seeds = seeds.astype(jnp.uint32).reshape(t_steps, 1, 1, 1)
+
+    # --- eq. 5: score spikes --------------------------------------------
+    counts_s = jnp.einsum(
+        "tbqd,tbkd->tbqk",
+        qs.astype(jnp.float32),
+        ks.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    qi = jnp.arange(n_q)[:, None]
+    kj = jnp.arange(n_kv)[None, :]
+    qpos = qi + (n_kv - n_q)
+    valid = jnp.ones((n_q, n_kv), dtype=bool)
+    if causal:
+        valid &= kj <= qpos
+    if window is not None:
+        valid &= kj > qpos - window
+    idx_s = score_counter_idx(bsz, n_q, n_kv, n_q_pad, n_kv_pad)[None]
+    u_s = uniform_from_counter(seeds ^ SALT_S, idx_s)
+    s = _ste_threshold(
+        u_s * jnp.float32(d_k), counts_s, jnp.float32(1.0 / d_k)
+    )
+    s = jnp.where(valid[None, None], s, 0.0)
+
+    # --- eq. 6: output spikes -------------------------------------------
+    counts_a = jnp.einsum(
+        "tbqk,tbkd->tbqd", s, vs.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    visible = visible_counts(n_q, n_kv, causal, window)[:, None]
+    idx_a = output_counter_idx(bsz, n_q, d_k, n_q_pad, d_pad)[None]
+    u_a = uniform_from_counter(seeds ^ SALT_A, idx_a)
+    return _ste_threshold(u_a * visible, counts_a, 1.0 / visible)
+
+
+class SsaXlaBackend:
+    name = "ssa-xla"
+
+    def supports(self, a, mode: str) -> bool:
+        return a.impl == "ssa"
+
+    def apply(self, inv: AttentionInvocation) -> jax.Array:
+        qs, ks, vs = folded_spike_trains(inv)
+        seeds = derive_step_seeds(inv.rng, qs.shape[0])
+        spikes = ssa_xla_attention(
+            qs, ks, vs, seeds, causal=inv.causal, window=inv.window
+        )
+        b, h = inv.q.shape[0], inv.q.shape[2]
+        return rate_decode(spikes, b, h)
+
+
+register_backend(SsaXlaBackend())

@@ -35,6 +35,15 @@ class AttentionConfig:
     #            repro.bitpack); decode reads packed words, bit-identical
     #            outputs to dense for the same seed
     spike_storage: str = "dense"      # dense | packed
+    # Attention-backend dispatch (repro.attention registry):
+    #   auto  — fused Pallas kernels on TPU, XLA reference elsewhere
+    #   xla   — force the XLA implementations (ann-xla / ssa-xla /
+    #           spikformer-xla); ssa-xla shares the fused kernel's counter
+    #           RNG, so xla vs fused is bit-identical for the same rng
+    #   fused — force the Pallas SSA kernels (impl="ssa" only; interpret
+    #           mode off-TPU); with spike_storage="packed", decode consumes
+    #           the uint32 KV bit-planes directly (ssa-fused-packed)
+    backend: str = "auto"             # auto | xla | fused
     causal: bool = True
     # --- perf knobs (hillclimb levers; defaults = paper-faithful baseline) --
     # pad query heads up to this count with zero-weight heads: exact same
@@ -183,13 +192,20 @@ class TrainConfig:
 
 
 def with_overrides(cfg, **kv):
-    """Functional config override helper (nested via ``__`` paths)."""
-    updates = {}
+    """Functional config override helper (nested via ``__`` paths).
+
+    Nested keys sharing a prefix are merged (``attention__impl=...,
+    attention__backend=...`` both apply) instead of the last one silently
+    replacing the rest.
+    """
+    updates: dict = {}
+    nested: dict[str, dict] = {}
     for key, val in kv.items():
         if "__" in key:
             head, rest = key.split("__", 1)
-            sub = getattr(cfg, head)
-            updates[head] = with_overrides(sub, **{rest: val})
+            nested.setdefault(head, {})[rest] = val
         else:
             updates[key] = val
+    for head, sub_kv in nested.items():
+        updates[head] = with_overrides(getattr(cfg, head), **sub_kv)
     return dataclasses.replace(cfg, **updates)

@@ -19,9 +19,12 @@ import jax.numpy as jnp
 
 from ..common import uniform_from_counter
 from .kernel import SALT_S, build_ssa_pallas
-from .ref import padded_dims
+from .ref import padded_dims, score_counter_idx, visible_counts
 
 __all__ = ["ssa_attention"]
+
+# name kept for callers that reach for the backward-pass internals
+_visible_counts = visible_counts
 
 
 def _pad3(x, n_to, d_to):
@@ -29,19 +32,6 @@ def _pad3(x, n_to, d_to):
     if n == n_to and d == d_to:
         return x
     return jnp.pad(x, ((0, 0), (0, n_to - n), (0, d_to - d)))
-
-
-def _visible_counts(n_q, n_kv, causal, window):
-    rpos = jnp.arange(n_q) + (n_kv - n_q)
-    if causal:
-        visible = jnp.minimum(rpos + 1, n_kv)
-        if window is not None:
-            visible = jnp.minimum(visible, window)
-    else:
-        visible = jnp.full_like(rpos, n_kv)
-        if window is not None:
-            visible = jnp.minimum(visible, window)
-    return jnp.maximum(visible, 1).astype(jnp.float32)
 
 
 def _recompute_s(q, k, seed, causal, window, block_q, block_k):
@@ -63,12 +53,7 @@ def _recompute_s(q, k, seed, causal, window, block_q, block_k):
         valid &= kj <= qpos
     if window is not None:
         valid &= kj > qpos - window
-    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
-    idx_s = (
-        b_idx * jnp.uint32((n_q_pad * n_kv_pad) % (1 << 32))
-        + qi.astype(jnp.uint32) * jnp.uint32(n_kv_pad % (1 << 32))
-        + kj.astype(jnp.uint32)
-    )
+    idx_s = score_counter_idx(bsz, n_q, n_kv, n_q_pad, n_kv_pad)
     u_s = uniform_from_counter(jnp.asarray(seed, jnp.uint32) ^ SALT_S, idx_s)
     return jnp.where(valid[None], u_s * jnp.float32(d_k) < counts_s, False).astype(
         jnp.float32

@@ -16,7 +16,14 @@ import jax.numpy as jnp
 from ..common import cdiv, uniform_from_counter
 from .kernel import SALT_A, SALT_S
 
-__all__ = ["ssa_reference", "expected_rate", "padded_dims"]
+__all__ = [
+    "ssa_reference",
+    "expected_rate",
+    "padded_dims",
+    "score_counter_idx",
+    "output_counter_idx",
+    "visible_counts",
+]
 
 
 def padded_dims(n_q: int, n_kv: int, d: int, block_q: int, block_k: int):
@@ -26,6 +33,54 @@ def padded_dims(n_q: int, n_kv: int, d: int, block_q: int, block_k: int):
         cdiv(n_kv, block_k) * block_k,
         cdiv(d, 128) * 128,
     )
+
+
+def score_counter_idx(bsz: int, n_q: int, n_kv: int, n_q_pad: int, n_kv_pad: int):
+    """Counter-RNG positions for the eq. 5 (score) Bernoulli bank.
+
+    The logical (b, i, j) index scheme the kernel tiles reproduce — one
+    uint32 counter per score lane, strided by the *padded* geometry so every
+    consumer (kernel, oracle, XLA backend, backward recompute) draws the
+    same uniforms.  Returns (bsz, n_q, n_kv) uint32.
+    """
+    qi = jnp.arange(n_q, dtype=jnp.uint32)[:, None]
+    kj = jnp.arange(n_kv, dtype=jnp.uint32)[None, :]
+    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
+    return (
+        b_idx * jnp.uint32((n_q_pad * n_kv_pad) % (1 << 32))
+        + qi * jnp.uint32(n_kv_pad % (1 << 32))
+        + kj
+    )
+
+
+def output_counter_idx(bsz: int, n_q: int, d_k: int, n_q_pad: int, d_pad: int):
+    """Counter-RNG positions for the eq. 6 (output) Bernoulli bank.
+
+    Returns (bsz, n_q, d_k) uint32 (same stride scheme as the kernel's
+    finalize step).
+    """
+    row = jnp.arange(n_q, dtype=jnp.uint32)[:, None]
+    col = jnp.arange(d_k, dtype=jnp.uint32)[None, :]
+    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
+    return (
+        b_idx * jnp.uint32((n_q_pad * d_pad) % (1 << 32))
+        + row * jnp.uint32(d_pad % (1 << 32))
+        + col
+    )
+
+
+def visible_counts(n_q: int, n_kv: int, causal: bool, window: Optional[int]):
+    """Per-query-row count of visible kv tokens (the eq. 6 normaliser)."""
+    rpos = jnp.arange(n_q) + (n_kv - n_q)
+    if causal:
+        visible = jnp.minimum(rpos + 1, n_kv)
+        if window is not None:
+            visible = jnp.minimum(visible, window)
+    else:
+        visible = jnp.full_like(rpos, n_kv)
+        if window is not None:
+            visible = jnp.minimum(visible, window)
+    return jnp.maximum(visible, 1).astype(jnp.float32)
 
 
 def ssa_reference(
@@ -61,12 +116,7 @@ def ssa_reference(
     if window is not None:
         valid &= kj > qpos - window
 
-    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
-    idx_s = (
-        b_idx * jnp.uint32((n_q_pad * n_kv_pad) % (1 << 32))
-        + qi.astype(jnp.uint32) * jnp.uint32(n_kv_pad % (1 << 32))
-        + kj.astype(jnp.uint32)
-    )
+    idx_s = score_counter_idx(bsz, n_q, n_kv, n_q_pad, n_kv_pad)
     u_s = uniform_from_counter(seed ^ SALT_S, idx_s)
     s = jnp.where(valid[None], u_s * jnp.float32(d_k) < counts_s, False)
     s = s.astype(jnp.float32)
@@ -75,24 +125,9 @@ def ssa_reference(
         "bqk,bkd->bqd", s, v.astype(jnp.float32), preferred_element_type=jnp.float32
     )
 
-    row = jnp.arange(n_q)[:, None]
-    col = jnp.arange(d_k)[None, :]
-    rpos = row + (n_kv - n_q)
-    if causal:
-        visible = jnp.minimum(rpos + 1, n_kv)
-        if window is not None:
-            visible = jnp.minimum(visible, window)
-    else:
-        visible = jnp.full_like(rpos, n_kv)
-        if window is not None:
-            visible = jnp.minimum(visible, window)
-    visible = jnp.maximum(visible, 1).astype(jnp.float32)
+    visible = visible_counts(n_q, n_kv, causal, window)[:, None]
 
-    idx_a = (
-        b_idx * jnp.uint32((n_q_pad * d_pad) % (1 << 32))
-        + row.astype(jnp.uint32) * jnp.uint32(d_pad)
-        + col.astype(jnp.uint32)
-    )
+    idx_a = output_counter_idx(bsz, n_q, d_k, n_q_pad, d_pad)
     u_a = uniform_from_counter(seed ^ SALT_A, idx_a)
     out = (u_a * visible < counts_a).astype(q.dtype)
     return out

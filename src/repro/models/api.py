@@ -8,6 +8,7 @@ from __future__ import annotations
 from repro.configs.base import ModelConfig
 
 _SPIKE_STORAGE = ("dense", "packed")
+_BACKENDS = ("auto", "xla", "fused")
 # families served by models.transformer.DecoderLM (the only model with a
 # packed-cache implementation); keep in sync with build_model's dispatch
 _DECODER_LM_FAMILIES = ("dense", "moe", "vlm")
@@ -26,6 +27,15 @@ def validate_config(cfg: ModelConfig) -> None:
             "attention.spike_storage='packed' stores the KV cache as uint32 "
             "spike bit-planes and is only meaningful for the spiking "
             f"attention path (impl='ssa'); got impl={a.impl!r}"
+        )
+    if a.backend not in _BACKENDS:
+        raise ValueError(
+            f"attention.backend must be one of {_BACKENDS}, got {a.backend!r}"
+        )
+    if a.backend == "fused" and a.impl != "ssa":
+        raise ValueError(
+            "attention.backend='fused' selects the fused Pallas SSA kernels "
+            f"and requires impl='ssa'; got impl={a.impl!r}"
         )
     if a.spike_storage == "packed" and cfg.family not in _DECODER_LM_FAMILIES:
         raise ValueError(

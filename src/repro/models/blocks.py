@@ -2,7 +2,9 @@
 
 Everything the 10 assigned architectures need: RMS/LayerNorm, RoPE / M-RoPE,
 GQA attention with three interchangeable implementations (`ann` softmax /
-`ssa` the paper's stochastic spiking attention / `spikformer` baseline),
+`ssa` the paper's stochastic spiking attention / `spikformer` baseline) —
+each realised by a backend from the `repro.attention` registry (XLA
+reference or fused Pallas kernels, `AttentionConfig.backend`) —
 SwiGLU/GeGLU/GELU MLPs, and MoE (shared + routed experts, top-k).
 
 Conventions:
@@ -18,10 +20,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.attention import AttentionInvocation, resolve_backend, spike_encode
+from repro.attention.ann_xla import sdpa as _sdpa, sdpa_chunked as _sdpa_chunked
 from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
-from repro.core.lif import LIFParams, lif_layer
-from repro.core.spikformer import spikformer_attention
-from repro.core.ssa import ssa_attention
 
 # ---------------------------------------------------------------------------
 # initialisers
@@ -101,7 +102,9 @@ def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# attention (ann | ssa | spikformer), GQA, optional sliding window / softcap
+# attention orchestration: proj -> rope -> cache write -> backend dispatch
+# (the ann/ssa/spikformer math lives in repro.attention backends; _sdpa /
+# _sdpa_chunked re-exported above for callers of the ANN numerical core)
 # ---------------------------------------------------------------------------
 
 
@@ -148,139 +151,6 @@ def attention_params(key, cfg: ModelConfig, cross: bool = False) -> dict:
         # post-attention rescale (spike rates live in [0,1])
         p["out_norm"] = norm_params(h_pad * a.head_dim, "rmsnorm")
     return p
-
-
-def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
-    if groups == 1:
-        return k
-    return jnp.repeat(k, groups, axis=2)
-
-
-def _sdpa(q, k, v, *, causal, window, softcap, kv_positions=None, q_positions=None):
-    """Batched softmax attention on (B, S, H, hd) with f32 logits."""
-    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
-    logits = jnp.einsum(
-        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
-    ) * scale
-    if softcap is not None:
-        logits = jnp.tanh(logits / softcap) * softcap
-    n_q, n_kv = q.shape[1], k.shape[1]
-    if q_positions is None:
-        q_pos = jnp.arange(n_q) + (n_kv - n_q)
-    else:
-        q_pos = q_positions
-    if kv_positions is None:
-        kv_pos = jnp.arange(n_kv)
-    else:
-        kv_pos = kv_positions
-    qp = q_pos[..., :, None]
-    kp = kv_pos[..., None, :]
-    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
-    if causal:
-        m &= kp <= qp
-    if window is not None:
-        m &= kp > qp - window
-    # kv validity (rolling buffers mark empty slots with negative positions)
-    m &= kp >= 0
-    while m.ndim < logits.ndim:
-        m = m[:, None] if m.ndim > 2 else m[None]
-    logits = jnp.where(m, logits, jnp.float32(-1e30))
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
-    return out
-
-
-def _sdpa_chunked(q, k, v, *, causal, window, softcap, kv_positions=None,
-                  q_positions=None, chunk=1024):
-    """Blockwise online-softmax attention — the S x S score matrix is never
-    materialised (flash-attention recurrence; the TPU transplant of the
-    paper's 'scores stay in the SAU array' dataflow).
-
-    q: (B, Sq, H, hd); k, v: (B, Skv, H, hd); scans over Skv in ``chunk``
-    tiles carrying (running max, running sum, weighted accumulator).
-    """
-    b, n_q, h, hd = q.shape
-    n_kv = k.shape[1]
-    nk = n_kv // chunk
-    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
-    q32 = q.astype(jnp.float32)
-
-    if q_positions is None:
-        q_pos = jnp.broadcast_to(jnp.arange(n_q) + (n_kv - n_q), (b, n_q))
-    else:
-        q_pos = jnp.broadcast_to(q_positions, (b, n_q))
-    if kv_positions is None:
-        kv_pos = jnp.broadcast_to(jnp.arange(n_kv), (b, n_kv))
-    else:
-        kv_pos = jnp.broadcast_to(kv_positions, (b, n_kv))
-
-    # (nk, B, chunk, ...) scan layout
-    kc = k.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
-    vc = v.reshape(b, nk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
-    pc = kv_pos.reshape(b, nk, chunk).transpose(1, 0, 2)
-
-    def body(carry, inp):
-        m, l, acc = carry
-        k_t, v_t, kp_t = inp
-        logits = jnp.einsum(
-            "bqhd,bkhd->bhqk", q32, k_t.astype(jnp.float32)
-        ) * scale
-        if softcap is not None:
-            logits = jnp.tanh(logits / softcap) * softcap
-        mask = jnp.ones((b, n_q, chunk), bool)
-        qp = q_pos[:, :, None]
-        kp = kp_t[:, None, :]
-        if causal:
-            mask &= kp <= qp
-        if window is not None:
-            mask &= kp > qp - window
-        mask &= kp >= 0
-        logits = jnp.where(mask[:, None], logits, jnp.float32(-1e30))
-        m_new = jnp.maximum(m, logits.max(axis=-1))
-        alpha = jnp.exp(m - m_new)
-        p = jnp.exp(logits - m_new[..., None])
-        l_new = l * alpha + p.sum(axis=-1)
-        acc_new = acc * alpha[..., None] + jnp.einsum(
-            "bhqk,bkhd->bhqd", p, v_t.astype(jnp.float32)
-        )
-        return (m_new, l_new, acc_new), None
-
-    m0 = jnp.full((b, h, n_q), -jnp.inf, jnp.float32)
-    l0 = jnp.zeros((b, h, n_q), jnp.float32)
-    acc0 = jnp.zeros((b, h, n_q, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(0, 2, 1, 3).astype(v.dtype)  # (B, Sq, H, hd)
-
-
-def spike_encode(x: jax.Array, t_steps: int) -> jax.Array:
-    """Rate-code real activations into a ``(T, ...)`` 0/1 spike train (eq. 4).
-
-    Deterministic and element-wise per token (the normalisation reduces over
-    the trailing feature axis only), so encoding a token once at cache-insert
-    time and encoding the whole cache every decode step produce identical
-    spikes — the property the packed spiking KV cache relies on.
-    """
-    lif = LIFParams(beta=0.9, threshold=1.0)
-    # normalise to O(1) currents so LIF rates stay informative
-    x32 = x.astype(jnp.float32)
-    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + 1e-6)
-    drive = jnp.broadcast_to(jax.nn.softplus(x32), (t_steps,) + x.shape)
-    return lif_layer(drive, lif)
-
-
-def _spiking_qkv(q, k, v, t_steps: int):
-    """Rate-code real-valued q/k/v into T-step spike trains via LIF.
-
-    Paper structure (eq. 4): LIF neurons convert the linear projections into
-    binary streams; constant-current integration over T steps yields rate
-    coding of the (normalised) activations.
-    """
-    return (
-        spike_encode(q, t_steps),
-        spike_encode(k, t_steps),
-        spike_encode(v, t_steps),
-    )
 
 
 def _cache_write(
@@ -340,7 +210,13 @@ def attention_apply(
     kv_source: Optional[jax.Array] = None,
     causal: Optional[bool] = None,
 ) -> tuple[jax.Array, Optional[dict]]:
-    """Full attention block: proj -> rope -> (ann|ssa|spikformer) -> out proj.
+    """Full attention block: proj -> rope -> cache write -> backend -> out proj.
+
+    Thin orchestration over the ``repro.attention`` backend registry: this
+    function owns the projections, RoPE, KV-cache writes and spike encoding;
+    the attention math itself (ann softmax / SSA eq. 5-6 / Spikformer) is a
+    registered backend selected by ``AttentionConfig.impl``/``.backend`` and
+    the call mode (train / prefill / decode).
 
     cache: {"k","v": (B, S_cache, Hkv, hd), "pos": (B, S_cache)} for decode;
     cache_index: scalar write offset (decode step).  kv_source: cross-attn
@@ -365,12 +241,15 @@ def attention_apply(
         if kv_source is None:
             k = apply_mrope(k, positions, a.rope_theta)
 
+    mode = (
+        "train" if cache is None else ("decode" if cache_index is not None else "prefill")
+    )
+    spiking = a.impl in ("ssa", "spikformer")
     new_cache = None
     kv_positions = None
     q_positions = None
-    # packed spiking KV cache ({"ks","vs","pos"}): decode reads these
-    # uint32 bit-planes instead of re-encoding real-valued K/V
-    packed_kv = None
+    spike_k = spike_v = None       # (T, B, S_kv, H_kv, hd) pre-encoded trains
+    packed_k = packed_v = None     # (B, S_kv, T, H_kv, W) uint32 bit-planes
     # M-RoPE carries (3, B, S) position ids; masking/caching uses the
     # temporal stream (index 0)
     pos_1d = positions[0] if positions.ndim == 3 else positions
@@ -380,10 +259,9 @@ def attention_apply(
         # leaves (B, S_cache, T, H_kv, ceil(hd/32)) uint32.  New tokens are
         # LIF-encoded ONCE here and stored as bits; the dense path instead
         # re-encodes the full real-valued cache every decode step.
-        from repro.bitpack import pack_spikes, unpack_spikes
+        from repro.bitpack import pack_spikes
 
         t_steps = a.ssa_time_steps
-        groups_kv = h_pad // a.num_kv_heads
         # (T, B, s, H_kv, hd) spike trains -> packed (B, s, T, H_kv, W)
         ks_enc = spike_encode(k, t_steps)
         vs_enc = spike_encode(v, t_steps)
@@ -399,24 +277,17 @@ def attention_apply(
             batch=b,
         )
         if cache_index is not None:
-            # Decode attends over the cached spike planes.  NOTE: this XLA
-            # path unpacks them to dense activations (the fused Pallas path
-            # that consumes packed words directly in VMEM is
-            # kernels.ssa_attention packed=True); the wins realised here are
-            # cache residency (1 bit/spike in HBM) and skipping the per-step
-            # LIF re-encode of the whole cache.
-            ks_all = jnp.moveaxis(unpack_spikes(new_cache["ks"], a.head_dim), 2, 0)
-            vs_all = jnp.moveaxis(unpack_spikes(new_cache["vs"], a.head_dim), 2, 0)
+            # Decode attends over the cached spike planes.  They are handed
+            # to the backend AS WORDS: ssa-fused-packed streams them into
+            # the Pallas kernel (unpacked per-tile in VMEM only), while the
+            # ssa-xla fallback unpacks them in XLA.
+            packed_k, packed_v = new_cache["ks"], new_cache["vs"]
         else:
             # prefill attention reuses the trains encoded above (over ALL s
             # current tokens, pre-truncation) instead of re-encoding k_full —
             # encode-then-repeat == repeat-then-encode, so still bit-identical
             # to the dense path
-            ks_all, vs_all = ks_enc, vs_enc
-        if groups_kv > 1:
-            ks_all = jnp.repeat(ks_all, groups_kv, axis=3)
-            vs_all = jnp.repeat(vs_all, groups_kv, axis=3)
-        packed_kv = (ks_all, vs_all)  # (T, B, S, H_pad, hd)
+            spike_k, spike_v = ks_enc, vs_enc
     elif cache is not None:
         # decode: append the new k/v at the rolling/linear write offset;
         # prefill: fill [0:s] (see _cache_write)
@@ -436,63 +307,39 @@ def attention_apply(
             kv_positions = new_cache["pos"]
             q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
 
-    if packed_kv is None:
-        groups = h_pad // a.num_kv_heads
-        k_full = _repeat_kv(k, groups)
-        v_full = _repeat_kv(v, groups)
+    spike_q = None
+    if spiking:
+        t_steps = a.ssa_time_steps
+        spike_q = spike_encode(q, t_steps)
+        if spike_k is None and packed_k is None:
+            # dense-storage path: re-encode the real-valued K/V (for decode,
+            # the whole cache) into trains at kv-head granularity
+            spike_k = spike_encode(k, t_steps)
+            spike_v = spike_encode(v, t_steps)
 
-    if a.impl == "ann":
-        n_kv_now = k_full.shape[1]
-        use_flash = (
-            a.flash_chunk is not None
-            and n_kv_now > a.flash_chunk
-            and n_kv_now % a.flash_chunk == 0
-        )
-        sdpa = _sdpa_chunked if use_flash else _sdpa
-        kwargs = {"chunk": a.flash_chunk} if use_flash else {}
-        out = sdpa(
-            q,
-            k_full,
-            v_full,
+    backend = resolve_backend(a, mode)
+    out = backend.apply(
+        AttentionInvocation(
+            a=a,
+            mode=mode,
+            q=q,
+            k=k,
+            v=v,
+            groups=h_pad // a.num_kv_heads,
             causal=causal,
             window=layer_window,
             softcap=a.softcap,
+            rng=rng,
             kv_positions=kv_positions,
             q_positions=q_positions,
-            **kwargs,
+            spike_q=spike_q,
+            spike_k=spike_k,
+            spike_v=spike_v,
+            packed_k=packed_k,
+            packed_v=packed_v,
         )
-    else:
-        # spiking path: (B,S,H,hd) -> heads folded into batch -> (T,BH,S,hd)
-        t_steps = a.ssa_time_steps
-        if packed_kv is not None:
-            # K/V spike trains come straight from the packed cache (encoded
-            # once at insert); repeat-then-encode == encode-then-repeat and
-            # the LIF encoder is per-token, so this is bit-identical to the
-            # dense re-encoding path for the same RNG.
-            qs = spike_encode(q, t_steps)
-            ks, vs = packed_kv
-        else:
-            qs, ks, vs = _spiking_qkv(q, k_full, v_full, t_steps)
-
-        def fold(z):  # (T,B,S,H,hd) -> (T, B*H, S, hd)
-            tt, bb, ss, hh, dd = z.shape
-            return z.transpose(0, 1, 3, 2, 4).reshape(tt, bb * hh, ss, dd)
-
-        qs, ks, vs = fold(qs), fold(ks), fold(vs)
-        if a.impl == "ssa":
-            rng = rng if rng is not None else jax.random.PRNGKey(0)
-            spikes = ssa_attention(
-                rng, qs, ks, vs, causal=causal, window=layer_window
-            )
-        else:  # spikformer
-            spikes = spikformer_attention(
-                qs, ks, vs, causal=causal, window=layer_window
-            )
-        rate = spikes.mean(axis=0)  # rate decoding over T
-        out = rate.reshape(b, h_pad, s, a.head_dim).transpose(0, 2, 1, 3)
-        out = out.astype(x.dtype)
-
-    out = out.reshape(b, s, h_pad * a.head_dim)
+    )
+    out = out.astype(x.dtype).reshape(b, s, h_pad * a.head_dim)
     if a.impl in ("ssa", "spikformer"):
         out = norm_apply(p["out_norm"], out, "rmsnorm", 1e-6)
     return out @ p["wo"], new_cache

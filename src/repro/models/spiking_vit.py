@@ -12,11 +12,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.attention import AttentionInvocation, resolve_backend
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.coding import bernoulli_encode
 from repro.core.lif import LIFParams, lif_layer
-from repro.core.spikformer import spikformer_attention
-from repro.core.ssa import ssa_attention
 from .blocks import dense_init, mlp_apply, mlp_params, norm_apply, norm_params
 
 
@@ -60,7 +59,14 @@ class SpikingViT:
 
     # ------------------------------------------------------------------
     def _attention(self, p, x, rng):
-        """One attention block in the configured mode."""
+        """One attention block, dispatched through the backend registry.
+
+        The paper-faithful front end stays here (orchestration): Bernoulli
+        rate coding of the drive (eq. 2) and LIF spike generation (eq. 4);
+        the eq. 5/6 attention math is the registered backend — ``ssa-xla``
+        or (``backend="fused"``) the fused Pallas kernel.  Heads are folded
+        into the batch axis before dispatch (bidirectional, no GQA here).
+        """
         cfg = self.cfg
         a = cfg.attention
         b, n, _ = x.shape
@@ -69,34 +75,46 @@ class SpikingViT:
         k = (x @ p["wk"]).reshape(b, n, a.num_heads, a.head_dim)
         v = (x @ p["wv"]).reshape(b, n, a.num_heads, a.head_dim)
 
-        def fold(z):  # (B,N,H,hd) -> (B*H, N, hd)
-            return z.transpose(0, 2, 1, 3).reshape(b * a.num_heads, n, a.head_dim)
+        def fold(z):  # (B,N,H,hd) -> (B*H, N, 1, hd): heads become batch rows
+            zt = z.transpose(0, 2, 1, 3).reshape(b * a.num_heads, n, a.head_dim)
+            return zt[:, :, None, :]
 
-        if a.impl == "ann":
-            from repro.core.ann_attention import ann_attention
-
-            out = ann_attention(fold(q), fold(k), fold(v))
-        else:
+        spike_q = spike_k = spike_v = None
+        rs = rng
+        if a.impl != "ann":
             # eq. 4: LIF spike generation from the linear projections
             lif = LIFParams()
             rq, rk, rv, rs = jax.random.split(rng, 4)
 
             def spikes(z, kk):
                 # Bernoulli-coded drive (eq. 2) then LIF layer (eq. 4)
-                drive = bernoulli_encode(kk, z, t, norm="sigmoid")
-                return lif_layer(2.0 * drive, lif)
+                drive = bernoulli_encode(kk, z[:, :, 0], t, norm="sigmoid")
+                return lif_layer(2.0 * drive, lif)[:, :, :, None, :]
 
-            qs = spikes(fold(q), rq)
-            ks = spikes(fold(k), rk)
-            vs = spikes(fold(v), rv)
-            if a.impl == "ssa":
-                out_spikes = ssa_attention(rs, qs, ks, vs, causal=False)
-            else:
-                out_spikes = spikformer_attention(qs, ks, vs, causal=False)
-            out = out_spikes.mean(axis=0)  # rate decoding
+            spike_q = spikes(fold(q), rq)
+            spike_k = spikes(fold(k), rk)
+            spike_v = spikes(fold(v), rv)
+
+        backend = resolve_backend(a, "train")
+        out = backend.apply(
+            AttentionInvocation(
+                a=a,
+                mode="train",
+                q=fold(q),
+                k=fold(k),
+                v=fold(v),
+                groups=1,
+                causal=False,
+                softcap=a.softcap,
+                rng=rs,
+                spike_q=spike_q,
+                spike_k=spike_k,
+                spike_v=spike_v,
+            )
+        )  # (B*H, N, 1, hd)
 
         out = out.reshape(b, a.num_heads, n, a.head_dim).transpose(0, 2, 1, 3)
-        return out.reshape(b, n, a.num_heads * a.head_dim) @ p["wo"]
+        return (out.reshape(b, n, a.num_heads * a.head_dim) @ p["wo"]).astype(x.dtype)
 
     def forward(self, params, patches, rng):
         cfg = self.cfg

@@ -7,6 +7,11 @@ fast.  KV caches are stacked the same way and threaded through the scan.
 
 The attention implementation (`ann` | `ssa` | `spikformer`) is a config
 switch — the paper's technique is a first-class feature of every arch here.
+Which *kernel* realises it (XLA reference vs fused Pallas, dense vs packed
+KV decode) is a second, orthogonal switch: `AttentionConfig.backend`
+dispatches through the `repro.attention` registry per call mode, and the
+counter-RNG seed derivation makes all SSA backends bit-identical for the
+same rng (see docs/attention_backends.md).
 """
 from __future__ import annotations
 
@@ -222,9 +227,20 @@ class DecoderLM:
         logits = self.logits(params, hidden)
         return cross_entropy(logits, batch["labels"], batch.get("mask")) + aux
 
-    def prefill(self, params, batch, cache, rng=None):
+    def prefill(self, params, batch, cache, rng=None, logits_at=None):
+        """Prefill the cache; returns (next-token logits, cache).
+
+        ``logits_at``: position (scalar, may be traced) whose logits to
+        return instead of the last row — the serving engine's bucketed
+        prefill pads prompts to a power of two and reads the logits of the
+        real last token, so one compiled prefill serves a whole bucket.
+        """
         hidden, new_cache, _ = self.forward(params, batch, cache=cache, rng=rng)
-        return self.logits(params, hidden[:, -1:]), new_cache
+        if logits_at is None:
+            last = hidden[:, -1:]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
+        return self.logits(params, last), new_cache
 
     def decode_step(self, params, batch, cache, cache_index, rng=None):
         hidden, new_cache, _ = self.forward(

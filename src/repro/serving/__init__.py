@@ -1,3 +1,4 @@
 from .engine import Request, ServingEngine
+from .sampling import Sampler, greedy, make_sampler
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "Sampler", "ServingEngine", "greedy", "make_sampler"]

@@ -6,21 +6,29 @@ vLLM-style at the granularity JAX likes (static shapes):
   * requests queue up; free slots are filled by running prefill for one
     request at a time (chunked prefill would slot in here) and scattering
     its KV into the slot's cache rows;
+  * prefill prompt lengths are **bucketed to the next power of two**
+    (padded + masked), so the jitted prefill compiles O(log max_seq) times
+    instead of once per distinct prompt length (`num_prefill_compiles`
+    exposes the count);
   * one fused decode step advances ALL active slots each tick (inactive
     slots decode garbage that is masked out — the static-shape trade);
   * finished sequences (EOS or max_len) free their slot immediately.
 
-Greedy sampling by default; temperature hook provided.
+Sampling is pluggable (``sampler=``, see `repro.serving.sampling`): greedy
+argmax by default, temperature / top-k via ``make_sampler``.
 """
 from __future__ import annotations
 
 import collections
+import inspect
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .sampling import Sampler, greedy
 
 
 @dataclass
@@ -35,11 +43,12 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model, params, *, num_slots: int, max_seq: int,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, sampler: Optional[Sampler] = None):
         self.model = model
         self.params = params
         self.b = num_slots
         self.max_seq = max_seq
+        self.sampler = sampler if sampler is not None else greedy
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, Request] = {}          # slot -> request
         self.slot_pos = np.zeros(num_slots, np.int32)  # next position per slot
@@ -48,6 +57,36 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, batch, cache, idx: model.decode_step(p, batch, cache, idx)
         )
+        # Bucketed prefill needs the model to expose `logits_at` (read the
+        # real last token's logits out of a padded prompt); models without
+        # it fall back to one exact-length prefill per request.
+        self._bucketed = (
+            "logits_at" in inspect.signature(model.prefill).parameters
+        )
+        if self._bucketed:
+            self._prefill = jax.jit(
+                lambda p, batch, cache, last: model.prefill(
+                    p, batch, cache, logits_at=last
+                )
+            )
+        else:
+            self._prefill = None
+        # pristine single-row cache: the fill state padded prompt rows are
+        # reset to after prefill (zeros / packed enc(0) / pos=-1); also the
+        # template every admission prefills from (functional updates never
+        # mutate it)
+        self._init_row = model.init_cache(1, max_seq)
+        # smallest per-layer cache extent along the sequence axis (leaves are
+        # (L, B, S, ...)): sliding-window layers allocate S = window, and a
+        # padded prompt longer than that would evict real rows via the
+        # prefill tail-keep — such prompts prefill at exact length instead
+        extents = {
+            leaf.shape[2]
+            for leaf in jax.tree.leaves(self._init_row)
+            if leaf.ndim >= 3
+        }
+        self._min_seq_extent = min(extents) if extents else max_seq
+        self._prefill_buckets: set[int] = set()
         self.steps_run = 0
 
     # ------------------------------------------------------------------
@@ -57,6 +96,39 @@ class ServingEngine:
     def _free_slots(self):
         return [i for i in range(self.b) if i not in self.active]
 
+    def _bucket(self, p: int) -> int:
+        """Next power of two >= p, clamped to the slot's cache size.
+
+        ``_admit`` additionally refuses buckets wider than the smallest
+        per-layer cache extent (sliding-window layers), falling back to
+        exact-length prefill for those prompts."""
+        b = 1
+        while b < p:
+            b <<= 1
+        return min(b, self.max_seq)
+
+    def _reset_pad_rows(self, row_cache, p: int):
+        """Restore cache rows [p:] of a freshly prefilled single-row cache
+        to their init-cache state.
+
+        Padded prefill writes pad-token K/V into rows [p:bucket); resetting
+        them to the pristine fill makes the cache bit-identical to an
+        unpadded prefill of length ``p`` — the property that keeps bucketing
+        invisible to every attention impl (the spiking paths attend over all
+        slots, so stale pad K/V would otherwise leak into decode).
+        Leaves carry the sequence axis at position 2 ((L, B, S, ...) stacked
+        layout) with per-layer extents (sliding-window layers allocate
+        S = window < max_seq); lower-rank leaves pass through untouched.
+        """
+        def clean(leaf, init_leaf):
+            if leaf.ndim < 3:
+                return leaf
+            ext = leaf.shape[2]
+            idx = jnp.arange(ext).reshape((1, 1, ext) + (1,) * (leaf.ndim - 3))
+            return jnp.where(idx < p, leaf, init_leaf)
+
+        return jax.tree.map(clean, row_cache, self._init_row)
+
     def _admit(self):
         """Fill free slots: per-request prefill scattered into the batch cache."""
         for slot in self._free_slots():
@@ -64,23 +136,63 @@ class ServingEngine:
                 break
             req = self.queue.popleft()
             p = len(req.prompt)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            positions = jnp.arange(p, dtype=jnp.int32)[None]
-            # prefill on a single-row cache, then scatter into slot row
-            row_cache = self.model.init_cache(1, self.max_seq)
-            logits, row_cache = self.model.prefill(
-                self.params, {"tokens": tokens, "positions": positions}, row_cache
-            )
+            row_cache = self._init_row
+            if self._prefill is not None:
+                pb = self._bucket(p)
+                if pb < p or pb > self._min_seq_extent:
+                    # padding past a sliding-window layer's cache extent
+                    # would tail-keep the pad rows and evict real tokens;
+                    # such prompts (and any longer than max_seq) prefill at
+                    # exact length — correctness over compile reuse
+                    pb = p
+                self._prefill_buckets.add(pb)
+                tokens = np.zeros((1, pb), np.int32)
+                tokens[0, :p] = req.prompt
+                # pad positions are -1: masked dead by the position-validity
+                # check on the ANN path, and their K/V rows are reset below
+                positions = np.full((1, pb), -1, np.int32)
+                positions[0, :p] = np.arange(p)
+                logits, row_cache = self._prefill(
+                    self.params,
+                    {
+                        "tokens": jnp.asarray(tokens),
+                        "positions": jnp.asarray(positions),
+                    },
+                    row_cache,
+                    jnp.asarray(p - 1, jnp.int32),
+                )
+                if pb != p:
+                    row_cache = self._reset_pad_rows(row_cache, p)
+            else:
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+                positions = jnp.arange(p, dtype=jnp.int32)[None]
+                logits, row_cache = self.model.prefill(
+                    self.params,
+                    {"tokens": tokens, "positions": positions},
+                    row_cache,
+                )
             self.cache = jax.tree.map(
                 lambda full, row, s=slot: _scatter_slot(full, row, s),
                 self.cache,
                 row_cache,
             )
-            nxt = int(jnp.argmax(logits[0, -1]))
+            self.key, sub = jax.random.split(self.key)
+            nxt = int(self.sampler(sub, logits[0, -1]))
             req.out_tokens.append(nxt)
             self.active[slot] = req
             self.slot_pos[slot] = p
-            self.key, _ = jax.random.split(self.key)
+
+    # ------------------------------------------------------------------
+    @property
+    def num_prefill_compiles(self) -> int:
+        """Number of distinct compiled prefill signatures this engine has
+        triggered (== distinct prompt-length buckets when bucketing is on)."""
+        if self._prefill is not None:
+            try:
+                return int(self._prefill._cache_size())
+            except Exception:  # pragma: no cover - jax-version fallback
+                pass
+        return len(self._prefill_buckets)
 
     # ------------------------------------------------------------------
     def step(self) -> list[Request]:
@@ -100,7 +212,8 @@ class ServingEngine:
         idx = jnp.asarray(self.slot_pos, jnp.int32)  # per-slot write offsets
         logits, self.cache = self._decode(self.params, batch, self.cache, idx)
         self.steps_run += 1
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        nxt = np.asarray(self.sampler(sub, logits[:, -1]))
         finished: list[Request] = []
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])

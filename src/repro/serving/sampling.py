@@ -1,0 +1,47 @@
+"""Token samplers for the serving engine.
+
+A sampler is ``sampler(key, logits) -> tokens``: ``logits`` is ``(..., V)``
+(the engine passes the last-position logits, ``(B, V)`` on the decode tick
+and ``(V,)`` at prefill admission) and the result drops the vocab axis.
+``greedy`` ignores the key, so engines stay deterministic by default;
+``make_sampler`` builds the temperature / top-k variant on
+``jax.random.categorical``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Sampler", "greedy", "make_sampler"]
+
+Sampler = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def greedy(key: jax.Array, logits: jax.Array) -> jax.Array:
+    """Argmax decoding (key unused; the default engine sampler)."""
+    del key
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_sampler(
+    temperature: float = 1.0, top_k: Optional[int] = None
+) -> Sampler:
+    """Temperature / top-k sampling via ``jax.random.categorical``.
+
+    ``temperature <= 0`` degenerates to greedy (use :func:`greedy` directly
+    when determinism matters); ``top_k`` keeps the k highest logits and
+    masks the rest before sampling.
+    """
+    if temperature <= 0.0:
+        return greedy
+
+    def sampler(key: jax.Array, logits: jax.Array) -> jax.Array:
+        l32 = logits.astype(jnp.float32) / jnp.float32(temperature)
+        if top_k is not None:
+            kth = jax.lax.top_k(l32, top_k)[0][..., -1:]
+            l32 = jnp.where(l32 < kth, jnp.float32(-jnp.inf), l32)
+        return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)
+
+    return sampler

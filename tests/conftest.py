@@ -8,6 +8,19 @@ instead of the whole module disappearing behind importorskip.
 import pytest
 
 
+@pytest.fixture
+def interpret_mode():
+    """True when the Pallas kernels run in interpret mode on this host.
+
+    The attention backends derive this themselves (``default_interpret()``);
+    the fixture exists so tests can assert the fused paths really execute on
+    the CPU CI lane (``JAX_PLATFORMS=cpu``) rather than being skipped.
+    """
+    from repro.attention import default_interpret
+
+    return default_interpret()
+
+
 def hypothesis_or_stubs():
     """Returns (given, settings, st); stubs mark tests skipped if hypothesis
     is missing, so non-property tests in the same module keep running."""

@@ -1,5 +1,5 @@
 """Serving engine: continuous batching, slot reuse, per-slot cache offsets,
-decode == prefill consistency."""
+decode == prefill consistency, bucketed prefill, pluggable sampling."""
 import dataclasses
 
 import jax
@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingEngine, greedy, make_sampler
 
 
 def _engine(arch="codeqwen15_7b", slots=2, max_seq=48):
@@ -114,6 +114,204 @@ def test_packed_spike_storage_engine_matches_dense():
     eng_d = ServingEngine(model_d, params, num_slots=2, max_seq=48)
     eng_p = ServingEngine(model_p, params, num_slots=2, max_seq=48)
     assert eng_p.kv_cache_nbytes() < eng_d.kv_cache_nbytes() / 4
+
+
+def test_prefill_bucketing_bounds_compiles():
+    """Prompt lengths bucket to the next power of two: many distinct
+    lengths, at most log2(max_seq)+1 compiled prefill signatures."""
+    cfg, model, params, eng = _engine(slots=2, max_seq=32)
+    rng = np.random.default_rng(3)
+    lengths = [3, 4, 5, 6, 7, 9, 11, 12, 17, 19]
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, l).astype(np.int32),
+                max_new_tokens=3)
+        for i, l in enumerate(lengths)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done(max_ticks=300)
+    assert len(done) == len(reqs)
+    # 10 distinct lengths -> buckets {4, 8, 16, 32}
+    assert eng.num_prefill_compiles <= 4, eng.num_prefill_compiles
+
+
+def test_bucketed_prefill_is_invisible():
+    """A non-power-of-two prompt through the padded/masked bucketed prefill
+    emits the exact token stream of a manual unpadded prefill+decode loop
+    (pad rows are reset to the init-cache state, pad positions masked)."""
+    cfg, model, params, eng = _engine(slots=1, max_seq=32)
+    prompt = np.array([5, 7, 9, 11, 2], np.int32)  # len 5 -> bucket 8
+    req = Request(uid=0, prompt=prompt, max_new_tokens=5)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=50)
+
+    cache = model.init_cache(1, 32)
+    tokens = jnp.asarray(prompt)[None]
+    positions = jnp.arange(len(prompt), dtype=jnp.int32)[None]
+    logits, cache = model.prefill(
+        params, {"tokens": tokens, "positions": positions}, cache
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(4):
+        batch = {
+            "tokens": jnp.asarray([[out[-1]]], jnp.int32),
+            "positions": jnp.asarray([[pos]], jnp.int32),
+        }
+        logits, cache = model.decode_step(params, batch, cache, jnp.asarray([pos]))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    assert req.out_tokens == out, (req.out_tokens, out)
+
+
+def test_bucketed_prefill_invisible_for_spiking_storage():
+    """Same invisibility for the SSA packed-KV engine: pad rows must reset
+    to packed enc(0), or stale pad spikes would leak into decode."""
+    cfg = get_smoke_config("codeqwen15_7b")
+    cfg = dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(
+            cfg.attention, impl="ssa", spike_storage="packed"
+        ),
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.array([1, 2, 3, 4, 5, 6], np.int32)  # len 6 -> bucket 8
+    eng = ServingEngine(model, params, num_slots=1, max_seq=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=50)
+
+    cache = model.init_cache(1, 32)
+    logits, cache = model.prefill(
+        params,
+        {
+            "tokens": jnp.asarray(prompt)[None],
+            "positions": jnp.arange(len(prompt), dtype=jnp.int32)[None],
+        },
+        cache,
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(3):
+        logits, cache = model.decode_step(
+            params,
+            {
+                "tokens": jnp.asarray([[out[-1]]], jnp.int32),
+                "positions": jnp.asarray([[pos]], jnp.int32),
+            },
+            cache,
+            jnp.asarray([pos]),
+        )
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    assert req.out_tokens == out, (req.out_tokens, out)
+
+
+def _manual_greedy(model, params, prompt, max_seq, new_tokens):
+    cache = model.init_cache(1, max_seq)
+    logits, cache = model.prefill(
+        params,
+        {
+            "tokens": jnp.asarray(prompt)[None],
+            "positions": jnp.arange(len(prompt), dtype=jnp.int32)[None],
+        },
+        cache,
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(new_tokens - 1):
+        logits, cache = model.decode_step(
+            params,
+            {
+                "tokens": jnp.asarray([[out[-1]]], jnp.int32),
+                "positions": jnp.asarray([[pos]], jnp.int32),
+            },
+            cache,
+            jnp.asarray([pos]),
+        )
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return out
+
+
+def test_bucketing_does_not_evict_sliding_window_prefix():
+    """Regression: a prompt longer than a sliding-window layer's cache
+    (gemma2 window=16, prompt 17) must NOT be padded — the prefill
+    tail-keep would retain the pad rows and evict real prompt K/V.  Such
+    prompts prefill at exact length; output must match the manual loop."""
+    cfg = get_smoke_config("gemma2_9b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = (np.arange(17) % cfg.vocab_size).astype(np.int32)
+    eng = ServingEngine(model, params, num_slots=1, max_seq=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=30)
+    assert req.out_tokens == _manual_greedy(model, params, prompt, 32, 4), (
+        req.out_tokens
+    )
+
+
+def test_bucketing_resets_pad_rows_in_windowed_spiking_cache():
+    """Regression: the pad-row reset must cover rolling-window cache leaves
+    (extent = window < max_seq), or stale pad spikes leak into SSA decode."""
+    cfg = get_smoke_config("gemma2_9b")
+    cfg = dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(
+            cfg.attention, impl="ssa", spike_storage="packed"
+        ),
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)  # len 5 -> bucket 8 <= window
+    eng = ServingEngine(model, params, num_slots=1, max_seq=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=5)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=30)
+    assert req.out_tokens == _manual_greedy(model, params, prompt, 32, 5), (
+        req.out_tokens
+    )
+
+
+def test_sampler_hook_greedy_default_and_temperature():
+    """sampler= replaces the hardcoded argmax; greedy default unchanged."""
+    cfg, model, params, eng_default = _engine(slots=1, max_seq=32)
+    prompt = np.array([5, 7, 9], np.int32)
+    req_d = Request(uid=0, prompt=prompt.copy(), max_new_tokens=4)
+    eng_default.submit(req_d)
+    eng_default.run_until_done(max_ticks=30)
+
+    eng_g = ServingEngine(model, params, num_slots=1, max_seq=32, sampler=greedy)
+    req_g = Request(uid=1, prompt=prompt.copy(), max_new_tokens=4)
+    eng_g.submit(req_g)
+    eng_g.run_until_done(max_ticks=30)
+    assert req_d.out_tokens == req_g.out_tokens
+
+    # temperature sampling: deterministic per rng_seed, tokens in range
+    sampler = make_sampler(temperature=1.5, top_k=8)
+    streams = []
+    for _ in range(2):
+        eng_t = ServingEngine(
+            model, params, num_slots=1, max_seq=32, rng_seed=9, sampler=sampler
+        )
+        req_t = Request(uid=2, prompt=prompt.copy(), max_new_tokens=6)
+        eng_t.submit(req_t)
+        eng_t.run_until_done(max_ticks=30)
+        assert all(0 <= t < cfg.vocab_size for t in req_t.out_tokens)
+        streams.append(req_t.out_tokens)
+    assert streams[0] == streams[1]
+
+    # top_k=1 collapses to greedy
+    eng_k1 = ServingEngine(
+        model, params, num_slots=1, max_seq=32,
+        sampler=make_sampler(temperature=0.8, top_k=1),
+    )
+    req_k1 = Request(uid=3, prompt=prompt.copy(), max_new_tokens=4)
+    eng_k1.submit(req_k1)
+    eng_k1.run_until_done(max_ticks=30)
+    assert req_k1.out_tokens == req_d.out_tokens
 
 
 def test_engine_eos_frees_slot_early():

@@ -10,7 +10,12 @@ memory-access-reduction claim.
 (ssa-xla / ssa-fused / ssa-fused-packed) on the smoke config, pairs it with
 the modeled bytes-moved for the backend's KV dataflow, and appends a JSON
 record to ``benchmarks/perf_trajectory.jsonl`` so the per-PR perf history
-accumulates."""
+accumulates.
+
+``--compare-paging`` serves one synthetic bursty trace through a slab
+engine and through a paged engine holding the *same pool bytes* but more
+decode rows, and writes kv bytes allocated / achieved concurrency /
+tokens-per-sec / preemption counters to ``benchmarks/BENCH_paging.json``."""
 from __future__ import annotations
 
 import argparse
@@ -260,6 +265,139 @@ def bench_backend_compare(record_path: str | None = None):
     print(f"backend_compare/records,0,appended={len(records)};path={record_path}")
 
 
+def bench_paging_compare(record_path: str | None = None):
+    """Slab vs paged serving on a synthetic bursty trace (smoke SSA model,
+    packed storage, CPU).
+
+    Both engines serve the identical trace; the paged engine is configured
+    with the same page-pool bytes as the slab engine's whole cache
+    (``slab_slots * pages_per_seq`` usable pages) but twice the decode rows,
+    so short-prompt bursts can actually use the memory: the comparison
+    reports kv bytes allocated, achieved concurrency, tokens/sec and
+    preemption counters, and writes ``benchmarks/BENCH_paging.json``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.attention import NUM_RESERVED_PAGES
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    slab_slots, paged_slots, max_seq, page_size = 4, 8, 64, 16
+    base = with_overrides(
+        get_smoke_config("codeqwen15_7b"),
+        attention__impl="ssa",
+        attention__spike_storage="packed",
+    )
+    variants = {
+        "slab": (base, {}),
+        "paged": (
+            with_overrides(base, attention__cache_layout="paged"),
+            {
+                "page_size": page_size,
+                # same usable pool bytes as the slab engine's 4 slots
+                "num_pages": NUM_RESERVED_PAGES
+                + slab_slots * (max_seq // page_size),
+            },
+        ),
+    }
+
+    # bursty synthetic trace: 3 waves of short-prompt requests
+    rng = np.random.default_rng(0)
+    def trace():
+        reqs, arrivals = [], []
+        uid = 0
+        for wave, tick in enumerate((0, 4, 8)):
+            for _ in range(6):
+                reqs.append(
+                    Request(
+                        uid=uid,
+                        prompt=rng.integers(
+                            0, base.vocab_size, int(rng.integers(3, 12))
+                        ).astype(np.int32),
+                        max_new_tokens=int(rng.integers(4, 10)),
+                    )
+                )
+                arrivals.append(tick)
+                uid += 1
+        return reqs, arrivals
+
+    params = build_model(base).init(jax.random.PRNGKey(0))
+    if record_path is None:
+        record_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "BENCH_paging.json"
+        )
+    results = {}
+    for name, (cfg, kw) in variants.items():
+        rng = np.random.default_rng(0)  # same trace per engine
+        model = build_model(cfg)
+        slots = slab_slots if name == "slab" else paged_slots
+        eng = ServingEngine(
+            model, params, num_slots=slots, max_seq=max_seq, **kw
+        )
+        reqs, arrivals = trace()
+        t0 = time.perf_counter()
+        done, tick, i = [], 0, 0
+        max_active = 0
+        while i < len(reqs) or eng.queue or eng.active or (
+            eng.paged and eng._preempted
+        ):
+            while i < len(reqs) and arrivals[i] <= tick:
+                eng.submit(reqs[i])
+                i += 1
+            done.extend(eng.step())
+            max_active = max(max_active, len(eng.active))
+            tick += 1
+            assert tick < 2000
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        stats = eng.stats()
+        results[name] = {
+            "kv_bytes_allocated": eng.kv_cache_nbytes(),
+            "decode_rows": slots,
+            "achieved_concurrency": (
+                stats.get("max_concurrency_seen") or max_active
+            ),
+            "requests": len(done),
+            "tokens": toks,
+            "ticks": tick,
+            "tokens_per_sec": round(toks / wall, 1),
+            "preemptions": stats.get("preemptions", 0),
+            "queue_wait_ticks": stats.get("queue_wait_ticks", 0),
+        }
+        r = results[name]
+        print(
+            f"paging_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
+            f"kv_bytes={r['kv_bytes_allocated']}"
+            f";concurrency={r['achieved_concurrency']}"
+            f";ticks={r['ticks']};tok_s={r['tokens_per_sec']}"
+            f";preemptions={r['preemptions']}"
+        )
+    rec = {
+        "bench": "paging_compare",
+        "trace": {"requests": 18, "waves": 3, "max_seq": max_seq},
+        "page_size": page_size,
+        "engines": results,
+        "concurrency_gain": round(
+            results["paged"]["achieved_concurrency"]
+            / max(results["slab"]["achieved_concurrency"], 1), 2
+        ),
+        "kv_bytes_ratio": round(
+            results["paged"]["kv_bytes_allocated"]
+            / max(results["slab"]["kv_bytes_allocated"], 1), 3
+        ),
+        "ts": time.time(),
+    }
+    with open(record_path, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(
+        f"paging_compare/summary,0,concurrency_gain={rec['concurrency_gain']}"
+        f";kv_bytes_ratio={rec['kv_bytes_ratio']};path={record_path}"
+    )
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -273,12 +411,21 @@ def main() -> None:
         help="only run the attention-backend decode comparison "
         "(appends to benchmarks/perf_trajectory.jsonl)",
     )
+    parser.add_argument(
+        "--compare-paging",
+        action="store_true",
+        help="only run the slab-vs-paged serving comparison "
+        "(writes benchmarks/BENCH_paging.json)",
+    )
     args = parser.parse_args()
     if args.compare_storage:
         bench_storage_compare()
         return
     if args.compare_backends:
         bench_backend_compare()
+        return
+    if args.compare_paging:
+        bench_paging_compare()
         return
     bench_table2_energy()
     bench_table3_latency()

@@ -3,12 +3,17 @@
 Trains nothing — loads a smoke-size LM with random weights (or a checkpoint
 from `launch.train`) and pushes a burst of variable-length requests through
 the decode loop, demonstrating slot reuse, per-slot cache offsets and EOS
-handling.
+handling.  With ``--cache-layout paged`` the KV cache is a shared page pool
+(``--num-pages`` sizes it; see docs/serving.md): undersize it and the
+scheduler preempts and resumes requests — greedy token streams stay
+identical to the slab engine either way.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --backend fused \
-          --spike-storage packed --temperature 0.8 --top-k 40
+          --spike-storage packed --temperature 0.8 --top-k 40 --top-p 0.95
+      PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
+          --cache-layout paged --page-size 16 --num-pages 14
 """
 import argparse
 import time
@@ -39,6 +44,17 @@ def main():
                     help="sample with this temperature instead of greedy argmax")
     ap.add_argument("--top-k", type=int, default=None,
                     help="restrict sampling to the k highest logits")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus sampling: keep the smallest top-p "
+                         "probability mass")
+    ap.add_argument("--cache-layout", default=None, choices=["slab", "paged"],
+                    help="KV-cache layout (paged = shared page pool with "
+                         "preemption; see docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="rows per page (paged layout; must divide max-seq)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="total pool pages incl. 2 reserved (paged layout; "
+                         "default fits slots*max_seq)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -48,16 +64,21 @@ def main():
         cfg = with_overrides(cfg, attention__spike_storage=args.spike_storage)
     if args.backend:
         cfg = with_overrides(cfg, attention__backend=args.backend)
+    if args.cache_layout:
+        cfg = with_overrides(cfg, attention__cache_layout=args.cache_layout)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     sampler = None
-    if args.temperature is not None or args.top_k is not None:
+    if (args.temperature is not None or args.top_k is not None
+            or args.top_p is not None):
         sampler = make_sampler(
             temperature=args.temperature if args.temperature is not None else 1.0,
             top_k=args.top_k,
+            top_p=args.top_p,
         )
     engine = ServingEngine(model, params, num_slots=args.slots,
-                           max_seq=args.max_seq, sampler=sampler)
+                           max_seq=args.max_seq, sampler=sampler,
+                           page_size=args.page_size, num_pages=args.num_pages)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -71,13 +92,20 @@ def main():
 
     t0 = time.time()
     ticks = 0
-    while engine.queue or engine.active:
+    while engine.queue or engine.active or (
+        engine.paged and engine._preempted
+    ):
         engine.step()
         ticks += 1
         if ticks % 8 == 0:
             done = sum(r.done for r in reqs)
+            extra = ""
+            if engine.paged:
+                s = engine.stats()
+                extra = (f" pages={s['pages_used']}/{s['pages_used'] + s['pages_free']}"
+                         f" preempted={s['preempted_now']}")
             print(f"tick {ticks:4d}: active={len(engine.active)} "
-                  f"queued={len(engine.queue)} done={done}")
+                  f"queued={len(engine.queue)} done={done}{extra}")
         if ticks > 500:
             break
     dt = time.time() - t0
@@ -91,6 +119,14 @@ def main():
           f"backend={cfg.attention.backend})")
     print(f"prefill compiles: {engine.num_prefill_compiles} "
           f"(power-of-two length buckets)")
+    if engine.paged:
+        s = engine.stats()
+        print(f"paged scheduler: page_size={s['page_size']} "
+              f"pool={s['num_pages']} pages, "
+              f"preemptions={s['preemptions']} resumes={s['resumes']} "
+              f"replay_steps={s['replay_steps']} "
+              f"max_concurrency={s['max_concurrency_seen']} "
+              f"queue_wait={s['queue_wait_ticks']} ticks")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}...")
 

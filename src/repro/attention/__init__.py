@@ -13,13 +13,19 @@ Importing this package registers the built-in backends:
 """
 from .base import (
     MODES,
+    NUM_RESERVED_PAGES,
+    PAGE_SCRATCH,
+    PAGE_ZERO,
     AttentionBackend,
     AttentionInvocation,
     available_backends,
     default_interpret,
     derive_step_seeds,
     fold_heads,
+    gather_pages,
     get_backend,
+    is_paged_cache,
+    paged_extent,
     register_backend,
     resolve_backend,
     resolve_backend_name,
@@ -36,13 +42,19 @@ from . import ssa_xla as _ssa_xla            # noqa: F401
 
 __all__ = [
     "MODES",
+    "NUM_RESERVED_PAGES",
+    "PAGE_SCRATCH",
+    "PAGE_ZERO",
     "AttentionBackend",
     "AttentionInvocation",
     "available_backends",
     "default_interpret",
     "derive_step_seeds",
     "fold_heads",
+    "gather_pages",
     "get_backend",
+    "is_paged_cache",
+    "paged_extent",
     "register_backend",
     "resolve_backend",
     "resolve_backend_name",

@@ -36,6 +36,9 @@ from repro.configs.base import AttentionConfig
 
 __all__ = [
     "MODES",
+    "PAGE_ZERO",
+    "PAGE_SCRATCH",
+    "NUM_RESERVED_PAGES",
     "AttentionInvocation",
     "AttentionBackend",
     "register_backend",
@@ -47,6 +50,9 @@ __all__ = [
     "fold_heads",
     "unfold_heads",
     "default_interpret",
+    "is_paged_cache",
+    "paged_extent",
+    "gather_pages",
 ]
 
 MODES = ("train", "prefill", "decode")
@@ -230,3 +236,64 @@ def unfold_heads(z: jax.Array, b: int, h: int) -> jax.Array:
 def default_interpret() -> bool:
     """Pallas kernels need interpret mode off-TPU (the CPU CI fallback)."""
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# paged decode dispatch
+#
+# With ``AttentionConfig.cache_layout="paged"`` the serving engine stores the
+# KV cache as a shared page pool: every cache leaf is ``(num_pages,
+# page_size, ...)`` (dense float k/v and packed uint32 ks/vs planes alike)
+# and each slot dict carries a block table ``bt: (B, W)`` of page ids.  The
+# helpers below reconstruct, per layer, the contiguous ``(B, S_cache, ...)``
+# slab layout every registered backend already consumes — so all five
+# backends work unchanged on paged caches, and the gathered buffer is
+# bit-identical to what a slab cache would hold (the reserved zero page
+# supplies the pristine init-fill rows for never-allocated table entries).
+# ---------------------------------------------------------------------------
+
+# Reserved page ids (the serving allocator never hands these out):
+#   PAGE_ZERO    — immutable init-fill page; unallocated block-table entries
+#                  point here so gathers see exactly the rows a fresh slab
+#                  cache would hold (zeros / packed enc(0) / pos = -1).
+#   PAGE_SCRATCH — garbage sink; inactive decode rows write (and gather)
+#                  here, mirroring the slab engine's "idle slots decode
+#                  garbage that is masked out" contract without ever
+#                  corrupting the zero page.
+PAGE_ZERO = 0
+PAGE_SCRATCH = 1
+NUM_RESERVED_PAGES = 2
+
+
+def is_paged_cache(cache: Optional[dict]) -> bool:
+    """A per-layer cache dict is paged iff it carries a block table."""
+    return cache is not None and "bt" in cache
+
+
+def paged_extent(cache: dict, layer_window: Optional[int]) -> int:
+    """Logical contiguous extent a paged layer cache stands in for.
+
+    Global layers: the full block-table span ``W * page_size`` (the engine
+    passes a full-width table for spiking impls — where decode attends over
+    the whole slab extent — and a growth-bucketed one for position-masked
+    impls).  Sliding-window layers: clamped to the window, matching the slab
+    layout's ``S_cache = min(window, max_seq)`` rolling extent.
+    """
+    page_size = cache["pos"].shape[-1]
+    span = cache["bt"].shape[-1] * page_size
+    return span if layer_window is None else min(layer_window, span)
+
+
+def gather_pages(pool: jax.Array, bt: jax.Array, extent: int) -> jax.Array:
+    """Gather block-table pages into the contiguous slab layout.
+
+    pool: ``(num_pages, page_size, ...)`` cache leaf; bt: ``(B, W)`` int32
+    page ids.  Returns ``(B, extent, ...)`` — rows beyond a request's
+    allocation come from the zero page and therefore equal the slab init
+    fill bit-for-bit.
+    """
+    page_size = pool.shape[1]
+    cols = -(-extent // page_size)
+    g = jnp.take(pool, bt[:, :cols], axis=0)          # (B, cols, ps, ...)
+    g = g.reshape((bt.shape[0], cols * page_size) + pool.shape[2:])
+    return g[:, :extent]

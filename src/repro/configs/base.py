@@ -35,6 +35,14 @@ class AttentionConfig:
     #            repro.bitpack); decode reads packed words, bit-identical
     #            outputs to dense for the same seed
     spike_storage: str = "dense"      # dense | packed
+    # Serving-side KV-cache layout (consumed by ``serving.ServingEngine``):
+    #   slab  — one contiguous max_seq region per decode slot (B, S, ...)
+    #   paged — slots share a page pool ((num_pages, page_size, ...) leaves,
+    #           repro.serving.paging); per-request block tables map logical
+    #           rows to pages, decode gathers pages back into the slab
+    #           layout per tick, so every attention backend is unchanged and
+    #           token streams stay bit-identical to the slab engine
+    cache_layout: str = "slab"        # slab | paged
     # Attention-backend dispatch (repro.attention registry):
     #   auto  — fused Pallas kernels on TPU, XLA reference elsewhere
     #   xla   — force the XLA implementations (ann-xla / ssa-xla /

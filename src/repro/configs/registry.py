@@ -1,9 +1,11 @@
 """Arch registry: ``--arch <id>`` -> ModelConfig (full) / smoke (reduced)."""
 from __future__ import annotations
 
+import ast
 import importlib
+import os
 
-from .base import SHAPES, ModelConfig, ShapeConfig
+from .base import SHAPES, ModelConfig, ShapeConfig, with_overrides
 
 ARCH_IDS = [
     "gemma2_9b",
@@ -46,9 +48,31 @@ def get_config(arch: str) -> ModelConfig:
     return mod.CONFIG
 
 
+def _env_smoke_overrides() -> dict:
+    """Parse ``REPRO_SMOKE_OVERRIDES`` ("attention__impl=ssa,..." with
+    ``with_overrides`` path syntax) — the hook CI lanes use to re-run whole
+    test suites under a different attention/cache configuration."""
+    spec = os.environ.get("REPRO_SMOKE_OVERRIDES", "").strip()
+    out: dict = {}
+    if not spec:
+        return out
+    for item in spec.replace(";", ",").split(","):
+        item = item.strip()
+        if not item:
+            continue
+        key, _, val = item.partition("=")
+        try:
+            out[key.strip()] = ast.literal_eval(val.strip())
+        except (ValueError, SyntaxError):
+            out[key.strip()] = val.strip()
+    return out
+
+
 def get_smoke_config(arch: str) -> ModelConfig:
     mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
-    return mod.smoke_config()
+    cfg = mod.smoke_config()
+    env = _env_smoke_overrides()
+    return with_overrides(cfg, **env) if env else cfg
 
 
 def get_shape(name: str) -> ShapeConfig:

@@ -9,6 +9,7 @@ from repro.configs.base import ModelConfig
 
 _SPIKE_STORAGE = ("dense", "packed")
 _BACKENDS = ("auto", "xla", "fused")
+_CACHE_LAYOUTS = ("slab", "paged")
 # families served by models.transformer.DecoderLM (the only model with a
 # packed-cache implementation); keep in sync with build_model's dispatch
 _DECODER_LM_FAMILIES = ("dense", "moe", "vlm")
@@ -36,6 +37,18 @@ def validate_config(cfg: ModelConfig) -> None:
         raise ValueError(
             "attention.backend='fused' selects the fused Pallas SSA kernels "
             f"and requires impl='ssa'; got impl={a.impl!r}"
+        )
+    if a.cache_layout not in _CACHE_LAYOUTS:
+        raise ValueError(
+            f"attention.cache_layout must be one of {_CACHE_LAYOUTS}, "
+            f"got {a.cache_layout!r}"
+        )
+    if a.cache_layout == "paged" and cfg.family not in _DECODER_LM_FAMILIES:
+        raise ValueError(
+            "the paged KV-cache layout is implemented for the decoder-LM "
+            "attention cache (families dense/moe/vlm); recurrent-state "
+            f"families have no pageable sequence axis — got family="
+            f"{cfg.family!r}"
         )
     if a.spike_storage == "packed" and cfg.family not in _DECODER_LM_FAMILIES:
         raise ValueError(

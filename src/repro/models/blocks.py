@@ -20,7 +20,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.attention import AttentionInvocation, resolve_backend, spike_encode
+from repro.attention import (
+    AttentionInvocation,
+    gather_pages,
+    is_paged_cache,
+    paged_extent,
+    resolve_backend,
+    spike_encode,
+)
 from repro.attention.ann_xla import sdpa as _sdpa, sdpa_chunked as _sdpa_chunked
 from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
 
@@ -170,7 +177,46 @@ def _cache_write(
     engine); rolling-window caches wrap the offset.  prefill
     (``cache_index is None``): fill [0:s], keeping the tail when the update
     overflows the window.
+
+    Paged caches (leaves ``(num_pages, page_size, ...)`` plus a block table
+    ``bt: (B, W)``) support the decode path only: the logical write offset
+    (rolled for window layers, exactly as the slab layout rolls) is routed
+    through the block table to a ``(page, row)`` pair.  Inactive engine rows
+    carry all-scratch tables, so their garbage writes land on the scratch
+    page and never touch real pages or the pristine zero page.
     """
+    if is_paged_cache(cache):
+        if cache_index is None:
+            raise ValueError(
+                "paged KV caches are decode-only; the serving engine "
+                "prefills into a slab row cache and scatters it into pages"
+            )
+        from repro.attention import PAGE_SCRATCH, PAGE_ZERO
+
+        page_size = cache["pos"].shape[-1]
+        bt = cache["bt"]
+        extent = paged_extent(cache, layer_window)
+        write = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32), (batch,)
+        )
+        r = write % extent if layer_window is not None else write
+        # stale offsets on inactive rows may exceed the table span; their
+        # entries are all scratch, so any clamped column is equivalent
+        col = jnp.clip(r // page_size, 0, bt.shape[1] - 1)
+        page = jnp.take_along_axis(bt, col[:, None], axis=1)[:, 0]
+        # the zero page is the immutable init fill every gather of
+        # unallocated columns depends on; a write can only resolve to it
+        # through zero-padded table entries (e.g. a replay tick for a row
+        # whose next page is granted later that tick), and such writes are
+        # re-issued after allocation — sink them to scratch instead
+        page = jnp.where(page == PAGE_ZERO, PAGE_SCRATCH, page)
+        off = r % page_size
+        new = {"bt": bt}
+        for name, upd in updates.items():
+            leaf = cache[name]
+            new[name] = leaf.at[page, off].set(upd[:, 0].astype(leaf.dtype))
+        return new
+
     s_cache = cache["pos"].shape[1]
     new = {}
     if cache_index is not None:
@@ -280,8 +326,15 @@ def attention_apply(
             # Decode attends over the cached spike planes.  They are handed
             # to the backend AS WORDS: ssa-fused-packed streams them into
             # the Pallas kernel (unpacked per-tile in VMEM only), while the
-            # ssa-xla fallback unpacks them in XLA.
-            packed_k, packed_v = new_cache["ks"], new_cache["vs"]
+            # ssa-xla fallback unpacks them in XLA.  A paged cache is first
+            # gathered back into the contiguous slab layout (bit-identical:
+            # unallocated entries resolve to the pristine zero page).
+            if is_paged_cache(new_cache):
+                ext = paged_extent(new_cache, layer_window)
+                packed_k = gather_pages(new_cache["ks"], new_cache["bt"], ext)
+                packed_v = gather_pages(new_cache["vs"], new_cache["bt"], ext)
+            else:
+                packed_k, packed_v = new_cache["ks"], new_cache["vs"]
         else:
             # prefill attention reuses the trains encoded above (over ALL s
             # current tokens, pre-truncation) instead of re-encoding k_full —
@@ -303,8 +356,16 @@ def attention_apply(
             batch=b,
         )
         if cache_index is not None:
-            k, v = new_cache["k"], new_cache["v"]
-            kv_positions = new_cache["pos"]
+            if is_paged_cache(new_cache):
+                ext = paged_extent(new_cache, layer_window)
+                k = gather_pages(new_cache["k"], new_cache["bt"], ext)
+                v = gather_pages(new_cache["v"], new_cache["bt"], ext)
+                kv_positions = gather_pages(
+                    new_cache["pos"], new_cache["bt"], ext
+                )
+            else:
+                k, v = new_cache["k"], new_cache["v"]
+                kv_positions = new_cache["pos"]
             q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
 
     spike_q = None

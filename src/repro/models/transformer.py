@@ -410,7 +410,32 @@ class DecoderLM:
             )
         return slots
 
-    def init_cache(self, batch: int, seq: int) -> list:
+    def init_cache(
+        self,
+        batch: int,
+        seq: int,
+        *,
+        layout: str = "slab",
+        num_pages: Optional[int] = None,
+        page_size: Optional[int] = None,
+    ) -> list:
+        """Fresh decode cache.
+
+        ``layout="slab"`` (default): one contiguous ``(B, S_cache, ...)``
+        region per batch row, per-layer extents clamped to sliding windows.
+
+        ``layout="paged"``: a shared page pool — every leaf becomes
+        ``(steps, num_pages, page_size, ...)`` plus a block table ``bt:
+        (steps, batch, ceil(seq/page_size))`` of page ids per decode row
+        (broadcast over the scanned layer axis).  Page ``PAGE_ZERO`` holds
+        the init fill and is never written (the whole pool starts as init
+        fill); tables start all-``PAGE_SCRATCH`` (every row inactive).  The
+        serving engine owns allocation; ``models.blocks`` writes and
+        gathers through the table (see ``repro.attention.gather_pages``).
+        Note the engine's choice of ``cache_layout`` lives in
+        ``AttentionConfig``; this method always needs the explicit request
+        so reference decode loops can keep building slab caches.
+        """
         shape = ShapeConfig("tmp", seq, batch, "decode")
         a = self.cfg.attention
         fill_u32 = None
@@ -435,4 +460,48 @@ class DecoderLM:
                 return jnp.broadcast_to(fill_u32[None], s.shape)
             return jnp.zeros(s.shape, s.dtype)
 
-        return jax.tree.map(init_leaf, self.cache_specs(shape))
+        if layout == "slab":
+            return jax.tree.map(init_leaf, self.cache_specs(shape))
+        if layout != "paged":
+            raise ValueError(f"cache layout must be 'slab' or 'paged', got {layout!r}")
+        if num_pages is None or page_size is None:
+            raise ValueError("layout='paged' requires num_pages and page_size")
+
+        from repro.attention import NUM_RESERVED_PAGES, PAGE_SCRATCH
+
+        if num_pages <= NUM_RESERVED_PAGES:
+            raise ValueError(
+                f"num_pages={num_pages} leaves no allocatable pages "
+                f"({NUM_RESERVED_PAGES} ids are reserved)"
+            )
+        packed = a.impl == "ssa" and a.spike_storage == "packed"
+        if packed:
+            from repro.bitpack import packed_width
+
+            words = packed_width(a.head_dim)
+        width = -(-seq // page_size)
+        slots = []
+        for _ in range(len(self.pattern)):
+            if packed:
+                plane = jax.ShapeDtypeStruct(
+                    (self.steps, num_pages, page_size, a.ssa_time_steps,
+                     a.num_kv_heads, words),
+                    jnp.uint32,
+                )
+                d = {"ks": plane, "vs": plane}
+            else:
+                kv = jax.ShapeDtypeStruct(
+                    (self.steps, num_pages, page_size, a.num_kv_heads,
+                     a.head_dim),
+                    jnp.dtype(self.cfg.dtype),
+                )
+                d = {"k": kv, "v": kv}
+            d["pos"] = jax.ShapeDtypeStruct(
+                (self.steps, num_pages, page_size), jnp.int32
+            )
+            leaf_d = {name: init_leaf(spec) for name, spec in d.items()}
+            leaf_d["bt"] = jnp.full(
+                (self.steps, batch, width), PAGE_SCRATCH, jnp.int32
+            )
+            slots.append(leaf_d)
+        return slots

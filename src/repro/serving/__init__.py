@@ -1,4 +1,14 @@
 from .engine import Request, ServingEngine
+from .paging import BlockTables, PagePool, pages_for_rows
 from .sampling import Sampler, greedy, make_sampler
 
-__all__ = ["Request", "Sampler", "ServingEngine", "greedy", "make_sampler"]
+__all__ = [
+    "BlockTables",
+    "PagePool",
+    "Request",
+    "Sampler",
+    "ServingEngine",
+    "greedy",
+    "make_sampler",
+    "pages_for_rows",
+]

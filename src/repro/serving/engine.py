@@ -1,33 +1,58 @@
-"""Serving engine: continuous batching over fixed decode slots.
+"""Serving engine: a scheduler over decode rows and (optionally) a shared
+KV page pool.
 
 vLLM-style at the granularity JAX likes (static shapes):
-  * `B` decode slots, each with a fixed-size KV-cache region (the cache is
-    one batched tree — slot i is batch row i);
-  * requests queue up; free slots are filled by running prefill for one
-    request at a time (chunked prefill would slot in here) and scattering
-    its KV into the slot's cache rows;
+  * ``B`` decode rows; requests queue up and are admitted FCFS into free
+    rows by running prefill for one request at a time;
   * prefill prompt lengths are **bucketed to the next power of two**
     (padded + masked), so the jitted prefill compiles O(log max_seq) times
     instead of once per distinct prompt length (`num_prefill_compiles`
     exposes the count);
-  * one fused decode step advances ALL active slots each tick (inactive
-    slots decode garbage that is masked out — the static-shape trade);
-  * finished sequences (EOS or max_len) free their slot immediately.
+  * one fused decode step advances ALL active rows each tick (inactive
+    rows decode garbage that is masked out — the static-shape trade);
+  * finished sequences (EOS or max_len) free their row immediately.
+
+Cache layouts (``AttentionConfig.cache_layout``):
+
+``slab`` — each row owns a contiguous fixed-size cache region (the cache is
+one batched tree — row i is batch row i).  Simple, but memory is reserved
+for ``num_slots * max_seq`` rows whatever the traffic looks like.
+
+``paged`` — cache leaves are a shared :class:`~repro.serving.paging.PagePool`
+(``(num_pages, page_size, ...)``) and the engine becomes a scheduler over
+it: admission requires free pages for the prompt, each tick grows active
+requests by a page when they cross a page boundary, and on pool exhaustion
+the engine preempts a victim (LRU-of-idle: least-recently-scheduled first —
+with lock-step decode all active rows tie, so this degenerates to the most
+recently admitted request).  Preempted requests release their pages and
+keep their row reserved; they resume by re-running the (bit-identical)
+bucketed prompt prefill and then *replaying* their generated tokens through
+the decode step — not by prefilling prompt+generation, because the SSA
+counter RNG indexes decode draws by (row, step geometry), so only replay
+reproduces the original cache bit-for-bit.  Token streams are therefore
+bit-identical to the slab engine for the same rng and arrival order — for
+any sampler while pages are ample; once page pressure defers admissions or
+preempts, the per-tick sampler-key sequence shifts, so the cross-schedule
+guarantee is for per-tick-key-free (greedy) sampling — and
+``kv_cache_nbytes`` reflects the pool actually allocated instead of
+``num_slots * max_seq`` worth of slabs.  ``stats()`` reports occupancy /
+queue-wait / preemption counters.
 
 Sampling is pluggable (``sampler=``, see `repro.serving.sampling`): greedy
-argmax by default, temperature / top-k via ``make_sampler``.
+argmax by default, temperature / top-k / top-p via ``make_sampler``.
 """
 from __future__ import annotations
 
 import collections
 import inspect
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .paging import pages_for_rows
 from .sampling import Sampler, greedy
 
 
@@ -36,27 +61,169 @@ class Request:
     uid: int
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int = 32
-    eos_id: Optional[int] = None
+    # stop on any of these token ids; modern tokenizers ship several stop
+    # ids, so an int, a set/frozenset, or any iterable of ints is accepted
+    eos_id: Union[int, frozenset, set, tuple, list, None] = None
     out_tokens: list = field(default_factory=list)
     done: bool = False
+
+    def eos_ids(self) -> frozenset:
+        if self.eos_id is None:
+            return frozenset()
+        if isinstance(self.eos_id, (int, np.integer)):
+            return frozenset((int(self.eos_id),))
+        return frozenset(int(t) for t in self.eos_id)
+
+
+def _default_page_size(max_seq: int) -> int:
+    """Largest power of two <= 16 dividing max_seq (page_size | max_seq is
+    required so the full block-table span equals the slab extent exactly)."""
+    ps = 1
+    while ps < 16 and max_seq % (ps * 2) == 0:
+        ps *= 2
+    return ps
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _scrub_pages(cache: list, pages: jax.Array) -> list:
+    """Reset the given page ids to the pristine zero-page fill.
+
+    Released pages go back to the free list through here: the slab engine
+    re-initialises a whole slot region at admission, so for bit-identical
+    behaviour a recycled page must look exactly like a never-used one when
+    it is gathered beyond a request's written rows (enc(0) spikes / zeros /
+    pos = -1, not the previous tenant's tail).  ``pages`` is fixed-width
+    (pages_per_seq), padded with ``PAGE_SCRATCH`` — scrubbing scratch is
+    harmless and keeps the compile count at one.
+    """
+    from repro.attention import PAGE_ZERO
+
+    def per_slot(pool_d: dict) -> dict:
+        out = dict(pool_d)
+        for name, pool in pool_d.items():
+            if name == "bt":
+                continue
+            zero = pool[:, PAGE_ZERO][:, None]      # (steps, 1, ps, ...)
+            out[name] = pool.at[:, pages].set(
+                jnp.broadcast_to(zero, (pool.shape[0], pages.shape[0])
+                                 + pool.shape[2:])
+            )
+        return out
+
+    return [per_slot(c) for c in cache]
+
+
+def _scatter_pages(cache: list, row_cache: list, wt: jax.Array) -> list:
+    """Write a batch-1 slab row cache into the page pool.
+
+    ``wt``: (pages_per_seq,) int32 write table — column j receives slab rows
+    [j*ps:(j+1)*ps); unallocated columns sink to the scratch page (their
+    slab rows hold the init fill, so the zero page never needs writing).
+    Window slots have shorter slab extents and consume a prefix of ``wt``;
+    rows padding the last partial page are never gathered back.
+    """
+    def per_slot(pool_d: dict, row_d: dict) -> dict:
+        out = dict(pool_d)
+        ps = pool_d["pos"].shape[-1]
+        for name, pool in pool_d.items():
+            if name == "bt":
+                continue
+            r = row_d[name][:, 0]                      # (steps, S, ...)
+            s = r.shape[1]
+            cols = -(-s // ps)
+            pad = cols * ps - s
+            if pad:
+                r = jnp.pad(r, ((0, 0), (0, pad)) + ((0, 0),) * (r.ndim - 2))
+            tiles = r.reshape((r.shape[0], cols, ps) + r.shape[2:])
+            out[name] = pool.at[:, wt[:cols]].set(tiles.astype(pool.dtype))
+        return out
+
+    return [per_slot(c, rc) for c, rc in zip(cache, row_cache)]
 
 
 class ServingEngine:
     def __init__(self, model, params, *, num_slots: int, max_seq: int,
-                 rng_seed: int = 0, sampler: Optional[Sampler] = None):
+                 rng_seed: int = 0, sampler: Optional[Sampler] = None,
+                 num_pages: Optional[int] = None,
+                 page_size: Optional[int] = None):
         self.model = model
         self.params = params
         self.b = num_slots
         self.max_seq = max_seq
         self.sampler = sampler if sampler is not None else greedy
         self.queue: collections.deque[Request] = collections.deque()
-        self.active: dict[int, Request] = {}          # slot -> request
-        self.slot_pos = np.zeros(num_slots, np.int32)  # next position per slot
-        self.cache = model.init_cache(num_slots, max_seq)
+        self.active: dict[int, Request] = {}          # row -> request
+        self.slot_pos = np.zeros(num_slots, np.int32)  # next position per row
         self.key = jax.random.PRNGKey(rng_seed)
+        self.queue_wait_ticks = 0
         self._decode = jax.jit(
             lambda p, batch, cache, idx: model.decode_step(p, batch, cache, idx)
         )
+
+        a = getattr(getattr(model, "cfg", None), "attention", None)
+        self.layout = getattr(a, "cache_layout", "slab") if a is not None else "slab"
+        self.paged = self.layout == "paged"
+        if self.paged:
+            from repro.attention import NUM_RESERVED_PAGES
+
+            from .paging import BlockTables, PagePool
+
+            ps = page_size if page_size is not None else _default_page_size(max_seq)
+            if max_seq % ps:
+                raise ValueError(
+                    f"page_size={ps} must divide max_seq={max_seq} so the "
+                    "block-table span matches the slab cache extent"
+                )
+            self.pages_per_seq = max_seq // ps
+            if num_pages is None:
+                # ample default: every row can grow to max_seq — identical
+                # behaviour to the slab engine; callers shrink it to trade
+                # memory for preemptions
+                num_pages = NUM_RESERVED_PAGES + num_slots * self.pages_per_seq
+            self.pool = PagePool(num_pages, ps)
+            if self.pool.num_usable < self.pages_per_seq:
+                raise ValueError(
+                    f"pool of {num_pages} pages cannot back even one "
+                    f"request ({self.pages_per_seq} pages of {ps} rows "
+                    f"needed for max_seq={max_seq})"
+                )
+            self.tables = BlockTables(num_slots, self.pages_per_seq)
+            self._scrub = jax.jit(_scrub_pages)
+            self.cache = model.init_cache(
+                num_slots, max_seq, layout="paged",
+                num_pages=num_pages, page_size=ps,
+            )
+            # spiking decode attends over the full slab extent (pristine
+            # rows carry enc(0) spikes and the counter RNG strides by the
+            # padded extent), so its gather must span max_seq; the
+            # position-masked ann path is extent-invariant and gathers only
+            # the pow2-bucketed allocated span — its decode HLO never holds
+            # a max_seq-extent tensor
+            self._full_span = getattr(a, "impl", "ann") in ("ssa", "spikformer")
+            self._scatter = jax.jit(_scatter_pages)
+            self._preempted: dict[int, Request] = {}  # row -> request
+            self._admit_order: dict[int, int] = {}    # row -> admission seq
+            self._admit_seq = 0
+            self.preemptions = 0
+            self.resumes = 0
+            self.replay_steps = 0
+            self.max_concurrency_seen = 0
+        else:
+            if num_pages is not None or page_size is not None:
+                raise ValueError(
+                    "num_pages/page_size require the paged cache layout "
+                    "(AttentionConfig.cache_layout='paged'); this model is "
+                    f"configured for layout={self.layout!r}"
+                )
+            self.cache = model.init_cache(num_slots, max_seq)
+        self._submit_tick: dict[int, int] = {}
+
         # Bucketed prefill needs the model to expose `logits_at` (read the
         # real last token's logits out of a padded prompt); models without
         # it fall back to one exact-length prefill per request.
@@ -91,9 +258,15 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        self._submit_tick[id(req)] = self.steps_run
         self.queue.append(req)
 
     def _free_slots(self):
+        if self.paged:
+            return [
+                i for i in range(self.b)
+                if i not in self.active and i not in self._preempted
+            ]
         return [i for i in range(self.b) if i not in self.active]
 
     def _bucket(self, p: int) -> int:
@@ -129,58 +302,240 @@ class ServingEngine:
 
         return jax.tree.map(clean, row_cache, self._init_row)
 
+    def _prefill_row(self, req: Request):
+        """Run (bucketed) prefill for one request into a fresh slab row
+        cache; returns (last-token logits, row cache)."""
+        p = len(req.prompt)
+        row_cache = self._init_row
+        if self._prefill is not None:
+            pb = self._bucket(p)
+            if pb < p or pb > self._min_seq_extent:
+                # padding past a sliding-window layer's cache extent
+                # would tail-keep the pad rows and evict real tokens;
+                # such prompts (and any longer than max_seq) prefill at
+                # exact length — correctness over compile reuse
+                pb = p
+            self._prefill_buckets.add(pb)
+            tokens = np.zeros((1, pb), np.int32)
+            tokens[0, :p] = req.prompt
+            # pad positions are -1: masked dead by the position-validity
+            # check on the ANN path, and their K/V rows are reset below
+            positions = np.full((1, pb), -1, np.int32)
+            positions[0, :p] = np.arange(p)
+            logits, row_cache = self._prefill(
+                self.params,
+                {
+                    "tokens": jnp.asarray(tokens),
+                    "positions": jnp.asarray(positions),
+                },
+                row_cache,
+                jnp.asarray(p - 1, jnp.int32),
+            )
+            if pb != p:
+                row_cache = self._reset_pad_rows(row_cache, p)
+        else:
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            positions = jnp.arange(p, dtype=jnp.int32)[None]
+            logits, row_cache = self.model.prefill(
+                self.params,
+                {"tokens": tokens, "positions": positions},
+                row_cache,
+            )
+        return logits, row_cache
+
+    def _start(self, slot: int, req: Request, logits):
+        """Shared admission tail: sample the first token, activate the row."""
+        self.queue_wait_ticks += self.steps_run - self._submit_tick.pop(
+            id(req), self.steps_run
+        )
+        self.key, sub = jax.random.split(self.key)
+        nxt = int(self.sampler(sub, logits[0, -1]))
+        req.out_tokens.append(nxt)
+        self.active[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        if self.paged:
+            self._admit_order[slot] = self._admit_seq
+            self._admit_seq += 1
+
     def _admit(self):
-        """Fill free slots: per-request prefill scattered into the batch cache."""
+        """Fill free rows FCFS: per-request prefill scattered into the
+        batch cache (slab) or into freshly allocated pages (paged)."""
         for slot in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.popleft()
-            p = len(req.prompt)
-            row_cache = self._init_row
-            if self._prefill is not None:
-                pb = self._bucket(p)
-                if pb < p or pb > self._min_seq_extent:
-                    # padding past a sliding-window layer's cache extent
-                    # would tail-keep the pad rows and evict real tokens;
-                    # such prompts (and any longer than max_seq) prefill at
-                    # exact length — correctness over compile reuse
-                    pb = p
-                self._prefill_buckets.add(pb)
-                tokens = np.zeros((1, pb), np.int32)
-                tokens[0, :p] = req.prompt
-                # pad positions are -1: masked dead by the position-validity
-                # check on the ANN path, and their K/V rows are reset below
-                positions = np.full((1, pb), -1, np.int32)
-                positions[0, :p] = np.arange(p)
-                logits, row_cache = self._prefill(
-                    self.params,
-                    {
-                        "tokens": jnp.asarray(tokens),
-                        "positions": jnp.asarray(positions),
-                    },
-                    row_cache,
-                    jnp.asarray(p - 1, jnp.int32),
+            if self.paged:
+                # head-of-line admission: waiting (instead of skipping
+                # ahead) preserves FCFS order, which is also what keeps the
+                # paged schedule aligned with the slab engine's.  Prompts
+                # longer than max_seq tail-keep into the slab row cache, so
+                # their footprint clamps to the table span
+                need = pages_for_rows(
+                    min(len(self.queue[0].prompt), self.max_seq),
+                    self.pool.page_size,
                 )
-                if pb != p:
-                    row_cache = self._reset_pad_rows(row_cache, p)
+                pages = self.pool.alloc(need)
+                if pages is None:
+                    break
+                req = self.queue.popleft()
+                logits, row_cache = self._prefill_row(req)
+                self.tables.assign(slot, pages)
+                self._scatter_row(slot, row_cache)
             else:
-                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-                positions = jnp.arange(p, dtype=jnp.int32)[None]
-                logits, row_cache = self.model.prefill(
-                    self.params,
-                    {"tokens": tokens, "positions": positions},
+                req = self.queue.popleft()
+                logits, row_cache = self._prefill_row(req)
+                self.cache = jax.tree.map(
+                    lambda full, row, s=slot: _scatter_slot(full, row, s),
+                    self.cache,
                     row_cache,
                 )
-            self.cache = jax.tree.map(
-                lambda full, row, s=slot: _scatter_slot(full, row, s),
-                self.cache,
-                row_cache,
-            )
-            self.key, sub = jax.random.split(self.key)
-            nxt = int(self.sampler(sub, logits[0, -1]))
-            req.out_tokens.append(nxt)
+            self._start(slot, req, logits)
+
+    # ------------------------------------------------------------------
+    # paged scheduling: scatter, growth, preemption, resume-by-replay
+    # ------------------------------------------------------------------
+    def _scatter_row(self, slot: int, row_cache):
+        wt = self.tables.scatter_row(slot)
+        self.cache = self._scatter(self.cache, row_cache, jnp.asarray(wt))
+
+    def _release_pages(self, slot: int):
+        """Return a row's pages to the free list, scrubbed to the pristine
+        fill so their next tenant's gather tail is bit-identical to fresh
+        slab rows."""
+        from repro.attention import PAGE_SCRATCH
+
+        pages = self.tables.release(slot)
+        if not pages:
+            return
+        padded = np.full((self.pages_per_seq,), PAGE_SCRATCH, np.int32)
+        padded[: len(pages)] = pages
+        self.cache = self._scrub(self.cache, jnp.asarray(padded))
+        self.pool.free(pages)
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """LRU-of-idle victim: all active rows were last scheduled on the
+        same (previous) tick, so the order degenerates to preempting the
+        most recently admitted request first (vLLM-style lowest priority)."""
+        rows = [r for r in self.active if r != exclude]
+        if not rows:
+            return None
+        return max(rows, key=lambda r: self._admit_order[r])
+
+    def _preempt(self, slot: int):
+        """Release the victim's pages; its row stays reserved so the resumed
+        request re-occupies the same decode row — the SSA counter RNG
+        indexes draws by row, so this (plus replay) is what keeps preempted
+        streams bit-identical to never-preempted ones."""
+        req = self.active.pop(slot)
+        self._release_pages(slot)
+        self._preempted[slot] = req
+        self.preemptions += 1
+
+    def _grow_pages(self):
+        """Ensure every active row has a page under its next write offset,
+        preempting (newest-admitted first) when the pool runs dry.  Oldest
+        admissions grow first so they are never starved by newcomers."""
+        ps = self.pool.page_size
+        order = sorted(self.active, key=lambda r: self._admit_order[r])
+        for slot in order:
+            if slot not in self.active:  # preempted by an earlier iteration
+                continue
+            # over-long prompts tail-keep into max_seq rows (and finish on
+            # their first tick, as in the slab engine) — never grow past
+            # the block-table span
+            col = min(int(self.slot_pos[slot]), self.max_seq - 1) // ps
+            while slot in self.active and not self.tables.has_col(slot, col):
+                page = self.pool.alloc(1)
+                if page is not None:
+                    self.tables.append(slot, page[0])
+                    continue
+                victim = self._pick_victim(exclude=slot)
+                if victim is None:  # pragma: no cover - pool sizing guards
+                    raise RuntimeError(
+                        "page pool exhausted by a single request; "
+                        "num_pages is too small for max_seq"
+                    )
+                self._preempt(victim)
+
+    def _sync_tables(self):
+        """Rebuild the block-table leaves the decode step reads this tick.
+
+        Spiking impls get the full ``max_seq`` span (their attention
+        semantics cover the whole slab extent); the ann path gets a
+        pow2-bucketed span just wide enough for the longest active request,
+        so the decode computation never materialises a max_seq-extent
+        tensor (recompiles are bounded by log2(pages_per_seq))."""
+        if self._full_span:
+            w = self.pages_per_seq
+        else:
+            ps = self.pool.page_size
+            need = 1
+            for slot in self.active:
+                need = max(need, int(self.slot_pos[slot]) // ps + 1)
+            w = min(self.pages_per_seq, _next_pow2(need))
+        arr = jnp.asarray(self.tables.as_array(w))
+        for slot_d in self.cache:
+            steps = slot_d["pos"].shape[0]
+            slot_d["bt"] = jnp.broadcast_to(arr[None], (steps,) + arr.shape)
+
+    def _decode_tick(self, tokens: np.ndarray):
+        """One fused decode step over all rows for the given next tokens."""
+        positions = self.slot_pos[:, None].astype(np.int32)
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "positions": jnp.asarray(positions),
+        }
+        # jnp.asarray of an int32 numpy array is zero-copy on CPU, and
+        # dispatch is async: hand JAX its own copy of slot_pos, because
+        # replay ticks bump slot_pos right after dispatch without ever
+        # materialising the logits (the copy is never mutated)
+        idx = jnp.asarray(self.slot_pos.copy())      # per-row write offsets
+        logits, self.cache = self._decode(self.params, batch, self.cache, idx)
+        return logits
+
+    def _replay(self, slot: int, req: Request):
+        """Re-derive a resumed request's decode-time cache rows by feeding
+        its recorded tokens back through the decode step (logits discarded).
+
+        Each replayed tick is bit-identical to the original one: same row,
+        same positions, same per-layer seeds (decode draws its rng from a
+        fixed key).  Other rows are row-parallel throughout — their replayed
+        "write" deposits the same k/v their next genuine tick will rewrite
+        at the same offset (or lands on the scratch page for idle rows), so
+        their state is untouched.  No sampler keys are consumed."""
+        for tok in req.out_tokens[:-1]:
+            tokens = np.zeros((self.b, 1), np.int32)
+            for r2, rq2 in self.active.items():
+                if r2 != slot and rq2.out_tokens:
+                    tokens[r2, 0] = rq2.out_tokens[-1]
+            tokens[slot, 0] = tok
+            self._sync_tables()
+            self._decode_tick(tokens)
+            self.slot_pos[slot] += 1
+            self.replay_steps += 1
+
+    def _resume_preempted(self):
+        """Resume preempted requests (oldest admission first) whose full
+        current footprint fits the pool: re-run the bucketed prompt prefill
+        (bit-identical to the original admission), scatter it into fresh
+        pages, then replay the generated tokens."""
+        ps = self.pool.page_size
+        order = sorted(self._preempted, key=lambda r: self._admit_order[r])
+        for slot in order:
+            req = self._preempted[slot]
+            rows = min(len(req.prompt) + len(req.out_tokens) - 1,
+                       self.max_seq)
+            pages = self.pool.alloc(pages_for_rows(rows, ps))
+            if pages is None:
+                break  # oldest first: later arrivals keep waiting too
+            del self._preempted[slot]
+            logits, row_cache = self._prefill_row(req)
+            del logits  # first token was sampled at original admission
+            self.tables.assign(slot, pages)
+            self._scatter_row(slot, row_cache)
             self.active[slot] = req
-            self.slot_pos[slot] = p
+            self.slot_pos[slot] = len(req.prompt)
+            self._replay(slot, req)
+            self.resumes += 1
 
     # ------------------------------------------------------------------
     @property
@@ -196,21 +551,25 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> list[Request]:
-        """One engine tick: admit + one fused decode step for all slots.
-
-        Returns the requests that finished on this tick."""
+        """One engine tick: resume / admit / grow pages, then one fused
+        decode step for all rows.  Returns the requests that finished."""
+        if self.paged:
+            self._resume_preempted()
         self._admit()
         if not self.active:
             return []
+        if self.paged:
+            self._grow_pages()
+            self._sync_tables()
+            self.max_concurrency_seen = max(
+                self.max_concurrency_seen, len(self.active)
+            )
         tokens = np.zeros((self.b, 1), np.int32)
         for slot, req in self.active.items():
             tokens[slot, 0] = req.out_tokens[-1]
-        positions = self.slot_pos[:, None].astype(np.int32)
         # NOTE: static-shape engine uses one shared cache_index per tick via
         # per-slot positions; the cache write offset is each slot's position
-        batch = {"tokens": jnp.asarray(tokens), "positions": jnp.asarray(positions)}
-        idx = jnp.asarray(self.slot_pos, jnp.int32)  # per-slot write offsets
-        logits, self.cache = self._decode(self.params, batch, self.cache, idx)
+        logits = self._decode_tick(tokens)
         self.steps_run += 1
         self.key, sub = jax.random.split(self.key)
         nxt = np.asarray(self.sampler(sub, logits[:, -1]))
@@ -220,33 +579,71 @@ class ServingEngine:
             req.out_tokens.append(tok)
             self.slot_pos[slot] += 1
             if (
-                (req.eos_id is not None and tok == req.eos_id)
+                tok in req.eos_ids()
                 or len(req.out_tokens) >= req.max_new_tokens
                 or self.slot_pos[slot] >= self.max_seq - 1
             ):
                 req.done = True
                 finished.append(req)
                 del self.active[slot]
+                if self.paged:
+                    self._release_pages(slot)
+                    self._admit_order.pop(slot, None)
         return finished
 
     def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
-        """Drive the engine until queue + slots drain; returns finished
+        """Drive the engine until queue + rows drain; returns finished
         requests in completion order."""
         done: list[Request] = []
         ticks = 0
-        while (self.queue or self.active) and ticks < max_ticks:
+
+        def pending():
+            if self.queue or self.active:
+                return True
+            return self.paged and bool(self._preempted)
+
+        while pending() and ticks < max_ticks:
             done.extend(self.step())
             ticks += 1
         return done
 
     # ------------------------------------------------------------------
     def kv_cache_nbytes(self) -> int:
-        """Resident bytes of the slot KV cache (all leaves, all layers).
+        """Resident bytes of the KV cache (all leaves, all layers).
 
         With ``spike_storage="packed"`` the spiking K/V planes are uint32
-        bit-planes (1 bit/spike) instead of f32/bf16 lanes — the serving-side
-        realisation of the paper's memory-access saving."""
+        bit-planes (1 bit/spike) instead of f32/bf16 lanes, and with
+        ``cache_layout="paged"`` this is the shared page pool — the actual
+        allocation, sized by ``num_pages`` rather than
+        ``num_slots * max_seq``."""
         return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.cache))
+
+    def stats(self) -> dict:
+        """Scheduler observability: occupancy, queueing, preemption."""
+        out = {
+            "layout": self.layout,
+            "ticks": self.steps_run,
+            "active": len(self.active),
+            "queued": len(self.queue),
+            "queue_wait_ticks": self.queue_wait_ticks,
+            "kv_cache_nbytes": self.kv_cache_nbytes(),
+        }
+        if not self.paged:
+            out["occupancy"] = len(self.active) / max(self.b, 1)
+            return out
+        out.update(
+            page_size=self.pool.page_size,
+            num_pages=self.pool.num_pages,
+            pages_free=self.pool.num_free,
+            pages_used=self.pool.num_used,
+            occupancy=self.pool.num_used / max(self.pool.num_usable, 1),
+            preempted_now=len(self._preempted),
+            preemptions=self.preemptions,
+            resumes=self.resumes,
+            replay_steps=self.replay_steps,
+            max_concurrency_seen=self.max_concurrency_seen,
+        )
+        return out
 
 
 def _scatter_slot(full: jax.Array, row: jax.Array, slot: int) -> jax.Array:

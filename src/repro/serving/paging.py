@@ -1,0 +1,131 @@
+"""Shared page pool + per-request block tables for the paged KV cache.
+
+The slab engine reserves one contiguous ``max_seq`` cache region per decode
+slot, so short prompts strand most of the reservation and concurrency is
+capped by ``num_slots`` regardless of how little cache the live requests
+actually need.  The paged layout (``AttentionConfig.cache_layout="paged"``)
+makes every cache leaf a pool of fixed-size pages shared by all requests:
+
+  * :class:`PagePool` — a free-list allocator over page ids.  Ids below
+    ``NUM_RESERVED_PAGES`` are never handed out: ``PAGE_ZERO`` keeps the
+    pristine init fill (zeros / packed enc(0) spikes / ``pos = -1``) that
+    unallocated block-table entries resolve to, and ``PAGE_SCRATCH`` is the
+    garbage sink that inactive decode rows read and write.
+  * :class:`BlockTables` — the per-row page lists plus assembly of the
+    combined ``(rows, width)`` int32 table the decode step consumes
+    (``models.blocks._cache_write`` writes through it, and
+    ``repro.attention.gather_pages`` gathers through it).
+
+Page ids are shared across layers and pattern slots: each slot's pool leaf
+is separate storage, so page ``p`` of a sliding-window slot and page ``p``
+of a global slot never collide.  The scheduler policy (admission, growth,
+preemption, resume-by-replay) lives in :class:`~repro.serving.engine.ServingEngine`.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import numpy as np
+
+from repro.attention import NUM_RESERVED_PAGES, PAGE_SCRATCH, PAGE_ZERO
+
+__all__ = ["PagePool", "BlockTables", "pages_for_rows"]
+
+
+def pages_for_rows(rows: int, page_size: int) -> int:
+    """Pages needed to back ``rows`` written cache rows (at least one)."""
+    return max(1, -(-rows // page_size))
+
+
+class PagePool:
+    """Free-list allocator over ``num_pages`` page ids of ``page_size`` rows."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= NUM_RESERVED_PAGES:
+            raise ValueError(
+                f"num_pages={num_pages} leaves no allocatable pages "
+                f"({NUM_RESERVED_PAGES} ids are reserved)"
+            )
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: collections.deque[int] = collections.deque(
+            range(NUM_RESERVED_PAGES, num_pages)
+        )
+
+    @property
+    def num_usable(self) -> int:
+        return self.num_pages - NUM_RESERVED_PAGES
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_usable - self.num_free
+
+    def alloc(self, n: int = 1) -> Optional[list[int]]:
+        """Pop ``n`` pages, or ``None`` (and take nothing) if short."""
+        if n < 0 or len(self._free) < n:
+            return None
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if not NUM_RESERVED_PAGES <= p < self.num_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+            self._free.append(int(p))
+
+
+class BlockTables:
+    """Per-row page lists over a fixed set of decode rows."""
+
+    def __init__(self, num_rows: int, max_pages_per_row: int):
+        self.num_rows = num_rows
+        self.width = max_pages_per_row
+        self.pages: dict[int, list[int]] = {}
+
+    def assign(self, row: int, pages: list[int]) -> None:
+        self.pages[row] = list(pages)
+
+    def append(self, row: int, page: int) -> None:
+        self.pages[row].append(page)
+
+    def num_pages(self, row: int) -> int:
+        return len(self.pages.get(row, ()))
+
+    def has_col(self, row: int, col: int) -> bool:
+        return col < self.num_pages(row)
+
+    def release(self, row: int) -> list[int]:
+        return self.pages.pop(row, [])
+
+    def as_array(self, width: Optional[int] = None) -> np.ndarray:
+        """Combined ``(num_rows, width)`` int32 gather/write table.
+
+        Rows with an allocation: their pages, padded with ``PAGE_ZERO`` (so
+        gathers of unallocated columns see the pristine init fill, and
+        writes never reach those columns).  Rows without one (idle or
+        preempted): all ``PAGE_SCRATCH`` — their garbage decode writes land
+        on the scratch page.
+        """
+        w = self.width if width is None else width
+        t = np.full((self.num_rows, w), PAGE_SCRATCH, np.int32)
+        for row, pgs in self.pages.items():
+            t[row, :] = PAGE_ZERO
+            n = min(len(pgs), w)
+            t[row, :n] = pgs[:n]
+        return t
+
+    def scatter_row(self, row: int) -> np.ndarray:
+        """``(width,)`` write table for scattering a prefilled slab row into
+        this row's pages: allocated columns get their page, the rest sink to
+        ``PAGE_SCRATCH`` (their content is the init fill anyway)."""
+        wt = np.full((self.width,), PAGE_SCRATCH, np.int32)
+        pgs = self.pages.get(row, [])
+        n = min(len(pgs), self.width)
+        wt[:n] = pgs[:n]
+        return wt

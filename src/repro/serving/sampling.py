@@ -4,8 +4,8 @@ A sampler is ``sampler(key, logits) -> tokens``: ``logits`` is ``(..., V)``
 (the engine passes the last-position logits, ``(B, V)`` on the decode tick
 and ``(V,)`` at prefill admission) and the result drops the vocab axis.
 ``greedy`` ignores the key, so engines stay deterministic by default;
-``make_sampler`` builds the temperature / top-k variant on
-``jax.random.categorical``.
+``make_sampler`` builds the temperature / top-k / top-p (nucleus) variant
+on ``jax.random.categorical``.
 """
 from __future__ import annotations
 
@@ -25,15 +25,35 @@ def greedy(key: jax.Array, logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def _top_p_mask(l32: jax.Array, top_p: float) -> jax.Array:
+    """Mask logits outside the smallest set whose probability mass reaches
+    ``top_p`` (nucleus sampling).  The highest-probability token always
+    survives, so the sampler never degenerates to an empty support."""
+    order = jnp.argsort(l32, axis=-1)[..., ::-1]              # desc
+    sorted_l = jnp.take_along_axis(l32, order, axis=-1)
+    csum = jnp.cumsum(jax.nn.softmax(sorted_l, axis=-1), axis=-1)
+    # token i is kept iff the mass strictly before it is < top_p
+    keep = (csum - jax.nn.softmax(sorted_l, axis=-1)) < jnp.float32(top_p)
+    masked_sorted = jnp.where(keep, sorted_l, jnp.float32(-jnp.inf))
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(masked_sorted, inv, axis=-1)
+
+
 def make_sampler(
-    temperature: float = 1.0, top_k: Optional[int] = None
+    temperature: float = 1.0,
+    top_k: Optional[int] = None,
+    top_p: Optional[float] = None,
 ) -> Sampler:
-    """Temperature / top-k sampling via ``jax.random.categorical``.
+    """Temperature / top-k / top-p sampling via ``jax.random.categorical``.
 
     ``temperature <= 0`` degenerates to greedy (use :func:`greedy` directly
-    when determinism matters); ``top_k`` keeps the k highest logits and
-    masks the rest before sampling.
+    when determinism matters); ``top_k`` keeps the k highest logits,
+    ``top_p`` keeps the smallest nucleus whose softmax mass reaches
+    ``top_p`` (both filters compose: top-k first, then top-p over the
+    survivors, as in the usual HF ordering).
     """
+    if top_p is not None and not 0.0 < top_p <= 1.0:
+        raise ValueError(f"top_p must be in (0, 1], got {top_p}")
     if temperature <= 0.0:
         return greedy
 
@@ -42,6 +62,8 @@ def make_sampler(
         if top_k is not None:
             kth = jax.lax.top_k(l32, top_k)[0][..., -1:]
             l32 = jnp.where(l32 < kth, jnp.float32(-jnp.inf), l32)
+        if top_p is not None and top_p < 1.0:
+            l32 = _top_p_mask(l32, top_p)
         return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)
 
     return sampler

@@ -1,10 +1,12 @@
 """Serving engine: continuous batching, slot reuse, per-slot cache offsets,
-decode == prefill consistency, bucketed prefill, pluggable sampling."""
+decode == prefill consistency, bucketed prefill, pluggable sampling.
+(The paged-cache scheduler has its own suite in test_paging.py.)"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
@@ -82,8 +84,13 @@ def test_packed_spike_storage_engine_matches_dense():
     """Continuous batching with the packed spiking KV cache emits the exact
     token streams of the dense-storage engine (same params, same seeds)."""
     cfg = get_smoke_config("codeqwen15_7b")
+    # storage set explicitly on both sides so the comparison stays
+    # dense-vs-packed even when a CI lane overrides the smoke default
     cfg_d = dataclasses.replace(
-        cfg, attention=dataclasses.replace(cfg.attention, impl="ssa")
+        cfg,
+        attention=dataclasses.replace(
+            cfg.attention, impl="ssa", spike_storage="dense"
+        ),
     )
     cfg_p = dataclasses.replace(
         cfg_d,
@@ -325,3 +332,89 @@ def test_engine_eos_frees_slot_early():
         req.eos_id = None  # keep natural termination; just bound the run
     eng.run_until_done(max_ticks=60)
     assert req.done and len(req.out_tokens) <= 30
+
+
+def test_engine_eos_accepts_int_or_set():
+    """Modern tokenizers stop on several ids: Request.eos_id takes an int,
+    a set, or any iterable, and the done check honours all of them."""
+    cfg, model, params, eng = _engine(slots=1, max_seq=40)
+    prompt = np.array([1, 2, 3], np.int32)
+    ref = Request(uid=0, prompt=prompt.copy(), max_new_tokens=8)
+    eng.submit(ref)
+    eng.run_until_done(max_ticks=30)
+    assert len(ref.out_tokens) == 8
+    stop_tok = ref.out_tokens[2]  # greedy => reproducible third token
+
+    for eos in (stop_tok, {stop_tok}, frozenset({stop_tok}),
+                [stop_tok, cfg.vocab_size + 7]):
+        eng2 = ServingEngine(model, params, num_slots=1, max_seq=40)
+        req = Request(uid=1, prompt=prompt.copy(), max_new_tokens=8,
+                      eos_id=eos)
+        eng2.submit(req)
+        eng2.run_until_done(max_ticks=30)
+        assert req.done
+        assert req.out_tokens == ref.out_tokens[:3], (eos, req.out_tokens)
+
+    # an eos set that never fires leaves the stream unchanged
+    eng3 = ServingEngine(model, params, num_slots=1, max_seq=40)
+    req = Request(uid=2, prompt=prompt.copy(), max_new_tokens=8,
+                  eos_id={cfg.vocab_size + 1, cfg.vocab_size + 2})
+    eng3.submit(req)
+    eng3.run_until_done(max_ticks=30)
+    assert req.out_tokens == ref.out_tokens
+
+
+def test_top_p_sampler_restricts_support():
+    """Nucleus sampling keeps the smallest prefix of the sorted softmax
+    whose mass reaches top_p (the argmax always survives)."""
+    probs = np.array([0.5, 0.3, 0.15, 0.05], np.float32)
+    logits = jnp.log(jnp.asarray(probs))
+    sampler = make_sampler(temperature=1.0, top_p=0.6)
+    seen = {
+        int(sampler(jax.random.PRNGKey(i), logits)) for i in range(200)
+    }
+    # cumulative mass before token: 0, 0.5, 0.8, 0.95 -> nucleus = {0, 1}
+    assert seen == {0, 1}, seen
+
+    # top_p=1.0 keeps the full support
+    seen_all = {
+        int(make_sampler(1.0, top_p=1.0)(jax.random.PRNGKey(i), logits))
+        for i in range(400)
+    }
+    assert seen_all == {0, 1, 2, 3}, seen_all
+
+    # a tiny nucleus collapses to the argmax, batched logits included
+    tiny = make_sampler(temperature=0.7, top_p=1e-6)
+    batch = jnp.stack([logits, logits[::-1]])
+    out = np.asarray(tiny(jax.random.PRNGKey(0), batch))
+    assert out.tolist() == [0, 3]
+
+    # composes with top-k (top-k first, then the nucleus over survivors)
+    both = make_sampler(1.0, top_k=2, top_p=0.4)
+    seen_both = {
+        int(both(jax.random.PRNGKey(i), logits)) for i in range(200)
+    }
+    assert seen_both == {0}, seen_both
+
+    with pytest.raises(ValueError):
+        make_sampler(1.0, top_p=0.0)
+
+
+def test_top_p_sampler_through_engine():
+    """Engine-level: top-p sampling is deterministic per rng_seed and emits
+    in-vocab tokens."""
+    cfg, model, params, _ = _engine(slots=1, max_seq=32)
+    sampler = make_sampler(temperature=1.2, top_p=0.9)
+    streams = []
+    for _ in range(2):
+        eng = ServingEngine(
+            model, params, num_slots=1, max_seq=32, rng_seed=11,
+            sampler=sampler,
+        )
+        req = Request(uid=0, prompt=np.array([5, 7, 9], np.int32),
+                      max_new_tokens=6)
+        eng.submit(req)
+        eng.run_until_done(max_ticks=30)
+        assert all(0 <= t < cfg.vocab_size for t in req.out_tokens)
+        streams.append(req.out_tokens)
+    assert streams[0] == streams[1]

@@ -15,7 +15,12 @@ accumulates.
 ``--compare-paging`` serves one synthetic bursty trace through a slab
 engine and through a paged engine holding the *same pool bytes* but more
 decode rows, and writes kv bytes allocated / achieved concurrency /
-tokens-per-sec / preemption counters to ``benchmarks/BENCH_paging.json``."""
+tokens-per-sec / preemption counters to ``benchmarks/BENCH_paging.json``.
+
+``--compare-sharing`` serves a bursty trace whose requests share a system
+prompt through the same tight paged pool with prefix sharing off and on,
+and writes physical-page savings / achieved concurrency / queue-wait
+deltas to ``benchmarks/BENCH_sharing.json``."""
 from __future__ import annotations
 
 import argparse
@@ -340,9 +345,7 @@ def bench_paging_compare(record_path: str | None = None):
         t0 = time.perf_counter()
         done, tick, i = [], 0, 0
         max_active = 0
-        while i < len(reqs) or eng.queue or eng.active or (
-            eng.paged and eng._preempted
-        ):
+        while i < len(reqs) or eng.has_pending_work:
             while i < len(reqs) and arrivals[i] <= tick:
                 eng.submit(reqs[i])
                 i += 1
@@ -398,6 +401,132 @@ def bench_paging_compare(record_path: str | None = None):
     )
 
 
+def bench_sharing_compare(record_path: str | None = None):
+    """Prefix sharing on vs off over one bursty shared-system-prompt trace
+    (smoke SSA model, packed storage + paged cache, CPU).
+
+    Every request carries the same 16-token system prompt plus a short
+    random suffix — the chat-serving shape prefix sharing targets.  Both
+    engines hold the same (deliberately tight) page pool; the shared run
+    maps the prompt's full pages once per (seed, tokens) key instead of
+    once per request, so the comparison reports physical-page peaks,
+    achieved concurrency and queue wait, and writes
+    ``benchmarks/BENCH_sharing.json``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.attention import NUM_RESERVED_PAGES
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    slots, max_seq, page_size = 6, 64, 8
+    num_pages = NUM_RESERVED_PAGES + 14   # tight: forces queueing unshared
+    cfg = with_overrides(
+        get_smoke_config("codeqwen15_7b"),
+        attention__impl="ssa",
+        attention__spike_storage="packed",
+        attention__cache_layout="paged",
+    )
+
+    def trace():
+        rng = np.random.default_rng(0)
+        system = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        reqs, arrivals = [], []
+        uid = 0
+        for tick in (0, 3, 6):
+            for _ in range(6):
+                suffix = rng.integers(
+                    0, cfg.vocab_size, int(rng.integers(3, 9))
+                ).astype(np.int32)
+                reqs.append(
+                    Request(
+                        uid=uid,
+                        prompt=np.concatenate([system, suffix]),
+                        max_new_tokens=int(rng.integers(4, 10)),
+                    )
+                )
+                arrivals.append(tick)
+                uid += 1
+        return reqs, arrivals
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if record_path is None:
+        record_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "BENCH_sharing.json"
+        )
+    results = {}
+    for name, share in (("unshared", False), ("shared", True)):
+        eng = ServingEngine(
+            model, params, num_slots=slots, max_seq=max_seq,
+            page_size=page_size, num_pages=num_pages, share_prefix=share,
+        )
+        reqs, arrivals = trace()
+        t0 = time.perf_counter()
+        done, tick, i = [], 0, 0
+        while i < len(reqs) or eng.has_pending_work:
+            while i < len(reqs) and arrivals[i] <= tick:
+                eng.submit(reqs[i])
+                i += 1
+            done.extend(eng.step())
+            tick += 1
+            assert tick < 2000
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        stats = eng.stats()
+        results[name] = {
+            "requests": len(done),
+            "tokens": toks,
+            "ticks": tick,
+            "tokens_per_sec": round(toks / wall, 1),
+            "peak_pages_used": stats["peak_pages_used"],
+            "achieved_concurrency": stats["max_concurrency_seen"],
+            "queue_wait_ticks": stats["queue_wait_ticks"],
+            "preemptions": stats["preemptions"],
+            "shared_page_hits": stats["shared_page_hits"],
+            "cow_copies": stats["cow_copies"],
+        }
+        r = results[name]
+        print(
+            f"sharing_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
+            f"peak_pages={r['peak_pages_used']}"
+            f";concurrency={r['achieved_concurrency']}"
+            f";queue_wait={r['queue_wait_ticks']}"
+            f";ticks={r['ticks']};hits={r['shared_page_hits']}"
+            f";cow={r['cow_copies']}"
+        )
+    rec = {
+        "bench": "sharing_compare",
+        "trace": {"requests": 18, "waves": 3, "system_prompt_tokens": 16},
+        "pool": {"num_pages": num_pages, "page_size": page_size,
+                 "slots": slots, "max_seq": max_seq},
+        "engines": results,
+        "page_savings": round(
+            1.0 - results["shared"]["peak_pages_used"]
+            / max(results["unshared"]["peak_pages_used"], 1), 3
+        ),
+        "concurrency_gain": round(
+            results["shared"]["achieved_concurrency"]
+            / max(results["unshared"]["achieved_concurrency"], 1), 2
+        ),
+        "queue_wait_ratio": round(
+            results["shared"]["queue_wait_ticks"]
+            / max(results["unshared"]["queue_wait_ticks"], 1), 3
+        ),
+        "ts": time.time(),
+    }
+    with open(record_path, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(
+        f"sharing_compare/summary,0,page_savings={rec['page_savings']}"
+        f";concurrency_gain={rec['concurrency_gain']}"
+        f";queue_wait_ratio={rec['queue_wait_ratio']};path={record_path}"
+    )
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -417,6 +546,12 @@ def main() -> None:
         help="only run the slab-vs-paged serving comparison "
         "(writes benchmarks/BENCH_paging.json)",
     )
+    parser.add_argument(
+        "--compare-sharing",
+        action="store_true",
+        help="only run the prefix-sharing on/off serving comparison "
+        "(writes benchmarks/BENCH_sharing.json)",
+    )
     args = parser.parse_args()
     if args.compare_storage:
         bench_storage_compare()
@@ -426,6 +561,9 @@ def main() -> None:
         return
     if args.compare_paging:
         bench_paging_compare()
+        return
+    if args.compare_sharing:
+        bench_sharing_compare()
         return
     bench_table2_energy()
     bench_table3_latency()

@@ -8,12 +8,18 @@ handling.  With ``--cache-layout paged`` the KV cache is a shared page pool
 scheduler preempts and resumes requests — greedy token streams stay
 identical to the slab engine either way.
 
+With ``--share-prefix`` (paged layout) every demo request gets a shared
+16-token system prompt and the engine maps its full pages once, copy-on-
+write — the printed stats show physical-page hits and CoW copies.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --backend fused \
           --spike-storage packed --temperature 0.8 --top-k 40 --top-p 0.95
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
           --cache-layout paged --page-size 16 --num-pages 14
+      PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
+          --cache-layout paged --share-prefix
 """
 import argparse
 import time
@@ -55,6 +61,11 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="total pool pages incl. 2 reserved (paged layout; "
                          "default fits slots*max_seq)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="map requests with a common prompt prefix onto the "
+                         "same physical pages (copy-on-write; paged layout "
+                         "only — the demo gives every request a shared "
+                         "system prompt so the sharing is visible)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -78,13 +89,18 @@ def main():
         )
     engine = ServingEngine(model, params, num_slots=args.slots,
                            max_seq=args.max_seq, sampler=sampler,
-                           page_size=args.page_size, num_pages=args.num_pages)
+                           page_size=args.page_size, num_pages=args.num_pages,
+                           share_prefix=args.share_prefix)
 
     rng = np.random.default_rng(0)
+    system = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+              if args.share_prefix else np.empty(0, np.int32))
     reqs = []
     for uid in range(args.requests):
         plen = int(rng.integers(4, 24))
-        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        prompt = np.concatenate(
+            [system, rng.integers(0, cfg.vocab_size, plen).astype(np.int32)]
+        )
         req = Request(uid=uid, prompt=prompt,
                       max_new_tokens=int(rng.integers(8, 24)))
         reqs.append(req)
@@ -92,9 +108,7 @@ def main():
 
     t0 = time.time()
     ticks = 0
-    while engine.queue or engine.active or (
-        engine.paged and engine._preempted
-    ):
+    while engine.has_pending_work:
         engine.step()
         ticks += 1
         if ticks % 8 == 0:
@@ -122,11 +136,15 @@ def main():
     if engine.paged:
         s = engine.stats()
         print(f"paged scheduler: page_size={s['page_size']} "
-              f"pool={s['num_pages']} pages, "
+              f"pool={s['num_pages']} pages (peak used {s['peak_pages_used']}), "
               f"preemptions={s['preemptions']} resumes={s['resumes']} "
-              f"replay_steps={s['replay_steps']} "
+              f"replay_steps={s['replay_steps']} migrations={s['migrations']} "
               f"max_concurrency={s['max_concurrency_seen']} "
               f"queue_wait={s['queue_wait_ticks']} ticks")
+        if s["share_prefix"]:
+            print(f"prefix sharing: shared_page_hits={s['shared_page_hits']} "
+                  f"cow_copies={s['cow_copies']} "
+                  f"shared_pages_now={s['shared_pages_now']}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}...")
 

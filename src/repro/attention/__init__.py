@@ -16,12 +16,15 @@ from .base import (
     NUM_RESERVED_PAGES,
     PAGE_SCRATCH,
     PAGE_ZERO,
+    RNG_CONTRACT_VERSION,
     AttentionBackend,
     AttentionInvocation,
     available_backends,
     default_interpret,
-    derive_step_seeds,
+    derive_request_seeds,
+    derive_step_row_seeds,
     fold_heads,
+    fold_layer_seeds,
     gather_pages,
     get_backend,
     is_paged_cache,
@@ -45,12 +48,15 @@ __all__ = [
     "NUM_RESERVED_PAGES",
     "PAGE_SCRATCH",
     "PAGE_ZERO",
+    "RNG_CONTRACT_VERSION",
     "AttentionBackend",
     "AttentionInvocation",
     "available_backends",
     "default_interpret",
-    "derive_step_seeds",
+    "derive_request_seeds",
+    "derive_step_row_seeds",
     "fold_heads",
+    "fold_layer_seeds",
     "gather_pages",
     "get_backend",
     "is_paged_cache",

@@ -17,12 +17,19 @@ Registered backends (see docs/attention_backends.md):
                            (packed KV decode; no unpack in the hot loop)
   * ``spikformer-xla``   — Spikformer baseline [18]
 
-Seed derivation: every SSA backend draws its per-time-step uint32 counter
-seeds with :func:`derive_step_seeds` from the layer rng (which the
-transformer scan splits per layer), so the mapping ``(rng, layer, t_step) ->
-seed`` is identical across backends, trace-stable under scan/vmap, and
-reproducible between prefill and decode.  Same rng => same spikes on every
-backend; that is what makes backend choice a pure performance knob.
+Seed derivation (RNG contract v2, "request-addressed"): backends receive a
+per-sequence seed vector ``seeds (B,)`` uint32 (one value per batch row /
+request) that the model layer has already folded per layer
+(:func:`fold_layer_seeds`).  Each SSA backend expands it to one stream per
+(row, head, time-step) with :func:`derive_step_row_seeds`, so the mapping
+``(request seed, layer, head, t_step) -> stream`` is identical across
+backends, trace-stable under scan/vmap, and reproducible between prefill
+and decode.  Counter indices inside the streams are keyed by absolute token
+position only (see ``kernels.ssa_attention.ref``), so nothing depends on
+the batch row, pad bucket, cache extent, or decode width — same seeds =>
+same spikes on every backend, in any batch geometry; that is what makes
+backend choice a pure performance knob and gives the serving scheduler
+vLLM-style freedom (row migration, extent-bounded gathers, prefix sharing).
 """
 from __future__ import annotations
 
@@ -31,14 +38,17 @@ from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AttentionConfig
+from repro.kernels.common import mix32
 
 __all__ = [
     "MODES",
     "PAGE_ZERO",
     "PAGE_SCRATCH",
     "NUM_RESERVED_PAGES",
+    "RNG_CONTRACT_VERSION",
     "AttentionInvocation",
     "AttentionBackend",
     "register_backend",
@@ -46,7 +56,9 @@ __all__ = [
     "available_backends",
     "resolve_backend_name",
     "resolve_backend",
-    "derive_step_seeds",
+    "derive_request_seeds",
+    "fold_layer_seeds",
+    "derive_step_row_seeds",
     "fold_heads",
     "unfold_heads",
     "default_interpret",
@@ -55,11 +67,18 @@ __all__ = [
     "gather_pages",
 ]
 
+# Version of the (seed, layer, t_step, position, channel) -> uniform mapping.
+# Bump whenever the derivation chain or counter-index scheme changes: spike
+# streams are only reproducible across builds that agree on this number.
+# v1 derived per-step seeds from a split PRNG key and strided counters by
+# batch row and padded cache geometry; v2 (this) is request-addressed.
+RNG_CONTRACT_VERSION = 2
+
 MODES = ("train", "prefill", "decode")
 
-# Tile geometry shared by every SSA backend.  The counter-RNG index scheme
-# strides by the *padded* dims, so all backends must agree on these for
-# bit-identical sampling (see kernels.ssa_attention.ref.padded_dims).
+# Default tile geometry for the fused kernels.  Since RNG contract v2 the
+# counter streams are independent of tiling (position-keyed), so these are
+# pure performance knobs — any block size samples the same spikes.
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 
@@ -85,8 +104,13 @@ class AttentionInvocation:
     causal: bool
     window: Optional[int] = None
     softcap: Optional[float] = None
-    rng: Optional[jax.Array] = None
-    kv_positions: Optional[jax.Array] = None  # ann decode masking
+    # per-sequence uint32 seeds (B,), already folded per layer by the model
+    # (fold_layer_seeds); the SSA sampling streams derive from these alone
+    seeds: Optional[jax.Array] = None
+    # absolute token positions: (B, S) for queries, (B, S_kv) for keys;
+    # -1 marks absent tokens (pad rows, never-written cache slots).  Both
+    # the ann mask and the SSA counter RNG key off these.
+    kv_positions: Optional[jax.Array] = None
     q_positions: Optional[jax.Array] = None
     spike_q: Optional[jax.Array] = None       # (T, B, S, H_pad, hd)
     spike_k: Optional[jax.Array] = None       # (T, B, S_kv, H_kv, hd)
@@ -207,17 +231,56 @@ def resolve_backend(
 # ---------------------------------------------------------------------------
 
 
-def derive_step_seeds(rng: Optional[jax.Array], t_steps: int) -> jax.Array:
-    """(T,) uint32 counter-RNG seeds for the SSA time steps.
+# Salts separating the seed-derivation stages (numpy scalars stay jaxpr
+# literals).  Each stage ends in a mix32 avalanche, so streams from
+# different (row, layer, head, step) coordinates are decorrelated.
+_ROW_SALT = np.uint32(0x9E3779B9)
+_LAYER_SALT = np.uint32(0x632BE5AB)
+_HEAD_SALT = np.uint32(0x85EBCA6B)
+_STEP_SALT = np.uint32(0xC2B2AE35)
 
-    The single place seeds are derived: the transformer scan already splits
-    ``rng`` per layer, so seed ``t`` is a pure function of (rng, layer,
-    t_step).  All SSA backends call this, which is what makes xla / fused /
-    fused-packed sample identical spikes for the same rng.
+
+def derive_request_seeds(rng: Optional[jax.Array], batch: int) -> jax.Array:
+    """(B,) uint32 per-sequence seeds from a PRNG key (training/default path).
+
+    Row ``b``'s seed is ``mix32(bits(rng) + b * SALT)`` — a pure function of
+    ``(rng, b)`` that does NOT depend on the batch width, so the same
+    logical sequence seeds identically whether it sits in a width-1 or
+    width-64 batch.  Serving bypasses this and passes each request's own
+    seed instead (``Request.seed``); the engine's default request seed is
+    ``derive_request_seeds(None, 1)[0]``, which is what makes a request in
+    any engine row match a manual batch-1 prefill+decode loop exactly.
     """
     if rng is None:
         rng = jax.random.PRNGKey(0)
-    return jax.random.bits(rng, (t_steps,), jnp.uint32)
+    base = jax.random.bits(rng, (), jnp.uint32)
+    rows = jnp.arange(batch, dtype=jnp.uint32)
+    return mix32(base + rows * _ROW_SALT)
+
+
+def fold_layer_seeds(seeds: jax.Array, layer_index) -> jax.Array:
+    """Fold a flat layer counter into the per-sequence seeds (elementwise).
+
+    ``layer_index`` may be a traced scalar (the transformer scan carries it),
+    so the fold is trace-stable and identical between prefill and decode —
+    the property the serving cache-identity contract rests on.
+    """
+    li = jnp.asarray(layer_index).astype(jnp.uint32)
+    return mix32(seeds.astype(jnp.uint32) ^ mix32(li * _LAYER_SALT + 1))
+
+
+def derive_step_row_seeds(seeds: jax.Array, t_steps: int, heads: int) -> jax.Array:
+    """(B,) layer seeds -> (T, B*heads) uint32 stream seeds, fold_heads order.
+
+    One independent counter-RNG stream per (sequence, head, time step).  The
+    single place this expansion lives: all SSA backends call it, which is
+    what keeps xla / fused / fused-packed bit-identical for the same seeds.
+    """
+    h = jnp.arange(heads, dtype=jnp.uint32)
+    t = jnp.arange(t_steps, dtype=jnp.uint32)
+    s = mix32(seeds.astype(jnp.uint32)[:, None] + h[None, :] * _HEAD_SALT)
+    s = mix32(s[None] + t[:, None, None] * _STEP_SALT)        # (T, B, H)
+    return s.reshape(t_steps, -1)
 
 
 def fold_heads(z: jax.Array) -> jax.Array:
@@ -273,10 +336,11 @@ def is_paged_cache(cache: Optional[dict]) -> bool:
 def paged_extent(cache: dict, layer_window: Optional[int]) -> int:
     """Logical contiguous extent a paged layer cache stands in for.
 
-    Global layers: the full block-table span ``W * page_size`` (the engine
-    passes a full-width table for spiking impls — where decode attends over
-    the whole slab extent — and a growth-bucketed one for position-masked
-    impls).  Sliding-window layers: clamped to the window, matching the slab
+    Global layers: the block-table span ``W * page_size`` — the engine syncs
+    a growth-bucketed table width for *every* impl (all backends are
+    position-masked and extent-invariant since RNG contract v2, spiking
+    included), so the span covers the allocated pages, not ``max_seq``.
+    Sliding-window layers: clamped to the window, matching the slab
     layout's ``S_cache = min(window, max_seq)`` rolling extent.
     """
     page_size = cache["pos"].shape[-1]

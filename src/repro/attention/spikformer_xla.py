@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core.spikformer import spikformer_attention
 
 from .base import AttentionInvocation, register_backend
-from .spiking import folded_spike_trains, rate_decode
+from .spiking import folded_positions, folded_spike_trains, rate_decode
 
 __all__ = ["SpikformerXlaBackend"]
 
@@ -25,8 +25,14 @@ class SpikformerXlaBackend:
 
     def apply(self, inv: AttentionInvocation) -> jnp.ndarray:
         qs, ks, vs = folded_spike_trains(inv)
+        # Position-masked (extent-invariant) whenever the orchestration
+        # layer supplies positions — the decoder-LM path always does, so
+        # spikformer decode can ride the same extent-bounded paged gather
+        # as SSA; the ViT path passes none and keeps the index-based masks.
+        q_pos, kv_pos = folded_positions(inv)
         spikes = spikformer_attention(
-            qs, ks, vs, causal=inv.causal, window=inv.window
+            qs, ks, vs, causal=inv.causal, window=inv.window,
+            q_positions=q_pos, kv_positions=kv_pos,
         )
         b, h = inv.q.shape[0], inv.q.shape[2]
         return rate_decode(spikes, b, h)

@@ -14,7 +14,24 @@ import jax.numpy as jnp
 
 from .base import AttentionInvocation, fold_heads
 
-__all__ = ["folded_spike_trains", "rate_decode"]
+__all__ = ["folded_spike_trains", "folded_positions", "rate_decode"]
+
+
+def folded_positions(inv: AttentionInvocation):
+    """(q_positions, kv_positions) repeated per folded head row.
+
+    ``fold_heads`` lays rows out batch-major (row = b * H + h), so repeating
+    each sequence's position vector H times yields the per-row positions the
+    kernels and oracles consume.  Falls back to the contiguous default
+    (``None``) when the orchestration layer provided no positions.
+    """
+    h = inv.q.shape[2]
+    q_pos = kv_pos = None
+    if inv.q_positions is not None:
+        q_pos = jnp.repeat(jnp.asarray(inv.q_positions, jnp.int32), h, axis=0)
+    if inv.kv_positions is not None:
+        kv_pos = jnp.repeat(jnp.asarray(inv.kv_positions, jnp.int32), h, axis=0)
+    return q_pos, kv_pos
 
 
 def folded_spike_trains(inv: AttentionInvocation, *, unpack_kv: bool = True):

@@ -5,7 +5,9 @@ The decode hot loop of the packed spiking KV cache: cached K/V spike planes
 kernel *as words* — they are never unpacked in XLA; the kernel expands them
 to MXU lanes per-tile in VMEM.  Only the single new query token is encoded
 and packed per step.  Outputs are bit-identical to ``ssa-fused`` /
-``ssa-xla`` for the same derived seeds (shared tile body + counter RNG).
+``ssa-xla`` for the same seeds and positions (shared tile body + counter
+RNG), and since the streams are position-keyed the gathered cache span may
+be anything that covers the written tokens (extent-bounded paged decode).
 
 Inference-only, like the packed kernel itself; training and prefill route
 through ``ssa-fused`` on dense trains.
@@ -21,11 +23,11 @@ from .base import (
     DEFAULT_BLOCK_Q,
     AttentionInvocation,
     default_interpret,
-    derive_step_seeds,
+    derive_step_row_seeds,
     fold_heads,
     register_backend,
 )
-from .spiking import rate_decode
+from .spiking import folded_positions, rate_decode
 
 __all__ = ["SsaFusedPackedBackend"]
 
@@ -54,25 +56,29 @@ class SsaFusedPackedBackend:
             vw = jnp.repeat(vw, inv.groups, axis=3)
         kw, vw = fold_heads(kw), fold_heads(vw)
         t_steps = qw.shape[0]
-        seeds = derive_step_seeds(inv.rng, t_steps)
+        b, h = inv.q.shape[0], inv.q.shape[2]
+        seeds = inv.seeds if inv.seeds is not None else jnp.zeros(b, jnp.uint32)
+        step_seeds = derive_step_row_seeds(seeds, t_steps, h)
+        q_pos, kv_pos = folded_positions(inv)
         interpret = default_interpret()
         outs = [
             fused_ssa_attention(
                 qw[t],
                 kw[t],
                 vw[t],
-                seeds[t],
+                step_seeds[t],
                 inv.causal,
                 inv.window,
                 DEFAULT_BLOCK_Q,
                 DEFAULT_BLOCK_K,
                 interpret,
+                q_positions=q_pos,
+                kv_positions=kv_pos,
                 packed=True,
                 d_k=hd,
             )
             for t in range(t_steps)
         ]
-        b, h = inv.q.shape[0], inv.q.shape[2]
         return rate_decode(jnp.stack(outs), b, h)
 
 

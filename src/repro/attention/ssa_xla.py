@@ -1,9 +1,9 @@
 """``ssa-xla`` backend: eq. 5/6 in plain XLA with the kernel's counter RNG.
 
 This is the fused kernel's jnp oracle made trainable: the same stateless
-counter-RNG indices and division-free comparisons as the Pallas tile body
-(``u * D_K < counts`` / ``u * visible < counts``), wrapped in a
-straight-through estimator whose cotangent scaling matches the fused
+position-keyed counter-RNG indices and division-free comparisons as the
+Pallas tile body (``u * D_K < counts`` / ``u * visible < counts``), wrapped
+in a straight-through estimator whose cotangent scaling matches the fused
 kernel's custom VJP.  Forward outputs are therefore **bit-identical** to
 ``ssa-fused`` / ``ssa-fused-packed`` for the same derived seeds, on any
 platform, which turns backend selection into a pure performance choice and
@@ -14,26 +14,27 @@ agrees with this path in distribution — see tests/test_attention_backends.)
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import uniform_from_counter
 from repro.kernels.ssa_attention.kernel import SALT_A, SALT_S
 from repro.kernels.ssa_attention.ref import (
+    ensure_positions,
     output_counter_idx,
-    padded_dims,
     score_counter_idx,
+    valid_mask,
     visible_counts,
 )
 
 from .base import (
-    DEFAULT_BLOCK_K,
-    DEFAULT_BLOCK_Q,
     AttentionInvocation,
-    derive_step_seeds,
+    derive_step_row_seeds,
     register_backend,
 )
-from .spiking import folded_spike_trains, rate_decode
+from .spiking import folded_positions, folded_spike_trains, rate_decode
 
 __all__ = ["SsaXlaBackend", "ssa_xla_attention"]
 
@@ -70,22 +71,26 @@ def ssa_xla_attention(
     qs: jax.Array,
     ks: jax.Array,
     vs: jax.Array,
-    seeds: jax.Array,
+    step_seeds: jax.Array,
     *,
     causal: bool,
-    window,
-    block_q: int = DEFAULT_BLOCK_Q,
-    block_k: int = DEFAULT_BLOCK_K,
+    window: Optional[int],
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """SSA over folded trains (T, B, N, D) with per-step counter seeds (T,).
+    """SSA over folded trains (T, B, N, D) with (T, B) per-row step seeds.
 
-    Returns (T, B, N, D) 0/1 spikes, bit-identical to running the fused
-    kernel per time step with the same seeds.
+    ``q_positions (B, N)`` / ``kv_positions (B, N_kv)``: absolute token
+    positions (-1 = absent; defaults contiguous with queries at the end of
+    the kv axis).  Returns (T, B, N, D) 0/1 spikes, bit-identical to running
+    the fused kernel per time step with the same seeds/positions.
     """
     t_steps, bsz, n_q, d_k = qs.shape
     n_kv = ks.shape[2]
-    n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
-    seeds = seeds.astype(jnp.uint32).reshape(t_steps, 1, 1, 1)
+    q_positions, kv_positions = ensure_positions(
+        q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    seeds = step_seeds.astype(jnp.uint32).reshape(t_steps, bsz, 1, 1)
 
     # --- eq. 5: score spikes --------------------------------------------
     counts_s = jnp.einsum(
@@ -94,28 +99,21 @@ def ssa_xla_attention(
         ks.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
-    qi = jnp.arange(n_q)[:, None]
-    kj = jnp.arange(n_kv)[None, :]
-    qpos = qi + (n_kv - n_q)
-    valid = jnp.ones((n_q, n_kv), dtype=bool)
-    if causal:
-        valid &= kj <= qpos
-    if window is not None:
-        valid &= kj > qpos - window
-    idx_s = score_counter_idx(bsz, n_q, n_kv, n_q_pad, n_kv_pad)[None]
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    idx_s = score_counter_idx(q_positions, kv_positions)[None]
     u_s = uniform_from_counter(seeds ^ SALT_S, idx_s)
     s = _ste_threshold(
         u_s * jnp.float32(d_k), counts_s, jnp.float32(1.0 / d_k)
     )
-    s = jnp.where(valid[None, None], s, 0.0)
+    s = jnp.where(valid[None], s, 0.0)
 
     # --- eq. 6: output spikes -------------------------------------------
     counts_a = jnp.einsum(
         "tbqk,tbkd->tbqd", s, vs.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
-    visible = visible_counts(n_q, n_kv, causal, window)[:, None]
-    idx_a = output_counter_idx(bsz, n_q, d_k, n_q_pad, d_pad)[None]
+    visible = visible_counts(valid)[:, :, None]           # (B, N, 1)
+    idx_a = output_counter_idx(q_positions, d_k)[None]
     u_a = uniform_from_counter(seeds ^ SALT_A, idx_a)
     return _ste_threshold(u_a * visible, counts_a, 1.0 / visible)
 
@@ -128,11 +126,15 @@ class SsaXlaBackend:
 
     def apply(self, inv: AttentionInvocation) -> jax.Array:
         qs, ks, vs = folded_spike_trains(inv)
-        seeds = derive_step_seeds(inv.rng, qs.shape[0])
-        spikes = ssa_xla_attention(
-            qs, ks, vs, seeds, causal=inv.causal, window=inv.window
-        )
         b, h = inv.q.shape[0], inv.q.shape[2]
+        seeds = inv.seeds if inv.seeds is not None else jnp.zeros(b, jnp.uint32)
+        step_seeds = derive_step_row_seeds(seeds, qs.shape[0], h)
+        q_pos, kv_pos = folded_positions(inv)
+        spikes = ssa_xla_attention(
+            qs, ks, vs, step_seeds,
+            causal=inv.causal, window=inv.window,
+            q_positions=q_pos, kv_positions=kv_pos,
+        )
         return rate_decode(spikes, b, h)
 
 

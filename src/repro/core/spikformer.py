@@ -5,6 +5,19 @@ Spikformer computes, per time step, the softmax-free product
 re-binarises through a spiking neuron.  It is the architecture the paper's
 Table I/II compares SSA against, so we implement it as a selectable attention
 backend too.
+
+Two masking modes:
+
+  * index-based (default, positions ``None``): the historical
+    ``visibility_mask`` over matrix indices with a static ``1/(D_K N_kv)``
+    scale — the spiking-ViT training path.
+  * position-based (``q_positions``/``kv_positions`` given): masks compare
+    *absolute token positions* (-1 = absent) and the scale normalises by
+    each query's per-row count of visible tokens.  This makes the output
+    invariant to the cache extent / pad bucket — required for the serving
+    engine's extent-bounded paged decode — at the cost of streams differing
+    from the index-masked mode (the decoder-LM orchestration always passes
+    positions, so LM streams are consistently position-based).
 """
 from __future__ import annotations
 
@@ -29,6 +42,8 @@ def spikformer_attention_step(
     scale: Optional[float] = None,
     causal: bool = False,
     window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
 ) -> jax.Array:
     """One time step of Spikformer attention on 0/1 spikes.
 
@@ -38,14 +53,28 @@ def spikformer_attention_step(
     """
     n_q, d_k = q.shape[-2], q.shape[-1]
     n_kv = k.shape[-2]
-    if scale is None:
-        scale = 1.0 / (d_k * max(n_kv, 1)) * 8.0  # keeps counts O(1) pre-threshold
     scores = jnp.einsum("...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32)
-    mask = visibility_mask(n_q, n_kv, causal=causal, window=window)
-    if mask is not None:
-        scores = scores * mask
-    out = jnp.einsum("...qk,...kd->...qd", scores, v, preferred_element_type=jnp.float32)
-    out = out * jnp.float32(scale)
+    if q_positions is not None and kv_positions is not None:
+        # same position-validity mask and per-query visible normaliser as
+        # the SSA paths (single source of the extent-invariance contract)
+        from repro.kernels.ssa_attention.ref import valid_mask, visible_counts
+
+        valid = valid_mask(q_positions, kv_positions, causal, window)
+        scores = jnp.where(valid, scores, 0.0)
+        out = jnp.einsum(
+            "...qk,...kd->...qd", scores, v, preferred_element_type=jnp.float32
+        )
+        out = out * (8.0 / (d_k * visible_counts(valid)))[..., :, None]
+    else:
+        if scale is None:
+            scale = 1.0 / (d_k * max(n_kv, 1)) * 8.0  # keeps counts O(1)
+        mask = visibility_mask(n_q, n_kv, causal=causal, window=window)
+        if mask is not None:
+            scores = scores * mask
+        out = jnp.einsum(
+            "...qk,...kd->...qd", scores, v, preferred_element_type=jnp.float32
+        )
+        out = out * jnp.float32(scale)
     return spike_heaviside(out - 0.5).astype(q.dtype)
 
 
@@ -57,10 +86,13 @@ def spikformer_attention(
     scale: Optional[float] = None,
     causal: bool = False,
     window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Spikformer attention over a ``(T, ...)`` spike train."""
     return jax.vmap(
         lambda qq, kk, vv: spikformer_attention_step(
-            qq, kk, vv, scale=scale, causal=causal, window=window
+            qq, kk, vv, scale=scale, causal=causal, window=window,
+            q_positions=q_positions, kv_positions=kv_positions,
         )
     )(q, k, v)

@@ -9,11 +9,21 @@ TPU realisation of the SAU-array dataflow (paper Fig. 2/3, DESIGN.md §2):
     tile `S` is Bernoulli-sampled in VMEM/registers and immediately consumed
     against the streamed `V` tile; `S` never reaches HBM;
   * per-encoder LFSR PRNGs         -> stateless counter RNG keyed on the
-    *logical* (b, i, j) position, so tiling, remat and the backward pass
-    regenerate identical bits (`kernels.common.uniform_from_counter`);
+    tokens' *absolute positions* (request-addressed, RNG contract v2): the
+    draw for a (query, key) pair or a (query, channel) lane is identical
+    whatever the batch row, tile geometry, cache extent or decode width, so
+    tiling, remat, the backward pass — and the serving scheduler moving a
+    request between rows or gather spans — regenerate identical bits
+    (`kernels.common.uniform_from_counter`);
   * power-of-two normalisation     -> probabilities stay as raw counts and
     are compared against `u * D_K` / `u * visible` — no division on the
     sampling path, mirroring the shift-free hardware comparison.
+
+Operands beyond Q/K/V: a per-row uint32 seed vector (one stream per
+batch/head row) and per-row absolute position vectors for queries and keys.
+Position ``-1`` marks absent tokens (prefill padding, never-written cache
+rows); they are masked out of eq. 5 and excluded from the eq. 6 ``visible``
+normaliser, which the kernel accumulates across kv tiles in scratch.
 
 Grid: ``(B, num_q_tiles, num_kv_tiles)`` with the kv axis innermost
 (reduction).  The attention-count accumulator lives in a VMEM scratch tile
@@ -38,21 +48,28 @@ import numpy as np
 SALT_S = np.uint32(0x9E3779B9)
 SALT_A = np.uint32(0x85EBCA6B)
 
+# Fixed position strides of the request-addressed counter scheme (RNG
+# contract v2): counter = qpos * STRIDE + (kpos | channel), uint32 wrap.
+# Odd constants so the per-query stream origins decorrelate under the
+# splitmix32 finaliser; *never* derived from shapes — that would re-couple
+# the stream to geometry.
+POS_STRIDE_S = np.uint32(0x9E3779B1)
+POS_STRIDE_A = np.uint32(0x85EBCA77)
+
 
 def _ssa_tile_body(
     seed_ref,
+    qpos_ref,
+    kvpos_ref,
     out_ref,
     acc_ref,
+    vis_ref,
     q,              # (block_q, d_pad) f32 0/1 tile
     k,              # (block_k, d_pad) f32 0/1 tile
     v,              # (block_k, d_pad) f32 0/1 tile
     *,
     block_q: int,
     block_k: int,
-    n_q: int,
-    n_kv: int,
-    n_q_pad: int,
-    n_kv_pad: int,
     d_pad: int,
     d_k: int,
     causal: bool,
@@ -64,81 +81,67 @@ def _ssa_tile_body(
     everything downstream — counts, masks, counter-RNG indices — is identical,
     which is what makes the packed path bit-exact vs the dense one."""
     b = pl.program_id(0)
-    iq = pl.program_id(1)
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        vis_ref[...] = jnp.zeros_like(vis_ref)
 
     # ---- eq. 5 tile: counts = Q-tile @ K-tile^T  (popcount of AND) --------
     counts_s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (block_q, block_k)
 
-    # absolute logical positions of this tile
-    qi = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-    kj = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    # queries align to the END of the kv axis (decode/chunked-prefill support)
-    qpos = qi + (n_kv - n_q)
+    # absolute token positions of this tile (operands, not iota: the stream
+    # is keyed by content position, not by slab index)
+    qp = qpos_ref[0]                   # (block_q, 1) int32
+    kp = kvpos_ref[0]                  # (1, block_k) int32
 
-    valid = kj < n_kv
+    valid = (kp >= 0) & (qp >= 0)      # (block_q, block_k)
     if causal:
-        valid &= kj <= qpos
+        valid &= kp <= qp
     if window is not None:
-        valid &= kj > qpos - window
+        valid &= kp > qp - window
 
     # Bernoulli encoder bank #1 — hardware compares count against u * D_K
     # (shift-free for power-of-two D_K); masked lanes compare against -1.
-    stride_b = (n_q_pad * n_kv_pad) % (1 << 32)  # wrap like the uint32 math
-    idx_s = (
-        b.astype(jnp.uint32) * jnp.uint32(stride_b)
-        + qi.astype(jnp.uint32) * jnp.uint32(n_kv_pad % (1 << 32))
-        + kj.astype(jnp.uint32)
-    )
-    u_s = uniform_from_counter(seed_ref[0, 0] ^ SALT_S, idx_s)
+    qp_u = jnp.maximum(qp, 0).astype(jnp.uint32)
+    kp_u = jnp.maximum(kp, 0).astype(jnp.uint32)
+    idx_s = qp_u * POS_STRIDE_S + kp_u
+    u_s = uniform_from_counter(seed_ref[b, 0] ^ SALT_S, idx_s)
     s = jnp.where(valid, u_s * jnp.float32(d_k) < counts_s, False)
     s = s.astype(jnp.float32)
 
-    # ---- eq. 6 partial: acc += S-tile @ V-tile ----------------------------
+    # ---- eq. 6 partials: acc += S-tile @ V-tile; vis += |valid| -----------
     acc_ref[...] += jax.lax.dot_general(
         s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
+    vis_ref[...] += jnp.sum(valid.astype(jnp.float32), axis=1, keepdims=True)
 
     # ---- final kv tile: Bernoulli encoder bank #2 -------------------------
     @pl.when(ik == num_kv_tiles - 1)
     def _finalize():
-        row = iq * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, d_pad), 0
-        )
-        col = jax.lax.broadcasted_iota(jnp.int32, (block_q, d_pad), 1)
-        rpos = row + (n_kv - n_q)
-        if causal:
-            visible = jnp.minimum(rpos + 1, n_kv)
-            if window is not None:
-                visible = jnp.minimum(visible, window)
-        else:
-            visible = jnp.full_like(rpos, n_kv)
-            if window is not None:
-                visible = jnp.minimum(visible, window)
-        visible = jnp.maximum(visible, 1).astype(jnp.float32)
-
-        idx_a = (
-            b.astype(jnp.uint32) * jnp.uint32((n_q_pad * d_pad) % (1 << 32))
-            + row.astype(jnp.uint32) * jnp.uint32(d_pad)
-            + col.astype(jnp.uint32)
-        )
-        u_a = uniform_from_counter(seed_ref[0, 0] ^ SALT_A, idx_a)
+        col = jax.lax.broadcasted_iota(jnp.uint32, (block_q, d_pad), 1)
+        idx_a = qp_u * POS_STRIDE_A + col
+        u_a = uniform_from_counter(seed_ref[b, 0] ^ SALT_A, idx_a)
+        visible = jnp.maximum(vis_ref[...], 1.0)        # (block_q, 1)
         out = (u_a * visible < acc_ref[...]).astype(out_ref.dtype)
         out_ref[0] = out
 
 
-def _ssa_kernel(seed_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, **geom):
+def _ssa_kernel(
+    seed_ref, qpos_ref, kvpos_ref, q_ref, k_ref, v_ref, out_ref,
+    acc_ref, vis_ref, **geom,
+):
     """Dense entry point: Q/K/V tiles arrive as 0/1 lanes."""
     _ssa_tile_body(
         seed_ref,
+        qpos_ref,
+        kvpos_ref,
         out_ref,
         acc_ref,
+        vis_ref,
         q_ref[0].astype(jnp.float32),
         k_ref[0].astype(jnp.float32),
         v_ref[0].astype(jnp.float32),
@@ -146,15 +149,21 @@ def _ssa_kernel(seed_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, **geom):
     )
 
 
-def _ssa_kernel_packed(seed_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, **geom):
+def _ssa_kernel_packed(
+    seed_ref, qpos_ref, kvpos_ref, q_ref, k_ref, v_ref, out_ref,
+    acc_ref, vis_ref, **geom,
+):
     """Packed entry point: tiles arrive as uint32 words (1 bit/spike in HBM)
     and expand to MXU lanes only here, in VMEM.  w_pad * 32 == d_pad, so the
     unpacked tiles have exactly the dense kernel's geometry and the shared
     body (same counter-RNG indices) produces bit-identical spikes."""
     _ssa_tile_body(
         seed_ref,
+        qpos_ref,
+        kvpos_ref,
         out_ref,
         acc_ref,
+        vis_ref,
         unpack_words_to_lanes(q_ref[0]),
         unpack_words_to_lanes(k_ref[0]),
         unpack_words_to_lanes(v_ref[0]),
@@ -165,11 +174,9 @@ def _ssa_kernel_packed(seed_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, **geom):
 def build_ssa_pallas(
     *,
     bsz: int,
-    n_q: int,
-    n_kv: int,
-    d_k: int,
     n_q_pad: int,
     n_kv_pad: int,
+    d_k: int,
     d_pad: int,
     out_dtype,
     causal: bool,
@@ -181,9 +188,12 @@ def build_ssa_pallas(
 ):
     """Construct the pallas_call for a given padded geometry.
 
-    ``packed=True`` takes Q/K/V as uint32 bit-planes of width
-    ``w_pad = d_pad // 32`` (see ``repro.bitpack``); output spikes stay
-    dense — bit-identical to the dense kernel for the same seed."""
+    Call signature: ``call(seeds, q_pos, kv_pos, q, k, v)`` with
+    ``seeds (B, 1)`` uint32 in SMEM and positions as ``(B, n_q_pad, 1)`` /
+    ``(B, 1, n_kv_pad)`` int32 (pad value -1 => masked).  ``packed=True``
+    takes Q/K/V as uint32 bit-planes of width ``w_pad = d_pad // 32`` (see
+    ``repro.bitpack``); output spikes stay dense — bit-identical to the
+    dense kernel for the same seeds/positions."""
     num_q_tiles = cdiv(n_q_pad, block_q)
     num_kv_tiles = cdiv(n_kv_pad, block_k)
 
@@ -191,10 +201,6 @@ def build_ssa_pallas(
         _ssa_kernel_packed if packed else _ssa_kernel,
         block_q=block_q,
         block_k=block_k,
-        n_q=n_q,
-        n_kv=n_kv,
-        n_q_pad=n_q_pad,
-        n_kv_pad=n_kv_pad,
         d_pad=d_pad,
         d_k=d_k,
         causal=causal,
@@ -207,13 +213,18 @@ def build_ssa_pallas(
         kernel,
         grid=(bsz, num_q_tiles, num_kv_tiles),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # seed (1,1)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # seeds (B, 1)
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, 1, block_k), lambda b, i, j: (b, 0, j)),
             pl.BlockSpec((1, block_q, d_in), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, block_k, d_in), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, block_k, d_in), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d_pad), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, n_q_pad, d_pad), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, d_pad), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d_pad), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
         interpret=interpret,
     )

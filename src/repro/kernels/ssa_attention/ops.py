@@ -8,6 +8,12 @@ Bernoulli encoders:
 
     dL/dV = S^T (g / vis)          dL/dS = (g / vis) V^T      (STE on eq. 6)
     dL/dQ = dL/dS K / D_K          dL/dK = dL/dS^T Q / D_K    (STE on eq. 5)
+
+RNG contract v2 (request-addressed): ``seed`` may be a uint32 scalar (one
+stream shared by every batch row) or a ``(B,)`` vector (one stream per
+row), and draws are keyed by the tokens' absolute positions
+(``q_positions`` / ``kv_positions``, default contiguous).  Padding inserted
+here for tiling carries position ``-1`` and therefore never draws.
 """
 from __future__ import annotations
 
@@ -19,12 +25,15 @@ import jax.numpy as jnp
 
 from ..common import uniform_from_counter
 from .kernel import SALT_S, build_ssa_pallas
-from .ref import padded_dims, score_counter_idx, visible_counts
+from .ref import (
+    normalize_seed_positions,
+    padded_dims,
+    score_counter_idx,
+    valid_mask,
+    visible_counts,
+)
 
 __all__ = ["ssa_attention"]
-
-# name kept for callers that reach for the backward-pass internals
-_visible_counts = visible_counts
 
 
 def _pad3(x, n_to, d_to):
@@ -34,28 +43,36 @@ def _pad3(x, n_to, d_to):
     return jnp.pad(x, ((0, 0), (0, n_to - n), (0, d_to - d)))
 
 
-def _recompute_s(q, k, seed, causal, window, block_q, block_k):
+def _pad_pos(p, n_to):
+    """Pad a (B, N) position vector to (B, n_to) with -1 (masked)."""
+    b, n = p.shape
+    if n == n_to:
+        return p
+    return jnp.pad(p, ((0, 0), (0, n_to - n)), constant_values=-1)
+
+
+# single source of the seed-broadcast + default-position normalization
+# (shared with the jnp oracle so every consumer stays byte-identical)
+_norm_inputs = normalize_seed_positions
+
+
+def _recompute_s(q, k, seeds, q_positions, kv_positions, causal, window):
     """Regenerate the score spikes S from the counter RNG (no storage)."""
     bsz, n_q, d_k = q.shape
     n_kv = k.shape[1]
-    n_q_pad, n_kv_pad, _ = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    seeds, q_positions, kv_positions = _norm_inputs(
+        seeds, q_positions, kv_positions, bsz, n_q, n_kv
+    )
     counts_s = jnp.einsum(
         "bqd,bkd->bqk",
         q.astype(jnp.float32),
         k.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
-    qi = jnp.arange(n_q)[:, None]
-    kj = jnp.arange(n_kv)[None, :]
-    qpos = qi + (n_kv - n_q)
-    valid = jnp.ones((n_q, n_kv), dtype=bool)
-    if causal:
-        valid &= kj <= qpos
-    if window is not None:
-        valid &= kj > qpos - window
-    idx_s = score_counter_idx(bsz, n_q, n_kv, n_q_pad, n_kv_pad)
-    u_s = uniform_from_counter(jnp.asarray(seed, jnp.uint32) ^ SALT_S, idx_s)
-    return jnp.where(valid[None], u_s * jnp.float32(d_k) < counts_s, False).astype(
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    idx_s = score_counter_idx(q_positions, kv_positions)
+    u_s = uniform_from_counter(seeds[:, None, None] ^ SALT_S, idx_s)
+    return jnp.where(valid, u_s * jnp.float32(d_k) < counts_s, False).astype(
         jnp.float32
     )
 
@@ -71,6 +88,8 @@ def ssa_attention(
     block_k: int = 128,
     interpret: bool = False,
     *,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
     packed: bool = False,
     d_k: Optional[int] = None,
 ) -> jax.Array:
@@ -78,15 +97,20 @@ def ssa_attention(
     ``packed=True``.
 
     Dense: q (B, N_q, D_K) 0/1 spikes, k/v (B, N_kv, D_K); differentiable
-    (STE custom VJP).  Packed: q/k/v are uint32 bit-planes of shape
-    (B, N, ceil(D_K/32)) from ``repro.bitpack.pack_spikes`` and ``d_k`` must
-    be given; HBM traffic is 1 bit/spike, words unpack to MXU tiles in VMEM,
-    and the output (dense 0/1 spikes, (B, N_q, D_K)) is bit-identical to the
-    dense path for the same seed.  The packed path is inference-only.
+    (STE custom VJP).  ``seed``: uint32 scalar or (B,) per-row vector.
+    ``q_positions``/``kv_positions``: (B, N) int32 absolute positions
+    (default contiguous, queries at the end of the kv axis); position -1
+    masks a token out of the scores and the visible count.  Packed: q/k/v
+    are uint32 bit-planes of shape (B, N, ceil(D_K/32)) from
+    ``repro.bitpack.pack_spikes`` and ``d_k`` must be given; HBM traffic is
+    1 bit/spike, words unpack to MXU tiles in VMEM, and the output (dense
+    0/1 spikes, (B, N_q, D_K)) is bit-identical to the dense path for the
+    same seeds/positions.  The packed path is inference-only.
     """
     if not packed:
         return _ssa_attention_dense(
-            q, k, v, seed, causal, window, block_q, block_k, interpret
+            q, k, v, seed, q_positions, kv_positions,
+            causal, window, block_q, block_k, interpret,
         )
     if d_k is None:
         raise ValueError("packed=True requires d_k (unpadded feature size)")
@@ -106,17 +130,17 @@ def ssa_attention(
     n_kv = k.shape[1]
     n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
     w_pad = d_pad // 32
+    seeds, q_pos, kv_pos = _norm_inputs(
+        seed, q_positions, kv_positions, bsz, n_q, n_kv
+    )
     qp = _pad3(q, n_q_pad, w_pad)
     kp = _pad3(k, n_kv_pad, w_pad)
     vp = _pad3(v, n_kv_pad, w_pad)
-    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
     call = build_ssa_pallas(
         bsz=bsz,
-        n_q=n_q,
-        n_kv=n_kv,
-        d_k=d_k,
         n_q_pad=n_q_pad,
         n_kv_pad=n_kv_pad,
+        d_k=d_k,
         d_pad=d_pad,
         out_dtype=jnp.float32,
         causal=causal,
@@ -126,18 +150,27 @@ def ssa_attention(
         interpret=interpret,
         packed=True,
     )
-    out = call(seed_arr, qp, kp, vp)
+    out = call(
+        seeds.reshape(bsz, 1),
+        _pad_pos(q_pos, n_q_pad)[:, :, None],
+        _pad_pos(kv_pos, n_kv_pad)[:, None, :],
+        qp,
+        kp,
+        vp,
+    )
     return out[:, :n_q, :d_k]
 
 
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
+    jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10)
 )
 def _ssa_attention_dense(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
     seed: jax.Array,
+    q_positions: Optional[jax.Array],
+    kv_positions: Optional[jax.Array],
     causal: bool = False,
     window: Optional[int] = None,
     block_q: int = 128,
@@ -146,23 +179,22 @@ def _ssa_attention_dense(
 ) -> jax.Array:
     """Dense fused SSA.  q: (B, N_q, D_K) 0/1 spikes; k/v: (B, N_kv, D_K).
 
-    ``seed``: uint32 scalar array — vary per (layer, time step, train step).
     Returns (B, N_q, D_K) 0/1 spikes, bit-exact vs. `ref.ssa_reference`.
     """
     bsz, n_q, d_k = q.shape
     n_kv = k.shape[1]
     n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
+    seeds, q_pos, kv_pos = _norm_inputs(
+        seed, q_positions, kv_positions, bsz, n_q, n_kv
+    )
     qp = _pad3(q, n_q_pad, d_pad)
     kp = _pad3(k, n_kv_pad, d_pad)
     vp = _pad3(v, n_kv_pad, d_pad)
-    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
     call = build_ssa_pallas(
         bsz=bsz,
-        n_q=n_q,
-        n_kv=n_kv,
-        d_k=d_k,
         n_q_pad=n_q_pad,
         n_kv_pad=n_kv_pad,
+        d_k=d_k,
         d_pad=d_pad,
         out_dtype=q.dtype,
         causal=causal,
@@ -171,23 +203,41 @@ def _ssa_attention_dense(
         block_k=block_k,
         interpret=interpret,
     )
-    out = call(seed_arr, qp, kp, vp)
+    out = call(
+        seeds.reshape(bsz, 1),
+        _pad_pos(q_pos, n_q_pad)[:, :, None],
+        _pad_pos(kv_pos, n_kv_pad)[:, None, :],
+        qp,
+        kp,
+        vp,
+    )
     return out[:, :n_q, :d_k]
 
 
-def _ssa_fwd(q, k, v, seed, causal, window, block_q, block_k, interpret):
+def _ssa_fwd(q, k, v, seed, q_positions, kv_positions,
+             causal, window, block_q, block_k, interpret):
     out = _ssa_attention_dense(
-        q, k, v, seed, causal, window, block_q, block_k, interpret
+        q, k, v, seed, q_positions, kv_positions,
+        causal, window, block_q, block_k, interpret,
     )
-    return out, (q, k, v, seed)
+    return out, (q, k, v, seed, q_positions, kv_positions)
+
+
+def _int_zero_cotangent(x):
+    import numpy as np
+
+    return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
 
 
 def _ssa_bwd(causal, window, block_q, block_k, interpret, res, g):
-    q, k, v, seed = res
-    n_q, d_k = q.shape[-2], q.shape[-1]
+    q, k, v, seed, q_positions, kv_positions = res
+    bsz, n_q, d_k = q.shape
     n_kv = k.shape[1]
-    s = _recompute_s(q, k, seed, causal, window, block_q, block_k)
-    vis = _visible_counts(n_q, n_kv, causal, window)[None, :, None]
+    s = _recompute_s(q, k, seed, q_positions, kv_positions, causal, window)
+    _, q_pos, kv_pos = _norm_inputs(
+        seed, q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    vis = visible_counts(valid_mask(q_pos, kv_pos, causal, window))[:, :, None]
     g32 = g.astype(jnp.float32) / vis
     # STE through eq. 6
     dv = jnp.einsum("bqk,bqd->bkd", s, g32)
@@ -196,11 +246,17 @@ def _ssa_bwd(causal, window, block_q, block_k, interpret, res, g):
     ds = ds / jnp.float32(d_k)
     dq = jnp.einsum("bqk,bkd->bqd", ds, k.astype(jnp.float32))
     dk = jnp.einsum("bqk,bqd->bkd", ds, q.astype(jnp.float32))
-    # seed is integer-typed -> symbolic-zero (float0) cotangent
-    import numpy as np
-
-    dseed = np.zeros(jnp.shape(seed), dtype=jax.dtypes.float0)
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dseed
+    # integer-typed operands (seed, positions) -> symbolic-zero cotangents
+    dpos_q = None if q_positions is None else _int_zero_cotangent(q_positions)
+    dpos_kv = None if kv_positions is None else _int_zero_cotangent(kv_positions)
+    return (
+        dq.astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        _int_zero_cotangent(seed),
+        dpos_q,
+        dpos_kv,
+    )
 
 
 _ssa_attention_dense.defvjp(_ssa_fwd, _ssa_bwd)

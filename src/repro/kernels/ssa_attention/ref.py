@@ -5,6 +5,22 @@ counter RNG + logical indexing as the kernel, so kernel vs. reference is a
 bit-exact comparison (the strongest check we can run without RTL).  The
 statistical oracle (`expected_rate`) closes the loop against the analytic
 expectation E[Attn] = Q K^T V / (D_K N).
+
+RNG contract (version 2, "request-addressed"): every Bernoulli draw is a
+pure function of ``(seed, absolute position, channel)`` —
+
+  * eq. 5 score draw (q, k):  counter = qpos * POS_STRIDE_S + kpos
+  * eq. 6 output draw (q, c): counter = qpos * POS_STRIDE_A + c
+
+where ``qpos``/``kpos`` are the tokens' *absolute* sequence positions and
+``seed`` is a per-batch-row uint32 (one per request/head/layer/time-step,
+see ``repro.attention.base``).  Nothing in the stream depends on the batch
+row index, the padded tile geometry, the cache extent, or the decode width;
+tokens with position ``-1`` (prefill padding, never-written cache rows) are
+masked out of the scores *and* of the eq. 6 ``visible`` normaliser, which is
+what makes SSA outputs invariant to pad buckets and gather extents.
+(Version 1 strided counters by batch row and padded extents; its streams
+are intentionally not reproduced.)
 """
 from __future__ import annotations
 
@@ -14,12 +30,16 @@ import jax
 import jax.numpy as jnp
 
 from ..common import cdiv, uniform_from_counter
-from .kernel import SALT_A, SALT_S
+from .kernel import POS_STRIDE_A, POS_STRIDE_S, SALT_A, SALT_S
 
 __all__ = [
     "ssa_reference",
     "expected_rate",
     "padded_dims",
+    "default_positions",
+    "ensure_positions",
+    "normalize_seed_positions",
+    "valid_mask",
     "score_counter_idx",
     "output_counter_idx",
     "visible_counts",
@@ -27,7 +47,9 @@ __all__ = [
 
 
 def padded_dims(n_q: int, n_kv: int, d: int, block_q: int, block_k: int):
-    """Padded geometry shared by the kernel wrapper and this oracle."""
+    """Padded geometry shared by the kernel wrapper and this oracle.
+
+    Only *tiling* depends on it now — the counter RNG does not."""
     return (
         cdiv(n_q, block_q) * block_q,
         cdiv(n_kv, block_k) * block_k,
@@ -35,52 +57,98 @@ def padded_dims(n_q: int, n_kv: int, d: int, block_q: int, block_k: int):
     )
 
 
-def score_counter_idx(bsz: int, n_q: int, n_kv: int, n_q_pad: int, n_kv_pad: int):
+def default_positions(bsz: int, n_q: int, n_kv: int):
+    """Contiguous positions with queries aligned to the END of the kv axis
+    (the layout standalone kernel callers mean when they pass no positions:
+    train/prefill over ``n_q == n_kv`` tokens, or decode of the last token
+    against an exactly-filled cache)."""
+    qp = jnp.arange(n_q, dtype=jnp.int32) + (n_kv - n_q)
+    kp = jnp.arange(n_kv, dtype=jnp.int32)
+    return (
+        jnp.broadcast_to(qp[None], (bsz, n_q)),
+        jnp.broadcast_to(kp[None], (bsz, n_kv)),
+    )
+
+
+def ensure_positions(q_positions, kv_positions, bsz: int, n_q: int, n_kv: int):
+    """Fill missing position operands with the contiguous default and
+    normalise dtype — one implementation for every consumer (oracle, fused
+    wrapper, XLA backend), because they must agree byte-for-byte for the
+    cross-backend bit-identity contract."""
+    if q_positions is None or kv_positions is None:
+        dq, dkv = default_positions(bsz, n_q, n_kv)
+        q_positions = dq if q_positions is None else q_positions
+        kv_positions = dkv if kv_positions is None else kv_positions
+    return (
+        jnp.asarray(q_positions, jnp.int32),
+        jnp.asarray(kv_positions, jnp.int32),
+    )
+
+
+def normalize_seed_positions(seed, q_positions, kv_positions,
+                             bsz: int, n_q: int, n_kv: int):
+    """Broadcast a scalar-or-(B,) seed to (B,) uint32 and default the
+    positions (see :func:`ensure_positions`)."""
+    seeds = jnp.broadcast_to(jnp.asarray(seed, jnp.uint32).reshape(-1), (bsz,))
+    q_pos, kv_pos = ensure_positions(q_positions, kv_positions, bsz, n_q, n_kv)
+    return seeds, q_pos, kv_pos
+
+
+def valid_mask(
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """(B, n_q, n_kv) bool — which (query, key) pairs participate in eq. 5.
+
+    Position ``-1`` marks absent tokens (prefill padding, never-written
+    cache rows): they are invisible as keys and draw-dead as queries.
+    Causal/window masking compares *absolute positions*, so a rolling
+    window cache needs no index bookkeeping here.
+    """
+    qp = q_positions.astype(jnp.int32)[:, :, None]
+    kp = kv_positions.astype(jnp.int32)[:, None, :]
+    valid = (kp >= 0) & (qp >= 0)
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= kp > qp - window
+    return valid
+
+
+def score_counter_idx(q_positions: jax.Array, kv_positions: jax.Array):
     """Counter-RNG positions for the eq. 5 (score) Bernoulli bank.
 
-    The logical (b, i, j) index scheme the kernel tiles reproduce — one
-    uint32 counter per score lane, strided by the *padded* geometry so every
-    consumer (kernel, oracle, XLA backend, backward recompute) draws the
-    same uniforms.  Returns (bsz, n_q, n_kv) uint32.
+    q_positions (B, n_q), kv_positions (B, n_kv) -> (B, n_q, n_kv) uint32.
+    A pure function of the two absolute positions (uint32 wrap-around);
+    masked lanes still receive a counter (clamped to 0) but their draw is
+    discarded by ``valid_mask``.
     """
-    qi = jnp.arange(n_q, dtype=jnp.uint32)[:, None]
-    kj = jnp.arange(n_kv, dtype=jnp.uint32)[None, :]
-    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
-    return (
-        b_idx * jnp.uint32((n_q_pad * n_kv_pad) % (1 << 32))
-        + qi * jnp.uint32(n_kv_pad % (1 << 32))
-        + kj
-    )
+    qp = jnp.maximum(q_positions, 0).astype(jnp.uint32)[:, :, None]
+    kp = jnp.maximum(kv_positions, 0).astype(jnp.uint32)[:, None, :]
+    return qp * POS_STRIDE_S + kp
 
 
-def output_counter_idx(bsz: int, n_q: int, d_k: int, n_q_pad: int, d_pad: int):
+def output_counter_idx(q_positions: jax.Array, d_k: int):
     """Counter-RNG positions for the eq. 6 (output) Bernoulli bank.
 
-    Returns (bsz, n_q, d_k) uint32 (same stride scheme as the kernel's
-    finalize step).
+    q_positions (B, n_q) -> (B, n_q, d_k) uint32; channel is the counter's
+    fast axis.
     """
-    row = jnp.arange(n_q, dtype=jnp.uint32)[:, None]
-    col = jnp.arange(d_k, dtype=jnp.uint32)[None, :]
-    b_idx = jnp.arange(bsz, dtype=jnp.uint32)[:, None, None]
-    return (
-        b_idx * jnp.uint32((n_q_pad * d_pad) % (1 << 32))
-        + row * jnp.uint32(d_pad % (1 << 32))
-        + col
-    )
+    qp = jnp.maximum(q_positions, 0).astype(jnp.uint32)[:, :, None]
+    col = jnp.arange(d_k, dtype=jnp.uint32)[None, None, :]
+    return qp * POS_STRIDE_A + col
 
 
-def visible_counts(n_q: int, n_kv: int, causal: bool, window: Optional[int]):
-    """Per-query-row count of visible kv tokens (the eq. 6 normaliser)."""
-    rpos = jnp.arange(n_q) + (n_kv - n_q)
-    if causal:
-        visible = jnp.minimum(rpos + 1, n_kv)
-        if window is not None:
-            visible = jnp.minimum(visible, window)
-    else:
-        visible = jnp.full_like(rpos, n_kv)
-        if window is not None:
-            visible = jnp.minimum(visible, window)
-    return jnp.maximum(visible, 1).astype(jnp.float32)
+def visible_counts(valid: jax.Array) -> jax.Array:
+    """Per-query count of visible kv tokens (the eq. 6 normaliser).
+
+    valid (B, n_q, n_kv) -> (B, n_q) f32, clamped to >= 1.  Counting only
+    *valid* tokens (rather than the cache extent) is what makes eq. 6
+    extent-invariant: absent rows contribute neither counts nor normaliser.
+    """
+    return jnp.maximum(valid.sum(axis=-1), 1).astype(jnp.float32)
 
 
 def ssa_reference(
@@ -91,14 +159,21 @@ def ssa_reference(
     *,
     causal: bool = False,
     window: Optional[int] = None,
-    block_q: int = 128,
-    block_k: int = 128,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Dense-einsum SSA with kernel-identical RNG.  q: (B, N_q, D) 0/1."""
+    """Dense-einsum SSA with kernel-identical RNG.  q: (B, N_q, D) 0/1.
+
+    ``seed``: uint32 scalar (broadcast to every row) or (B,) vector — one
+    independent stream per batch row.  Positions default to the contiguous
+    layout of :func:`default_positions`.
+    """
     bsz, n_q, d_k = q.shape
     n_kv = k.shape[1]
-    n_q_pad, n_kv_pad, d_pad = padded_dims(n_q, n_kv, d_k, block_q, block_k)
-    seed = jnp.asarray(seed, jnp.uint32)
+    seed, q_positions, kv_positions = normalize_seed_positions(
+        seed, q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    seed = seed[:, None, None]
 
     counts_s = jnp.einsum(
         "bqd,bkd->bqk",
@@ -107,27 +182,19 @@ def ssa_reference(
         preferred_element_type=jnp.float32,
     )
 
-    qi = jnp.arange(n_q)[:, None]
-    kj = jnp.arange(n_kv)[None, :]
-    qpos = qi + (n_kv - n_q)
-    valid = jnp.ones((n_q, n_kv), dtype=bool)
-    if causal:
-        valid &= kj <= qpos
-    if window is not None:
-        valid &= kj > qpos - window
-
-    idx_s = score_counter_idx(bsz, n_q, n_kv, n_q_pad, n_kv_pad)
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    idx_s = score_counter_idx(q_positions, kv_positions)
     u_s = uniform_from_counter(seed ^ SALT_S, idx_s)
-    s = jnp.where(valid[None], u_s * jnp.float32(d_k) < counts_s, False)
+    s = jnp.where(valid, u_s * jnp.float32(d_k) < counts_s, False)
     s = s.astype(jnp.float32)
 
     counts_a = jnp.einsum(
         "bqk,bkd->bqd", s, v.astype(jnp.float32), preferred_element_type=jnp.float32
     )
 
-    visible = visible_counts(n_q, n_kv, causal, window)[:, None]
+    visible = visible_counts(valid)[:, :, None]
 
-    idx_a = output_counter_idx(bsz, n_q, d_k, n_q_pad, d_pad)
+    idx_a = output_counter_idx(q_positions, d_k)
     u_a = uniform_from_counter(seed ^ SALT_A, idx_a)
     out = (u_a * visible < counts_a).astype(q.dtype)
     return out

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.attention import (
     AttentionInvocation,
+    derive_request_seeds,
     gather_pages,
     is_paged_cache,
     paged_extent,
@@ -251,6 +252,7 @@ def attention_apply(
     layer_window: Optional[int],
     positions: jax.Array,
     rng: Optional[jax.Array] = None,
+    seeds: Optional[jax.Array] = None,
     cache: Optional[dict] = None,
     cache_index: Optional[jax.Array] = None,
     kv_source: Optional[jax.Array] = None,
@@ -264,12 +266,21 @@ def attention_apply(
     registered backend selected by ``AttentionConfig.impl``/``.backend`` and
     the call mode (train / prefill / decode).
 
+    ``seeds``: (B,) uint32 per-sequence sampling seeds, already folded per
+    layer (RNG contract v2) — the serving engine passes each request's own
+    seed; callers that only have a PRNG key pass ``rng`` and per-row seeds
+    are derived here (``derive_request_seeds``).  Backends also receive the
+    absolute token positions for both queries and keys: SSA/Spikformer
+    draws and masks key off positions, never off batch row or cache extent.
+
     cache: {"k","v": (B, S_cache, Hkv, hd), "pos": (B, S_cache)} for decode;
     cache_index: scalar write offset (decode step).  kv_source: cross-attn
     memory (whisper decoder).  Returns (out, updated_cache).
     """
     a = cfg.attention
     b, s, _ = x.shape
+    if seeds is None:
+        seeds = derive_request_seeds(rng, b)
     h_pad = padded_heads(a)
     causal = a.causal if causal is None else causal
     q = (x @ p["wq"]).reshape(b, s, h_pad, a.head_dim)
@@ -328,13 +339,20 @@ def attention_apply(
             # the Pallas kernel (unpacked per-tile in VMEM only), while the
             # ssa-xla fallback unpacks them in XLA.  A paged cache is first
             # gathered back into the contiguous slab layout (bit-identical:
-            # unallocated entries resolve to the pristine zero page).
+            # unallocated entries resolve to the pristine zero page, whose
+            # pos = -1 masks them out — so any span covering the written
+            # tokens decodes identically and the engine may bucket it).
             if is_paged_cache(new_cache):
                 ext = paged_extent(new_cache, layer_window)
                 packed_k = gather_pages(new_cache["ks"], new_cache["bt"], ext)
                 packed_v = gather_pages(new_cache["vs"], new_cache["bt"], ext)
+                kv_positions = gather_pages(
+                    new_cache["pos"], new_cache["bt"], ext
+                )
             else:
                 packed_k, packed_v = new_cache["ks"], new_cache["vs"]
+                kv_positions = new_cache["pos"]
+            q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
         else:
             # prefill attention reuses the trains encoded above (over ALL s
             # current tokens, pre-truncation) instead of re-encoding k_full —
@@ -377,6 +395,20 @@ def attention_apply(
             # the whole cache) into trains at kv-head granularity
             spike_k = spike_encode(k, t_steps)
             spike_v = spike_encode(v, t_steps)
+        if q_positions is None:
+            # train/prefill: spiking draws and masks are keyed by absolute
+            # positions (pad rows carry -1 and never draw), which is what
+            # makes bucketed prefill and any cache extent sample the same
+            # spikes for the real tokens (RNG contract v2)
+            q_positions = jnp.broadcast_to(pos_1d.astype(jnp.int32), (b, s))
+            if kv_source is None:
+                kv_positions = jnp.broadcast_to(
+                    pos_1d.astype(jnp.int32), (b, s_kv)
+                )
+            else:
+                kv_positions = jnp.broadcast_to(
+                    jnp.arange(s_kv, dtype=jnp.int32)[None], (b, s_kv)
+                )
 
     backend = resolve_backend(a, mode)
     out = backend.apply(
@@ -390,7 +422,7 @@ def attention_apply(
             causal=causal,
             window=layer_window,
             softcap=a.softcap,
-            rng=rng,
+            seeds=seeds,
             kv_positions=kv_positions,
             q_positions=q_positions,
             spike_q=spike_q,

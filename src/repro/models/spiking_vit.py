@@ -12,7 +12,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.attention import AttentionInvocation, resolve_backend
+from repro.attention import (
+    AttentionInvocation,
+    derive_request_seeds,
+    resolve_backend,
+)
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.coding import bernoulli_encode
 from repro.core.lif import LIFParams, lif_layer
@@ -96,6 +100,9 @@ class SpikingViT:
             spike_v = spikes(fold(v), rv)
 
         backend = resolve_backend(a, "train")
+        # heads were folded into the batch axis above, so seeds are derived
+        # per (image, head) folded row — one SSA stream per head, as the
+        # decoder-LM path gets via derive_step_row_seeds' head fold
         out = backend.apply(
             AttentionInvocation(
                 a=a,
@@ -106,7 +113,7 @@ class SpikingViT:
                 groups=1,
                 causal=False,
                 softcap=a.softcap,
-                rng=rs,
+                seeds=derive_request_seeds(rs, b * a.num_heads),
                 spike_q=spike_q,
                 spike_k=spike_k,
                 spike_v=spike_v,

@@ -10,8 +10,9 @@ switch — the paper's technique is a first-class feature of every arch here.
 Which *kernel* realises it (XLA reference vs fused Pallas, dense vs packed
 KV decode) is a second, orthogonal switch: `AttentionConfig.backend`
 dispatches through the `repro.attention` registry per call mode, and the
-counter-RNG seed derivation makes all SSA backends bit-identical for the
-same rng (see docs/attention_backends.md).
+request-addressed counter-RNG seed derivation makes all SSA backends
+bit-identical for the same per-sequence seeds — independent of batch row,
+pad bucket and cache extent (see docs/attention_backends.md).
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.attention import derive_request_seeds, fold_layer_seeds
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding import constrain
 from .blocks import (
@@ -110,7 +112,7 @@ class DecoderLM:
         return params
 
     # ------------------------------------------------------------------
-    def _block(self, p, x, *, slot, positions, rng, cache, cache_index):
+    def _block(self, p, x, *, slot, positions, seeds, cache, cache_index):
         cfg = self.cfg
         h = norm_apply(p["ln_attn"], x, cfg.norm, cfg.norm_eps)
         attn_out, new_cache = attention_apply(
@@ -119,7 +121,7 @@ class DecoderLM:
             cfg=cfg,
             layer_window=self._slot_window(slot),
             positions=positions,
-            rng=rng,
+            seeds=seeds,
             cache=cache,
             cache_index=cache_index,
         )
@@ -146,9 +148,20 @@ class DecoderLM:
         cache: Optional[list] = None,
         cache_index: Optional[jax.Array] = None,
         rng: Optional[jax.Array] = None,
+        seeds: Optional[jax.Array] = None,
         remat: str = "none",
     ):
-        """Returns (hidden (B,S,D), new_cache, aux_loss)."""
+        """Returns (hidden (B,S,D), new_cache, aux_loss).
+
+        ``seeds``: (B,) uint32 per-sequence SSA sampling seeds (RNG contract
+        v2) — the serving engine passes each request's own seed so a
+        sequence samples identically in any batch row/width.  When absent
+        they derive from ``rng`` (``derive_request_seeds``; training gets
+        fresh independent per-row streams per step).  Layer identity is
+        folded in here via a flat layer counter carried through the scan —
+        a pure function of (seed, layer), identical between prefill and
+        decode, which is what the serving cache-identity contract rests on.
+        """
         cfg = self.cfg
         if "embeds" in batch:
             x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
@@ -157,30 +170,32 @@ class DecoderLM:
         x = x * jnp.asarray(self.embed_scale, x.dtype)
         x = constrain(x, "btd_sp")
         positions = batch["positions"]
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        if seeds is None:
+            seeds = derive_request_seeds(rng, x.shape[0])
+        seeds = jnp.asarray(seeds, jnp.uint32)
 
         nslots = len(self.pattern)
 
         def body(carry, xs):
-            x, key, aux_acc = carry
+            x, li, aux_acc = carry
             slot_params, slot_caches = xs
             new_caches = []
             for s in range(nslots):
-                key, sub = jax.random.split(key)
                 c = slot_caches[s] if slot_caches is not None else None
                 x, nc, aux = self._block(
                     slot_params[s],
                     x,
                     slot=s,
                     positions=positions,
-                    rng=sub,
+                    seeds=fold_layer_seeds(seeds, li),
                     cache=c,
                     cache_index=cache_index,
                 )
+                li = li + jnp.uint32(1)
                 new_caches.append(nc)
             if slot_caches is None:
                 new_caches = None
-            return (x, key, aux_acc + aux), new_caches
+            return (x, li, aux_acc + aux), new_caches
 
         if remat != "none":
             policy = (
@@ -190,12 +205,13 @@ class DecoderLM:
             )
             body = jax.checkpoint(body, policy=policy)
 
+        li0 = jnp.uint32(0)
         xs = (params["slots"], cache)
         if cfg.scan_layers:
-            (x, _, aux_total), new_cache = jax.lax.scan(body, (x, rng, 0.0), xs)
+            (x, _, aux_total), new_cache = jax.lax.scan(body, (x, li0, 0.0), xs)
         else:
             # unrolled (depth-calibration mode): same body, python loop
-            carry = (x, rng, 0.0)
+            carry = (x, li0, 0.0)
             outs = []
             for i in range(self.steps):
                 xs_i = jax.tree.map(lambda a: a[i], xs)
@@ -227,24 +243,30 @@ class DecoderLM:
         logits = self.logits(params, hidden)
         return cross_entropy(logits, batch["labels"], batch.get("mask")) + aux
 
-    def prefill(self, params, batch, cache, rng=None, logits_at=None):
+    def prefill(self, params, batch, cache, rng=None, logits_at=None,
+                seeds=None):
         """Prefill the cache; returns (next-token logits, cache).
 
         ``logits_at``: position (scalar, may be traced) whose logits to
         return instead of the last row — the serving engine's bucketed
         prefill pads prompts to a power of two and reads the logits of the
         real last token, so one compiled prefill serves a whole bucket.
+        ``seeds``: per-sequence sampling seeds (see :meth:`forward`).
         """
-        hidden, new_cache, _ = self.forward(params, batch, cache=cache, rng=rng)
+        hidden, new_cache, _ = self.forward(
+            params, batch, cache=cache, rng=rng, seeds=seeds
+        )
         if logits_at is None:
             last = hidden[:, -1:]
         else:
             last = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
         return self.logits(params, last), new_cache
 
-    def decode_step(self, params, batch, cache, cache_index, rng=None):
+    def decode_step(self, params, batch, cache, cache_index, rng=None,
+                    seeds=None):
         hidden, new_cache, _ = self.forward(
-            params, batch, cache=cache, cache_index=cache_index, rng=rng
+            params, batch, cache=cache, cache_index=cache_index, rng=rng,
+            seeds=seeds,
         )
         return self.logits(params, hidden), new_cache
 

@@ -12,6 +12,24 @@ vLLM-style at the granularity JAX likes (static shapes):
     rows decode garbage that is masked out — the static-shape trade);
   * finished sequences (EOS or max_len) free their row immediately.
 
+Sampling seeds (RNG contract v2): every request carries a uint32
+``Request.seed`` (defaulting to the engine-wide default, which equals what
+a manual batch-1 prefill+decode loop derives), and the engine hands the
+model a per-row seed vector each call.  Because the SSA counter RNG is
+keyed by (seed, layer, t_step, absolute position, channel) — never by
+batch row, pad bucket or cache extent — a request's token stream is
+invariant to which row it occupies and how wide the synced block tables
+are.  That buys the scheduler three freedoms this module implements:
+
+  * **row migration** — a preempted request resumes into *any* free row;
+  * **extent-bounded spiking decode** — every impl (ann AND ssa/spikformer)
+    decodes through pow2-bucketed block tables, so no decode tick
+    materialises a ``max_seq``-extent tensor;
+  * **copy-on-write prefix sharing** (``share_prefix=True``) — requests
+    with the same seed and a common prompt prefix map the same physical
+    pages; a page is copied the first time an owner writes into it
+    (sliding-window wrap / divergence), so shared pages stay pristine.
+
 Cache layouts (``AttentionConfig.cache_layout``):
 
 ``slab`` — each row owns a contiguous fixed-size cache region (the cache is
@@ -24,19 +42,16 @@ it: admission requires free pages for the prompt, each tick grows active
 requests by a page when they cross a page boundary, and on pool exhaustion
 the engine preempts a victim (LRU-of-idle: least-recently-scheduled first —
 with lock-step decode all active rows tie, so this degenerates to the most
-recently admitted request).  Preempted requests release their pages and
-keep their row reserved; they resume by re-running the (bit-identical)
+recently admitted request).  Preempted requests release their pages *and*
+their row; they resume into any free row by re-running the (bit-identical)
 bucketed prompt prefill and then *replaying* their generated tokens through
-the decode step — not by prefilling prompt+generation, because the SSA
-counter RNG indexes decode draws by (row, step geometry), so only replay
-reproduces the original cache bit-for-bit.  Token streams are therefore
-bit-identical to the slab engine for the same rng and arrival order — for
-any sampler while pages are ample; once page pressure defers admissions or
-preempts, the per-tick sampler-key sequence shifts, so the cross-schedule
-guarantee is for per-tick-key-free (greedy) sampling — and
-``kv_cache_nbytes`` reflects the pool actually allocated instead of
-``num_slots * max_seq`` worth of slabs.  ``stats()`` reports occupancy /
-queue-wait / preemption counters.
+the decode step.  Token streams are bit-identical to the slab engine for
+the same seeds and arrival order — for any sampler while pages are ample;
+once page pressure defers admissions or preempts, the per-tick sampler-key
+sequence shifts, so the cross-schedule guarantee is for per-tick-key-free
+(greedy) sampling — and ``kv_cache_nbytes`` reflects the pool actually
+allocated instead of ``num_slots * max_seq`` worth of slabs.  ``stats()``
+reports occupancy / queue-wait / preemption / migration / sharing counters.
 
 Sampling is pluggable (``sampler=``, see `repro.serving.sampling`): greedy
 argmax by default, temperature / top-k / top-p via ``make_sampler``.
@@ -56,6 +71,18 @@ from .paging import pages_for_rows
 from .sampling import Sampler, greedy
 
 
+def _dev(arr: np.ndarray) -> jax.Array:
+    """Host -> device at the dispatch boundary, always through a copy.
+
+    ``jnp.asarray`` of a host int32 array is zero-copy on CPU and dispatch
+    is async, so handing JAX a buffer the scheduler later mutates (or
+    reuses) is a latent nondeterminism race (the PR-3 ``slot_pos`` bug).
+    Every host-owned array — tokens, positions, write offsets, seeds, block
+    tables, write/scrub tables — crosses into jit through this helper.
+    """
+    return jnp.asarray(np.array(arr, copy=True))
+
+
 @dataclass
 class Request:
     uid: int
@@ -64,6 +91,10 @@ class Request:
     # stop on any of these token ids; modern tokenizers ship several stop
     # ids, so an int, a set/frozenset, or any iterable of ints is accepted
     eos_id: Union[int, frozenset, set, tuple, list, None] = None
+    # uint32 sampling seed (RNG contract v2); None = the engine default,
+    # which matches a manual batch-1 loop with rng=None.  Requests only
+    # share prefix pages with requests holding the same seed.
+    seed: Optional[int] = None
     out_tokens: list = field(default_factory=list)
     done: bool = False
 
@@ -94,13 +125,14 @@ def _next_pow2(n: int) -> int:
 def _scrub_pages(cache: list, pages: jax.Array) -> list:
     """Reset the given page ids to the pristine zero-page fill.
 
-    Released pages go back to the free list through here: the slab engine
+    Recycled pages go back to the free list through here: the slab engine
     re-initialises a whole slot region at admission, so for bit-identical
     behaviour a recycled page must look exactly like a never-used one when
     it is gathered beyond a request's written rows (enc(0) spikes / zeros /
     pos = -1, not the previous tenant's tail).  ``pages`` is fixed-width
     (pages_per_seq), padded with ``PAGE_SCRATCH`` — scrubbing scratch is
-    harmless and keeps the compile count at one.
+    harmless and keeps the compile count at one.  Pages still referenced by
+    another owner (prefix sharing) never reach this function.
     """
     from repro.attention import PAGE_ZERO
 
@@ -126,7 +158,10 @@ def _scatter_pages(cache: list, row_cache: list, wt: jax.Array) -> list:
     [j*ps:(j+1)*ps); unallocated columns sink to the scratch page (their
     slab rows hold the init fill, so the zero page never needs writing).
     Window slots have shorter slab extents and consume a prefix of ``wt``;
-    rows padding the last partial page are never gathered back.
+    rows padding the last partial page are never gathered back.  Columns
+    holding *shared* prefix pages are written too: the sharer's prefill of
+    the common prefix produces bit-identical rows (same seed, same
+    positions — RNG contract v2), so the write is a byte-level no-op.
     """
     def per_slot(pool_d: dict, row_d: dict) -> dict:
         out = dict(pool_d)
@@ -147,11 +182,27 @@ def _scatter_pages(cache: list, row_cache: list, wt: jax.Array) -> list:
     return [per_slot(c, rc) for c, rc in zip(cache, row_cache)]
 
 
+def _copy_page(cache: list, src, dst) -> list:
+    """Copy one page's content (every leaf, every slot) src -> dst: the
+    copy-on-write divergence step.  The copy is byte-identical, so gathers
+    through either id read the same rows until the owner's next write."""
+    out = []
+    for slot_d in cache:
+        nd = dict(slot_d)
+        for name, pool in slot_d.items():
+            if name == "bt":
+                continue
+            nd[name] = pool.at[:, dst].set(pool[:, src])
+        out.append(nd)
+    return out
+
+
 class ServingEngine:
     def __init__(self, model, params, *, num_slots: int, max_seq: int,
                  rng_seed: int = 0, sampler: Optional[Sampler] = None,
                  num_pages: Optional[int] = None,
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None,
+                 share_prefix: bool = False):
         self.model = model
         self.params = params
         self.b = num_slots
@@ -160,15 +211,47 @@ class ServingEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, Request] = {}          # row -> request
         self.slot_pos = np.zeros(num_slots, np.int32)  # next position per row
+        self.slot_seeds = np.zeros(num_slots, np.uint32)
         self.key = jax.random.PRNGKey(rng_seed)
         self.queue_wait_ticks = 0
-        self._decode = jax.jit(
-            lambda p, batch, cache, idx: model.decode_step(p, batch, cache, idx)
+
+        from repro.attention import derive_request_seeds
+
+        # the seed a request gets when it doesn't bring one: identical to
+        # what a manual batch-1 loop derives from rng=None, so any engine
+        # row reproduces that loop token-for-token (row invariance)
+        self.default_seed = int(
+            np.asarray(jax.device_get(derive_request_seeds(None, 1)))[0]
         )
+
+        # models outside the decoder-LM family predate the seeds kwarg;
+        # they keep their rng-derived streams (no serving identity contract)
+        self._seeded = (
+            "seeds" in inspect.signature(model.decode_step).parameters
+        )
+        if self._seeded:
+            self._decode = jax.jit(
+                lambda p, batch, cache, idx, seeds: model.decode_step(
+                    p, batch, cache, idx, seeds=seeds
+                )
+            )
+        else:
+            self._decode = jax.jit(
+                lambda p, batch, cache, idx: model.decode_step(
+                    p, batch, cache, idx
+                )
+            )
 
         a = getattr(getattr(model, "cfg", None), "attention", None)
         self.layout = getattr(a, "cache_layout", "slab") if a is not None else "slab"
         self.paged = self.layout == "paged"
+        self.share_prefix = bool(share_prefix)
+        if self.share_prefix and not self.paged:
+            raise ValueError(
+                "share_prefix=True requires the paged cache layout "
+                "(AttentionConfig.cache_layout='paged'); this model is "
+                f"configured for layout={self.layout!r}"
+            )
         if self.paged:
             from repro.attention import NUM_RESERVED_PAGES
 
@@ -195,25 +278,37 @@ class ServingEngine:
                 )
             self.tables = BlockTables(num_slots, self.pages_per_seq)
             self._scrub = jax.jit(_scrub_pages)
+            self._scatter = jax.jit(_scatter_pages)
+            self._copy = jax.jit(_copy_page)
             self.cache = model.init_cache(
                 num_slots, max_seq, layout="paged",
                 num_pages=num_pages, page_size=ps,
             )
-            # spiking decode attends over the full slab extent (pristine
-            # rows carry enc(0) spikes and the counter RNG strides by the
-            # padded extent), so its gather must span max_seq; the
-            # position-masked ann path is extent-invariant and gathers only
-            # the pow2-bucketed allocated span — its decode HLO never holds
-            # a max_seq-extent tensor
-            self._full_span = getattr(a, "impl", "ann") in ("ssa", "spikformer")
-            self._scatter = jax.jit(_scatter_pages)
-            self._preempted: dict[int, Request] = {}  # row -> request
-            self._admit_order: dict[int, int] = {}    # row -> admission seq
+            # per-layer rolling extents (sliding windows) — the engine needs
+            # them to know which columns a decode tick writes (CoW guard)
+            extents = {max_seq}
+            slot_window = getattr(model, "_slot_window", None)
+            if callable(slot_window) and hasattr(model, "pattern"):
+                for s_idx in range(len(model.pattern)):
+                    w = model._slot_window(s_idx)
+                    extents.add(min(w, max_seq) if w is not None else max_seq)
+            self._slot_extents = sorted(extents)
+            self._preempted: list[Request] = []
+            self._admit_order: dict[int, int] = {}    # uid -> admission seq
+            self._last_row: dict[int, int] = {}       # uid -> preempted row
             self._admit_seq = 0
             self.preemptions = 0
             self.resumes = 0
             self.replay_steps = 0
+            self.migrations = 0
             self.max_concurrency_seen = 0
+            self.peak_pages_used = 0
+            # prefix sharing state: sha256(seed, prefix tokens) -> page id,
+            # plus the reverse map for retiring entries when pages die
+            self._prefix_map: dict[bytes, int] = {}
+            self._page_key: dict[int, bytes] = {}
+            self.shared_page_hits = 0
+            self.cow_copies = 0
         else:
             if num_pages is not None or page_size is not None:
                 raise ValueError(
@@ -227,15 +322,22 @@ class ServingEngine:
         # Bucketed prefill needs the model to expose `logits_at` (read the
         # real last token's logits out of a padded prompt); models without
         # it fall back to one exact-length prefill per request.
-        self._bucketed = (
-            "logits_at" in inspect.signature(model.prefill).parameters
-        )
+        prefill_params = inspect.signature(model.prefill).parameters
+        self._bucketed = "logits_at" in prefill_params
+        self._prefill_seeded = "seeds" in prefill_params
         if self._bucketed:
-            self._prefill = jax.jit(
-                lambda p, batch, cache, last: model.prefill(
-                    p, batch, cache, logits_at=last
+            if self._prefill_seeded:
+                self._prefill = jax.jit(
+                    lambda p, batch, cache, last, seeds: model.prefill(
+                        p, batch, cache, logits_at=last, seeds=seeds
+                    )
                 )
-            )
+            else:
+                self._prefill = jax.jit(
+                    lambda p, batch, cache, last: model.prefill(
+                        p, batch, cache, logits_at=last
+                    )
+                )
         else:
             self._prefill = None
         # pristine single-row cache: the fill state padded prompt rows are
@@ -258,15 +360,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        if req.seed is None:
+            req.seed = self.default_seed
         self._submit_tick[id(req)] = self.steps_run
         self.queue.append(req)
 
     def _free_slots(self):
-        if self.paged:
-            return [
-                i for i in range(self.b)
-                if i not in self.active and i not in self._preempted
-            ]
         return [i for i in range(self.b) if i not in self.active]
 
     def _bucket(self, p: int) -> int:
@@ -287,8 +386,9 @@ class ServingEngine:
         Padded prefill writes pad-token K/V into rows [p:bucket); resetting
         them to the pristine fill makes the cache bit-identical to an
         unpadded prefill of length ``p`` — the property that keeps bucketing
-        invisible to every attention impl (the spiking paths attend over all
-        slots, so stale pad K/V would otherwise leak into decode).
+        invisible to every attention impl (pad positions are -1, so they
+        never draw or mask in, but their K/V rows must also match the init
+        fill for the cache trees to compare equal).
         Leaves carry the sequence axis at position 2 ((L, B, S, ...) stacked
         layout) with per-layer extents (sliding-window layers allocate
         S = window < max_seq); lower-rank leaves pass through untouched.
@@ -307,6 +407,7 @@ class ServingEngine:
         cache; returns (last-token logits, row cache)."""
         p = len(req.prompt)
         row_cache = self._init_row
+        seeds = np.asarray([req.seed], np.uint32)
         if self._prefill is not None:
             pb = self._bucket(p)
             if pb < p or pb > self._min_seq_extent:
@@ -319,27 +420,30 @@ class ServingEngine:
             tokens = np.zeros((1, pb), np.int32)
             tokens[0, :p] = req.prompt
             # pad positions are -1: masked dead by the position-validity
-            # check on the ANN path, and their K/V rows are reset below
+            # checks on every impl, and their K/V rows are reset below
             positions = np.full((1, pb), -1, np.int32)
             positions[0, :p] = np.arange(p)
-            logits, row_cache = self._prefill(
+            args = (
                 self.params,
-                {
-                    "tokens": jnp.asarray(tokens),
-                    "positions": jnp.asarray(positions),
-                },
+                {"tokens": _dev(tokens), "positions": _dev(positions)},
                 row_cache,
                 jnp.asarray(p - 1, jnp.int32),
             )
+            if self._prefill_seeded:
+                logits, row_cache = self._prefill(*args, _dev(seeds))
+            else:
+                logits, row_cache = self._prefill(*args)
             if pb != p:
                 row_cache = self._reset_pad_rows(row_cache, p)
         else:
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            positions = jnp.arange(p, dtype=jnp.int32)[None]
+            tokens = _dev(np.asarray(req.prompt, np.int32)[None])
+            positions = _dev(np.arange(p, dtype=np.int32)[None])
+            kwargs = {"seeds": _dev(seeds)} if self._prefill_seeded else {}
             logits, row_cache = self.model.prefill(
                 self.params,
                 {"tokens": tokens, "positions": positions},
                 row_cache,
+                **kwargs,
             )
         return logits, row_cache
 
@@ -353,13 +457,75 @@ class ServingEngine:
         req.out_tokens.append(nxt)
         self.active[slot] = req
         self.slot_pos[slot] = len(req.prompt)
+        self.slot_seeds[slot] = np.uint32(req.seed)
         if self.paged:
-            self._admit_order[slot] = self._admit_seq
+            self._admit_order[req.uid] = self._admit_seq
             self._admit_seq += 1
+
+    # ------------------------------------------------------------------
+    # prefix sharing: lookup / registration over (seed, token-prefix) keys
+    # ------------------------------------------------------------------
+    def _sharable(self, req: Request) -> bool:
+        """Only prompts whose prefill never wraps a sliding-window extent
+        have page contents that are a pure function of the token prefix (a
+        wrapped window slot's early rows hold *tail* tokens)."""
+        return (
+            self.share_prefix and len(req.prompt) <= self._min_seq_extent
+        )
+
+    def _prefix_keys(self, req: Request) -> list[bytes]:
+        """One key per *full* prompt-prefix page: a sha256 chain over the
+        request seed and the page's tokens, so key ``j`` identifies the
+        whole prefix ``tokens[:(j+1)*ps]`` in O(prompt) total work (no
+        quadratic re-serialisation) and collisions are cryptographically
+        negligible — a false map hit would alias another request's K/V."""
+        import hashlib
+
+        ps = self.pool.page_size
+        prompt = np.asarray(req.prompt, np.int32)
+        keys, digest = [], np.uint32(req.seed).tobytes()
+        for j in range(len(prompt) // ps):
+            digest = hashlib.sha256(
+                digest + prompt[j * ps:(j + 1) * ps].tobytes()
+            ).digest()
+            keys.append(digest)
+        return keys
+
+    def _register_prefix_pages(self, pages: list[int], keys: list[bytes]):
+        """Publish a request's full prompt-prefix pages for later arrivals
+        (claimed pages are already registered; ``keys`` comes from the
+        admission's single :meth:`_prefix_keys` pass)."""
+        for key, page in zip(keys, pages):
+            if key in self._prefix_map:
+                continue
+            self._prefix_map[key] = page
+            self._page_key[page] = key
+
+    def _alloc_prompt_pages(self, req: Request, rows: int):
+        """Claim shared prefix pages + alloc the rest for ``rows`` cache
+        rows; returns ``(pages, keys)`` — keys for the later registration —
+        or None (taking nothing) if the pool is short."""
+        keys = self._prefix_keys(req) if self._sharable(req) else []
+        shared = []
+        for key in keys:
+            page = self._prefix_map.get(key)
+            if page is None:
+                break
+            shared.append(page)
+        fresh = self.pool.alloc(pages_for_rows(rows, self.pool.page_size)
+                                - len(shared))
+        if fresh is None:
+            return None
+        for page in shared:
+            self.pool.incref(page)
+            self.shared_page_hits += 1
+        return shared + fresh, keys
 
     def _admit(self):
         """Fill free rows FCFS: per-request prefill scattered into the
-        batch cache (slab) or into freshly allocated pages (paged)."""
+        batch cache (slab) or into freshly allocated pages (paged) — with
+        ``share_prefix``, prompt-prefix pages already resident for the same
+        (seed, tokens) are mapped instead of re-allocated."""
         for slot in self._free_slots():
             if not self.queue:
                 break
@@ -369,17 +535,18 @@ class ServingEngine:
                 # paged schedule aligned with the slab engine's.  Prompts
                 # longer than max_seq tail-keep into the slab row cache, so
                 # their footprint clamps to the table span
-                need = pages_for_rows(
-                    min(len(self.queue[0].prompt), self.max_seq),
-                    self.pool.page_size,
+                req = self.queue[0]
+                alloc = self._alloc_prompt_pages(
+                    req, min(len(req.prompt), self.max_seq)
                 )
-                pages = self.pool.alloc(need)
-                if pages is None:
+                if alloc is None:
                     break
-                req = self.queue.popleft()
+                pages, keys = alloc
+                self.queue.popleft()
                 logits, row_cache = self._prefill_row(req)
                 self.tables.assign(slot, pages)
                 self._scatter_row(slot, row_cache)
+                self._register_prefix_pages(pages, keys)
             else:
                 req = self.queue.popleft()
                 logits, row_cache = self._prefill_row(req)
@@ -391,25 +558,35 @@ class ServingEngine:
             self._start(slot, req, logits)
 
     # ------------------------------------------------------------------
-    # paged scheduling: scatter, growth, preemption, resume-by-replay
+    # paged scheduling: scatter, growth, preemption, resume-by-replay, CoW
     # ------------------------------------------------------------------
     def _scatter_row(self, slot: int, row_cache):
         wt = self.tables.scatter_row(slot)
-        self.cache = self._scatter(self.cache, row_cache, jnp.asarray(wt))
+        self.cache = self._scatter(self.cache, row_cache, _dev(wt))
 
-    def _release_pages(self, slot: int):
-        """Return a row's pages to the free list, scrubbed to the pristine
-        fill so their next tenant's gather tail is bit-identical to fresh
-        slab rows."""
+    def _retire_dead(self, dead: list[int]):
+        """Post-process pages whose refcount just hit zero: retire their
+        prefix registrations and scrub them to the pristine fill (so their
+        next tenant's gather tail is bit-identical to fresh slab rows).
+        Every ``pool.free`` caller must route its dead list through here."""
         from repro.attention import PAGE_SCRATCH
 
-        pages = self.tables.release(slot)
-        if not pages:
+        if not dead:
             return
+        for p in dead:
+            key = self._page_key.pop(p, None)
+            if key is not None:
+                self._prefix_map.pop(key, None)
         padded = np.full((self.pages_per_seq,), PAGE_SCRATCH, np.int32)
-        padded[: len(pages)] = pages
-        self.cache = self._scrub(self.cache, jnp.asarray(padded))
-        self.pool.free(pages)
+        padded[: len(dead)] = dead
+        self.cache = self._scrub(self.cache, _dev(padded))
+
+    def _release_pages(self, slot: int):
+        """Drop this row's ownership of its pages; pages still shared with
+        another owner survive untouched."""
+        pages = self.tables.release(slot)
+        if pages:
+            self._retire_dead(self.pool.free(pages))
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         """LRU-of-idle victim: all active rows were last scheduled on the
@@ -418,24 +595,38 @@ class ServingEngine:
         rows = [r for r in self.active if r != exclude]
         if not rows:
             return None
-        return max(rows, key=lambda r: self._admit_order[r])
+        return max(rows, key=lambda r: self._admit_order[self.active[r].uid])
 
     def _preempt(self, slot: int):
-        """Release the victim's pages; its row stays reserved so the resumed
-        request re-occupies the same decode row — the SSA counter RNG
-        indexes draws by row, so this (plus replay) is what keeps preempted
-        streams bit-identical to never-preempted ones."""
+        """Release the victim's pages AND its row.  The request resumes in
+        whatever row is free at resume time (replay is row-invariant under
+        the request-addressed RNG, so migration cannot change its stream)."""
         req = self.active.pop(slot)
         self._release_pages(slot)
-        self._preempted[slot] = req
+        self._last_row[req.uid] = slot
+        self._preempted.append(req)
         self.preemptions += 1
+
+    def _alloc_one_or_preempt(self, exclude: int) -> Optional[list[int]]:
+        """One fresh page, preempting victims (newest admission first) as
+        needed; None only if no victim remains."""
+        while True:
+            page = self.pool.alloc(1)
+            if page is not None:
+                return page
+            victim = self._pick_victim(exclude=exclude)
+            if victim is None:
+                return None
+            self._preempt(victim)
 
     def _grow_pages(self):
         """Ensure every active row has a page under its next write offset,
         preempting (newest-admitted first) when the pool runs dry.  Oldest
         admissions grow first so they are never starved by newcomers."""
         ps = self.pool.page_size
-        order = sorted(self.active, key=lambda r: self._admit_order[r])
+        order = sorted(
+            self.active, key=lambda r: self._admit_order[self.active[r].uid]
+        )
         for slot in order:
             if slot not in self.active:  # preempted by an earlier iteration
                 continue
@@ -444,100 +635,188 @@ class ServingEngine:
             # the block-table span
             col = min(int(self.slot_pos[slot]), self.max_seq - 1) // ps
             while slot in self.active and not self.tables.has_col(slot, col):
-                page = self.pool.alloc(1)
-                if page is not None:
-                    self.tables.append(slot, page[0])
-                    continue
-                victim = self._pick_victim(exclude=slot)
-                if victim is None:  # pragma: no cover - pool sizing guards
+                page = self._alloc_one_or_preempt(exclude=slot)
+                if page is None:  # pragma: no cover - pool sizing guards
                     raise RuntimeError(
                         "page pool exhausted by a single request; "
                         "num_pages is too small for max_seq"
                     )
-                self._preempt(victim)
+                self.tables.append(slot, page[0])
+
+    def _cow_guard(self):
+        """Copy-on-write: before a decode tick, every page any active row is
+        about to write must be privately owned.
+
+        A row's tick writes column ``pos // ps`` of global layers and the
+        *rolled* column ``(pos % window_extent) // ps`` of sliding-window
+        layers — the latter is how a write lands in a shared prompt-prefix
+        page (window wrap).  Shared pages (refcount > 1) are copied to a
+        fresh page first (byte-identical, so gathers are unchanged); a
+        still-registered page with a single owner just retires its prefix
+        registration, since its content is about to stop matching the key.
+        """
+        if not (self.paged and self.share_prefix):
+            return
+        ps = self.pool.page_size
+        for slot in sorted(self.active):
+            pgs = self.tables.pages.get(slot)
+            if not pgs:
+                continue
+            pos = int(self.slot_pos[slot])
+            cols = set()
+            for ext in self._slot_extents:
+                r = min(pos, self.max_seq - 1) if ext >= self.max_seq else pos % ext
+                cols.add(r // ps)
+            for col in sorted(cols):
+                if slot not in self.active:
+                    break
+                pgs = self.tables.pages.get(slot, [])
+                if col >= len(pgs):
+                    continue
+                page = pgs[col]
+                if self.pool.ref_count(page) > 1:
+                    fresh = self._alloc_one_or_preempt(exclude=slot)
+                    if fresh is None:  # pragma: no cover - pool sizing
+                        raise RuntimeError(
+                            "page pool exhausted during copy-on-write; "
+                            "num_pages is too small"
+                        )
+                    self.cache = self._copy(
+                        self.cache,
+                        jnp.asarray(page, jnp.int32),
+                        jnp.asarray(fresh[0], jnp.int32),
+                    )
+                    self.tables.replace(slot, col, fresh[0])
+                    # drops our ref; the page usually survives with its
+                    # co-owners, but the alloc above may have preempted the
+                    # last of them — a dead page must be scrubbed and its
+                    # registration retired like any other release
+                    self._retire_dead(self.pool.free([page]))
+                    self.cow_copies += 1
+                elif page in self._page_key:
+                    # sole owner about to write: retire the cache entry
+                    self._prefix_map.pop(self._page_key.pop(page), None)
 
     def _sync_tables(self):
         """Rebuild the block-table leaves the decode step reads this tick.
 
-        Spiking impls get the full ``max_seq`` span (their attention
-        semantics cover the whole slab extent); the ann path gets a
-        pow2-bucketed span just wide enough for the longest active request,
-        so the decode computation never materialises a max_seq-extent
-        tensor (recompiles are bounded by log2(pages_per_seq))."""
-        if self._full_span:
-            w = self.pages_per_seq
-        else:
-            ps = self.pool.page_size
-            need = 1
-            for slot in self.active:
-                need = max(need, int(self.slot_pos[slot]) // ps + 1)
-            w = min(self.pages_per_seq, _next_pow2(need))
-        arr = jnp.asarray(self.tables.as_array(w))
+        Every impl gets a pow2-bucketed span just wide enough for the
+        longest active request: position masking makes all backends —
+        spiking included, since RNG contract v2 keys draws by absolute
+        position — extent-invariant, so the decode computation never
+        materialises a max_seq-extent tensor (recompiles are bounded by
+        log2(pages_per_seq))."""
+        ps = self.pool.page_size
+        need = 1
+        for slot in self.active:
+            need = max(need, int(self.slot_pos[slot]) // ps + 1)
+        w = min(self.pages_per_seq, _next_pow2(need))
+        arr = _dev(self.tables.as_array(w))
         for slot_d in self.cache:
             steps = slot_d["pos"].shape[0]
             slot_d["bt"] = jnp.broadcast_to(arr[None], (steps,) + arr.shape)
 
     def _decode_tick(self, tokens: np.ndarray):
-        """One fused decode step over all rows for the given next tokens."""
+        """One fused decode step over all rows for the given next tokens.
+
+        Every host array crosses the dispatch boundary through ``_dev``
+        (copies): dispatch is async and the scheduler mutates slot_pos /
+        slot_seeds / tables right after dispatch on replay ticks.
+        """
         positions = self.slot_pos[:, None].astype(np.int32)
         batch = {
-            "tokens": jnp.asarray(tokens),
-            "positions": jnp.asarray(positions),
+            "tokens": _dev(tokens),
+            "positions": _dev(positions),
         }
-        # jnp.asarray of an int32 numpy array is zero-copy on CPU, and
-        # dispatch is async: hand JAX its own copy of slot_pos, because
-        # replay ticks bump slot_pos right after dispatch without ever
-        # materialising the logits (the copy is never mutated)
-        idx = jnp.asarray(self.slot_pos.copy())      # per-row write offsets
-        logits, self.cache = self._decode(self.params, batch, self.cache, idx)
+        idx = _dev(self.slot_pos)                    # per-row write offsets
+        if self._seeded:
+            logits, self.cache = self._decode(
+                self.params, batch, self.cache, idx, _dev(self.slot_seeds)
+            )
+        else:
+            logits, self.cache = self._decode(
+                self.params, batch, self.cache, idx
+            )
         return logits
 
     def _replay(self, slot: int, req: Request):
         """Re-derive a resumed request's decode-time cache rows by feeding
         its recorded tokens back through the decode step (logits discarded).
 
-        Each replayed tick is bit-identical to the original one: same row,
-        same positions, same per-layer seeds (decode draws its rng from a
-        fixed key).  Other rows are row-parallel throughout — their replayed
-        "write" deposits the same k/v their next genuine tick will rewrite
-        at the same offset (or lands on the scratch page for idle rows), so
-        their state is untouched.  No sampler keys are consumed."""
+        Each replayed tick is bit-identical to the original one — same
+        seed, same positions — in whatever row the request resumed
+        (request-addressed RNG).  Other rows are row-parallel throughout:
+        their replayed "write" deposits the same k/v their next genuine
+        tick will rewrite at the same offset (or lands on the scratch page
+        for idle rows), so their state is untouched; writes that would land
+        in shared pages are diverted by the CoW guard exactly as a genuine
+        tick would.  No sampler keys are consumed.
+
+        Returns False if the request was itself preempted mid-replay (the
+        CoW guard's page hunt may pick it as a victim): its pages are
+        already released and it is back on the preempted list with its
+        tokens intact, so the caller must not activate it further."""
         for tok in req.out_tokens[:-1]:
             tokens = np.zeros((self.b, 1), np.int32)
             for r2, rq2 in self.active.items():
                 if r2 != slot and rq2.out_tokens:
                     tokens[r2, 0] = rq2.out_tokens[-1]
             tokens[slot, 0] = tok
+            self._cow_guard()
+            if self.active.get(slot) is not req:
+                return False
             self._sync_tables()
             self._decode_tick(tokens)
             self.slot_pos[slot] += 1
             self.replay_steps += 1
+        return True
 
     def _resume_preempted(self):
         """Resume preempted requests (oldest admission first) whose full
-        current footprint fits the pool: re-run the bucketed prompt prefill
-        (bit-identical to the original admission), scatter it into fresh
-        pages, then replay the generated tokens."""
-        ps = self.pool.page_size
-        order = sorted(self._preempted, key=lambda r: self._admit_order[r])
-        for slot in order:
-            req = self._preempted[slot]
+        current footprint fits the pool, into any free row: re-run the
+        bucketed prompt prefill (bit-identical to the original admission),
+        scatter it into fresh pages, then replay the generated tokens."""
+        if not self._preempted:
+            return
+        free = self._free_slots()
+        for req in sorted(
+            list(self._preempted),
+            key=lambda r: self._admit_order[r.uid],
+        ):
+            if not free:
+                break
             rows = min(len(req.prompt) + len(req.out_tokens) - 1,
                        self.max_seq)
-            pages = self.pool.alloc(pages_for_rows(rows, ps))
-            if pages is None:
+            alloc = self._alloc_prompt_pages(req, rows)
+            if alloc is None:
                 break  # oldest first: later arrivals keep waiting too
-            del self._preempted[slot]
+            pages, keys = alloc
+            self._preempted.remove(req)
+            slot = free.pop(0)
             logits, row_cache = self._prefill_row(req)
             del logits  # first token was sampled at original admission
             self.tables.assign(slot, pages)
             self._scatter_row(slot, row_cache)
+            self._register_prefix_pages(pages, keys)
             self.active[slot] = req
             self.slot_pos[slot] = len(req.prompt)
-            self._replay(slot, req)
-            self.resumes += 1
+            self.slot_seeds[slot] = np.uint32(req.seed)
+            if slot != self._last_row.pop(req.uid, slot):
+                self.migrations += 1
+            if self._replay(slot, req):
+                self.resumes += 1
 
     # ------------------------------------------------------------------
+    @property
+    def has_pending_work(self) -> bool:
+        """True while any request is queued, active, or preempted — the
+        public drive-loop condition (external tick loops should not poke
+        scheduler internals)."""
+        return bool(
+            self.queue or self.active
+            or (self.paged and self._preempted)
+        )
+
     @property
     def num_prefill_compiles(self) -> int:
         """Number of distinct compiled prefill signatures this engine has
@@ -551,8 +830,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> list[Request]:
-        """One engine tick: resume / admit / grow pages, then one fused
-        decode step for all rows.  Returns the requests that finished."""
+        """One engine tick: resume / admit / grow pages / CoW, then one
+        fused decode step for all rows.  Returns the requests that
+        finished."""
         if self.paged:
             self._resume_preempted()
         self._admit()
@@ -560,9 +840,13 @@ class ServingEngine:
             return []
         if self.paged:
             self._grow_pages()
+            self._cow_guard()
             self._sync_tables()
             self.max_concurrency_seen = max(
                 self.max_concurrency_seen, len(self.active)
+            )
+            self.peak_pages_used = max(
+                self.peak_pages_used, self.pool.num_used
             )
         tokens = np.zeros((self.b, 1), np.int32)
         for slot, req in self.active.items():
@@ -588,7 +872,8 @@ class ServingEngine:
                 del self.active[slot]
                 if self.paged:
                     self._release_pages(slot)
-                    self._admit_order.pop(slot, None)
+                    self._admit_order.pop(req.uid, None)
+                    self._last_row.pop(req.uid, None)
         return finished
 
     def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
@@ -596,13 +881,7 @@ class ServingEngine:
         requests in completion order."""
         done: list[Request] = []
         ticks = 0
-
-        def pending():
-            if self.queue or self.active:
-                return True
-            return self.paged and bool(self._preempted)
-
-        while pending() and ticks < max_ticks:
+        while self.has_pending_work and ticks < max_ticks:
             done.extend(self.step())
             ticks += 1
         return done
@@ -619,7 +898,8 @@ class ServingEngine:
         return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.cache))
 
     def stats(self) -> dict:
-        """Scheduler observability: occupancy, queueing, preemption."""
+        """Scheduler observability: occupancy, queueing, preemption,
+        migration, prefix sharing."""
         out = {
             "layout": self.layout,
             "ticks": self.steps_run,
@@ -636,12 +916,18 @@ class ServingEngine:
             num_pages=self.pool.num_pages,
             pages_free=self.pool.num_free,
             pages_used=self.pool.num_used,
+            peak_pages_used=self.peak_pages_used,
             occupancy=self.pool.num_used / max(self.pool.num_usable, 1),
             preempted_now=len(self._preempted),
             preemptions=self.preemptions,
             resumes=self.resumes,
             replay_steps=self.replay_steps,
+            migrations=self.migrations,
             max_concurrency_seen=self.max_concurrency_seen,
+            share_prefix=self.share_prefix,
+            shared_pages_now=self.pool.num_shared,
+            shared_page_hits=self.shared_page_hits,
+            cow_copies=self.cow_copies,
         )
         return out
 

@@ -6,11 +6,15 @@ capped by ``num_slots`` regardless of how little cache the live requests
 actually need.  The paged layout (``AttentionConfig.cache_layout="paged"``)
 makes every cache leaf a pool of fixed-size pages shared by all requests:
 
-  * :class:`PagePool` — a free-list allocator over page ids.  Ids below
-    ``NUM_RESERVED_PAGES`` are never handed out: ``PAGE_ZERO`` keeps the
-    pristine init fill (zeros / packed enc(0) spikes / ``pos = -1``) that
-    unallocated block-table entries resolve to, and ``PAGE_SCRATCH`` is the
-    garbage sink that inactive decode rows read and write.
+  * :class:`PagePool` — a free-list allocator over **refcounted** page ids.
+    Ids below ``NUM_RESERVED_PAGES`` are never handed out: ``PAGE_ZERO``
+    keeps the pristine init fill (zeros / packed enc(0) spikes / ``pos =
+    -1``) that unallocated block-table entries resolve to, and
+    ``PAGE_SCRATCH`` is the garbage sink that inactive decode rows read and
+    write.  Refcounts > 1 arise from copy-on-write prefix sharing: several
+    requests with a common prompt prefix map the same physical page in
+    their block tables, and the page only returns to the free list when its
+    last owner releases it.
   * :class:`BlockTables` — the per-row page lists plus assembly of the
     combined ``(rows, width)`` int32 table the decode step consumes
     (``models.blocks._cache_write`` writes through it, and
@@ -19,7 +23,8 @@ makes every cache leaf a pool of fixed-size pages shared by all requests:
 Page ids are shared across layers and pattern slots: each slot's pool leaf
 is separate storage, so page ``p`` of a sliding-window slot and page ``p``
 of a global slot never collide.  The scheduler policy (admission, growth,
-preemption, resume-by-replay) lives in :class:`~repro.serving.engine.ServingEngine`.
+preemption, resume-by-replay, prefix sharing / CoW) lives in
+:class:`~repro.serving.engine.ServingEngine`.
 """
 from __future__ import annotations
 
@@ -39,7 +44,8 @@ def pages_for_rows(rows: int, page_size: int) -> int:
 
 
 class PagePool:
-    """Free-list allocator over ``num_pages`` page ids of ``page_size`` rows."""
+    """Free-list allocator over ``num_pages`` refcounted page ids of
+    ``page_size`` rows."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages <= NUM_RESERVED_PAGES:
@@ -54,6 +60,7 @@ class PagePool:
         self._free: collections.deque[int] = collections.deque(
             range(NUM_RESERVED_PAGES, num_pages)
         )
+        self._ref: dict[int, int] = {}
 
     @property
     def num_usable(self) -> int:
@@ -65,19 +72,51 @@ class PagePool:
 
     @property
     def num_used(self) -> int:
+        """Physical pages held (a page shared by N requests counts once)."""
         return self.num_usable - self.num_free
 
+    @property
+    def num_shared(self) -> int:
+        """Pages currently mapped by more than one owner."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
     def alloc(self, n: int = 1) -> Optional[list[int]]:
-        """Pop ``n`` pages, or ``None`` (and take nothing) if short."""
+        """Pop ``n`` pages at refcount 1, or ``None`` (and take nothing) if
+        short."""
         if n < 0 or len(self._free) < n:
             return None
-        return [self._free.popleft() for _ in range(n)]
-
-    def free(self, pages) -> None:
+        pages = [self._free.popleft() for _ in range(n)]
         for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def incref(self, page: int) -> None:
+        """Add an owner to an allocated page (prefix sharing)."""
+        if page not in self._ref:
+            raise ValueError(f"incref of unallocated page id {page}")
+        self._ref[page] += 1
+
+    def ref_count(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def free(self, pages) -> list[int]:
+        """Drop one owner per page; returns the pages whose refcount hit
+        zero (actually recycled — the caller scrubs exactly these)."""
+        dead: list[int] = []
+        for p in pages:
+            p = int(p)
             if not NUM_RESERVED_PAGES <= p < self.num_pages:
                 raise ValueError(f"freeing invalid page id {p}")
-            self._free.append(int(p))
+            c = self._ref.get(p)
+            if c is None:
+                raise ValueError(f"freeing unallocated page id {p}")
+            if c > 1:
+                self._ref[p] = c - 1
+            else:
+                del self._ref[p]
+                self._free.append(p)
+                dead.append(p)
+        return dead
 
 
 class BlockTables:
@@ -93,6 +132,10 @@ class BlockTables:
 
     def append(self, row: int, page: int) -> None:
         self.pages[row].append(page)
+
+    def replace(self, row: int, col: int, page: int) -> None:
+        """Swap one column's page id (copy-on-write divergence)."""
+        self.pages[row][col] = page
 
     def num_pages(self, row: int) -> int:
         return len(self.pages.get(row, ()))

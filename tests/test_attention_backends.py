@@ -254,7 +254,11 @@ class _ThreefrySsaBackend:
         from repro.core.ssa import ssa_attention
 
         qs, ks, vs = folded_spike_trains(inv)
-        rng = inv.rng if inv.rng is not None else jax.random.PRNGKey(0)
+        seeds = (
+            inv.seeds if inv.seeds is not None
+            else jnp.zeros(inv.q.shape[0], jnp.uint32)
+        )
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), seeds[0])
         spikes = ssa_attention(rng, qs, ks, vs, causal=inv.causal, window=inv.window)
         return rate_decode(spikes, inv.q.shape[0], inv.q.shape[2])
 

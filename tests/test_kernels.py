@@ -121,12 +121,16 @@ def test_ssa_kernel_gradients_match_ste_formula():
 
     gq, gk, gv = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
     # Manual STE formula on the recomputed S
-    from repro.kernels.ssa_attention.ops import _recompute_s, _visible_counts
+    from repro.kernels.ssa_attention.ops import _recompute_s
+    from repro.kernels.ssa_attention.ref import (
+        default_positions, valid_mask, visible_counts,
+    )
 
-    s = _recompute_s(q, k, seed, True, None, 128, 128)
+    s = _recompute_s(q, k, seed, None, None, True, None)
     out = ssa_reference(q, k, v, seed, causal=True)
     g = 2 * out  # d(sum out^2)/d out
-    vis = _visible_counts(n, n, True, None)[None, :, None]
+    qp, kp = default_positions(b, n, n)
+    vis = visible_counts(valid_mask(qp, kp, True, None))[:, :, None]
     g32 = g / vis
     dv = jnp.einsum("bqk,bqd->bkd", s, g32)
     ds = jnp.einsum("bqd,bkd->bqk", g32, v) / d

@@ -43,15 +43,17 @@ def _run_engine(cfg, prompts, *, slots, max_seq, max_new=6, arrivals=None,
     """Drive an engine over an arrival schedule; returns (streams, engine).
 
     ``arrivals[i]`` = tick at which request i is submitted (None = all
-    up-front)."""
+    up-front); ``max_new`` may be one int or a per-request list."""
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(
         model, params, num_slots=slots, max_seq=max_seq, **engine_kw
     )
+    if isinstance(max_new, int):
+        max_new = [max_new] * len(prompts)
     reqs = [
-        Request(uid=i, prompt=p, max_new_tokens=max_new)
-        for i, p in enumerate(prompts)
+        Request(uid=i, prompt=p, max_new_tokens=mn)
+        for i, (p, mn) in enumerate(zip(prompts, max_new))
     ]
     if arrivals is None:
         for r in reqs:
@@ -61,9 +63,7 @@ def _run_engine(cfg, prompts, *, slots, max_seq, max_new=6, arrivals=None,
         done = []
         pending = sorted(zip(arrivals, reqs), key=lambda t: t[0])
         tick = 0
-        while pending or eng.queue or eng.active or (
-            eng.paged and eng._preempted
-        ):
+        while pending or eng.has_pending_work:
             while pending and pending[0][0] <= tick:
                 eng.submit(pending.pop(0)[1])
             done.extend(eng.step())
@@ -197,8 +197,9 @@ def test_paged_engine_matches_slab_over_randomized_schedule(impl, storage):
 def test_preempt_then_resume_is_token_identical(arch, storage):
     """Acceptance check: more queued work than the pool fits concurrently
     completes via preemption with outputs unchanged vs the slab engine
-    (resume = bit-identical re-prefill + decode replay in the original
-    row)."""
+    (resume = bit-identical re-prefill + decode replay into whatever row is
+    free — rows are NOT reserved across preemption since the
+    request-addressed RNG made replay row-invariant)."""
     cfg_slab = _cfg(arch, storage=storage, layout="slab")
     prompts = _prompts(cfg_slab.vocab_size, [4, 5, 6], seed=1)
     s_slab, _ = _run_engine(
@@ -214,6 +215,41 @@ def test_preempt_then_resume_is_token_identical(arch, storage):
     assert eng.preemptions >= 1 and eng.resumes >= 1
     assert eng.replay_steps > 0
     assert s_slab == s_tight
+
+
+@pytest.mark.parametrize(
+    "arch,storage",
+    [
+        ("codeqwen15_7b", "dense"),
+        ("codeqwen15_7b", "packed"),
+        ("gemma2_9b", "packed"),   # sliding-window layers under paging
+    ],
+)
+def test_preempt_resume_migrates_rows_token_identically(arch, storage):
+    """Acceptance check: a preempted request resumes in a *different* decode
+    row (its old row was taken by a later admission) and its stream is
+    still bit-identical to the uninterrupted slab run — the draws are
+    request-addressed, not row-addressed.
+
+    Schedule: two long requests fill a 5-page pool; growth preempts the
+    newest; a short third arrival takes the freed row (its prompt fits the
+    pool where the preempted footprint doesn't); the preempted request
+    later resumes into the row the finished first request vacated."""
+    prompts = _prompts(get_smoke_config(arch).vocab_size, [6, 6, 3], seed=11)
+    max_new, arrivals = [20, 14, 4], [0, 0, 2]
+    s_slab, _ = _run_engine(
+        _cfg(arch, storage=storage, layout="slab"), prompts,
+        slots=2, max_seq=32, max_new=max_new, arrivals=arrivals,
+    )
+    s_paged, eng = _run_engine(
+        _cfg(arch, storage=storage), prompts,
+        slots=2, max_seq=32, max_new=max_new, arrivals=arrivals,
+        num_pages=NUM_RESERVED_PAGES + 5, page_size=8,
+    )
+    assert eng.preemptions >= 1 and eng.resumes >= 1
+    assert eng.migrations >= 1, "schedule failed to exercise row migration"
+    assert eng.stats()["migrations"] == eng.migrations
+    assert s_slab == s_paged
 
 
 def test_preempted_pages_are_reused_and_scrubbed():
@@ -235,7 +271,6 @@ def test_preempted_pages_are_reused_and_scrubbed():
         _cfg(storage="packed", layout="slab"), [follow],
         slots=1, max_seq=32, max_new=6,
     )
-    # note: same row-0 admission in both engines (rng row-dependence)
     assert req.out_tokens == s_slab[0]
 
 
@@ -267,35 +302,46 @@ def _decode_lowering(cfg, *, max_seq, paged, bt_width=None, b=2, ps=8):
     return f.lower(params, batch, cache, idx).as_text()
 
 
-@pytest.mark.parametrize("impl", ["ann", "ssa"])
-def test_paged_decode_allocates_no_max_seq_cache_tensor(impl):
+@pytest.mark.parametrize(
+    "impl,storage",
+    [("ann", "dense"), ("ssa", "dense"), ("ssa", "packed"),
+     ("spikformer", "dense")],
+)
+def test_paged_decode_allocates_no_max_seq_cache_tensor(impl, storage):
     """Acceptance check: with a growth-bucketed block table the paged decode
     computation holds no tensor with a max_seq-sized axis at all — the
     resident cache is the page pool, and the per-tick gather spans only the
-    allocated pages.  The slab decode (control) does carry (B, max_seq, ...)
+    allocated pages.  Since the request-addressed RNG this holds for every
+    *spiking* impl too (position-masked, extent-invariant draws), not just
+    the ann path.  The slab decode (control) does carry (B, max_seq, ...)
     cache tensors."""
     max_seq = 96  # distinct from every smoke-config model dimension
-    cfg = _cfg(impl=impl)
+    cfg = _cfg(impl=impl, storage=storage)
     text_paged = _decode_lowering(cfg, max_seq=max_seq, paged=True, bt_width=1)
     markers = (f"x{max_seq}x", f"<{max_seq}x")
     assert not any(m in text_paged for m in markers), (
         "paged decode lowering contains a max_seq-extent tensor"
     )
     text_slab = _decode_lowering(
-        _cfg(impl=impl, layout="slab"), max_seq=max_seq, paged=False
+        _cfg(impl=impl, storage=storage, layout="slab"),
+        max_seq=max_seq, paged=False,
     )
     assert any(m in text_slab for m in markers)
 
 
-def test_ann_paged_engine_decodes_through_bucketed_tables():
-    """The ann engine really does pass narrow tables early on: with short
-    sequences the synced block-table width stays below the full span."""
-    cfg = _cfg(impl="ann")
+@pytest.mark.parametrize(
+    "impl,storage", [("ann", "dense"), ("ssa", "packed"), ("ssa", "dense")]
+)
+def test_paged_engine_decodes_through_bucketed_tables(impl, storage):
+    """Every impl passes narrow tables early on — spiking decode is
+    extent-bounded under the request-addressed RNG, not pinned to the full
+    max_seq span: with short sequences the synced block-table width stays
+    below the full span."""
+    cfg = _cfg(impl=impl, storage=storage)
     prompts = _prompts(cfg.vocab_size, [4, 5], seed=2)
     _, eng = _run_engine(
         cfg, prompts, slots=2, max_seq=64, max_new=4, page_size=8
     )
-    assert not eng._full_span
     # after the run the cached bt leaf reflects the last synced width
     assert eng.cache[0]["bt"].shape[-1] < eng.pages_per_seq
 

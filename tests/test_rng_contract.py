@@ -1,0 +1,233 @@
+"""RNG contract v2 (request-addressed counter RNG).
+
+The contract under test: every SSA Bernoulli draw is a pure function of
+(per-sequence seed, layer, t_step, absolute token position, channel) —
+therefore a sequence's outputs are invariant to
+
+  * the batch row it occupies,
+  * the batch width around it,
+  * the prefill pad bucket (pad positions are -1 and never draw),
+  * the KV-cache extent it is gathered from (absent rows are masked out of
+    the scores and of the eq. 6 visible normaliser).
+
+Fuzzed at the oracle level with hypothesis (ssa_reference IS the contract —
+kernel == ref bit-identity is test_kernels' job) and spot-checked at the
+model/engine level where the serving scheduler actually cashes these
+invariances in (row migration, extent-bounded decode, prefix sharing).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
+
+from repro.attention import RNG_CONTRACT_VERSION, derive_request_seeds
+from repro.configs import get_smoke_config
+from repro.kernels.ssa_attention.ref import ssa_reference
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def _spikes(key, shape, rate=0.5):
+    return (jax.random.uniform(key, shape) < rate).astype(jnp.float32)
+
+
+def test_contract_version_is_two():
+    assert RNG_CONTRACT_VERSION == 2
+
+
+def test_request_seeds_are_batch_width_invariant():
+    """Row b's seed must not depend on how many rows sit beside it."""
+    rng = jax.random.PRNGKey(42)
+    s1 = np.asarray(derive_request_seeds(rng, 1))
+    s4 = np.asarray(derive_request_seeds(rng, 4))
+    s64 = np.asarray(derive_request_seeds(rng, 64))
+    assert s1[0] == s4[0] == s64[0]
+    np.testing.assert_array_equal(s4, s64[:4])
+    # and rows are distinct streams
+    assert len(set(s64.tolist())) == 64
+
+
+# ---------------------------------------------------------------------------
+# fuzzed oracle-level invariance
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    d=st.integers(2, 40),
+    seed=st.integers(0, 2**32 - 1),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 4]),
+    row=st.integers(0, 3),
+    width=st.integers(1, 5),
+    extra_kv=st.integers(1, 16),
+    extra_q=st.integers(1, 8),
+)
+def test_ssa_outputs_are_request_addressed(
+    n, d, seed, causal, window, row, width, extra_kv, extra_q
+):
+    """Fuzz the new contract: outputs for a given sequence are invariant to
+    batch row, batch width, cache extent (absent rows appended) and pad
+    bucket (pad queries appended)."""
+    width = max(width, row + 1)
+    key = jax.random.PRNGKey((n * 31 + d) ^ (seed & 0xFFFF))
+    q = _spikes(key, (1, n, d))
+    k = _spikes(jax.random.fold_in(key, 1), (1, n, d))
+    v = _spikes(jax.random.fold_in(key, 2), (1, n, d))
+    seeds = jnp.asarray([seed], jnp.uint32)
+    pos = jnp.arange(n, dtype=jnp.int32)[None]
+    base = np.asarray(
+        ssa_reference(q, k, v, seeds, causal=causal, window=window,
+                      q_positions=pos, kv_positions=pos)
+    )
+
+    # --- batch row / width: plant the sequence at `row` among noise rows --
+    kb = jax.random.fold_in(key, 3)
+    bq = _spikes(kb, (width, n, d)).at[row].set(q[0])
+    bk = _spikes(jax.random.fold_in(kb, 1), (width, n, d)).at[row].set(k[0])
+    bv = _spikes(jax.random.fold_in(kb, 2), (width, n, d)).at[row].set(v[0])
+    bseeds = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 2**32, width), jnp.uint32
+    ).at[row].set(jnp.uint32(seed))
+    bpos = jnp.broadcast_to(pos, (width, n))
+    out = np.asarray(
+        ssa_reference(bq, bk, bv, bseeds, causal=causal, window=window,
+                      q_positions=bpos, kv_positions=bpos)
+    )
+    np.testing.assert_array_equal(out[row], base[0])
+
+    # --- cache extent: absent kv rows (pos = -1) change nothing ----------
+    k_ext = jnp.concatenate(
+        [k, _spikes(jax.random.fold_in(key, 4), (1, extra_kv, d))], axis=1
+    )
+    v_ext = jnp.concatenate(
+        [v, _spikes(jax.random.fold_in(key, 5), (1, extra_kv, d))], axis=1
+    )
+    kv_pos_ext = jnp.concatenate(
+        [pos, jnp.full((1, extra_kv), -1, jnp.int32)], axis=1
+    )
+    out_ext = np.asarray(
+        ssa_reference(q, k_ext, v_ext, seeds, causal=causal, window=window,
+                      q_positions=pos, kv_positions=kv_pos_ext)
+    )
+    np.testing.assert_array_equal(out_ext, base)
+
+    # --- pad bucket: extra pad queries (pos = -1) leave real rows alone --
+    q_pad = jnp.concatenate(
+        [q, _spikes(jax.random.fold_in(key, 6), (1, extra_q, d))], axis=1
+    )
+    q_pos_pad = jnp.concatenate(
+        [pos, jnp.full((1, extra_q), -1, jnp.int32)], axis=1
+    )
+    out_pad = np.asarray(
+        ssa_reference(q_pad, k, v, seeds, causal=causal, window=window,
+                      q_positions=q_pos_pad, kv_positions=pos)
+    )
+    np.testing.assert_array_equal(out_pad[:, :n], base)
+
+
+# ---------------------------------------------------------------------------
+# model/engine-level spot checks (where the scheduler cashes the contract in)
+# ---------------------------------------------------------------------------
+def _ssa_cfg(storage="dense"):
+    cfg = get_smoke_config("codeqwen15_7b")
+    return dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(
+            cfg.attention, impl="ssa", spike_storage=storage
+        ),
+    )
+
+
+def _manual_greedy(model, params, prompt, max_seq, new_tokens):
+    cache = model.init_cache(1, max_seq)
+    logits, cache = model.prefill(
+        params,
+        {
+            "tokens": jnp.asarray(prompt)[None],
+            "positions": jnp.arange(len(prompt), dtype=jnp.int32)[None],
+        },
+        cache,
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(new_tokens - 1):
+        logits, cache = model.decode_step(
+            params,
+            {
+                "tokens": jnp.asarray([[out[-1]]], jnp.int32),
+                "positions": jnp.asarray([[pos]], jnp.int32),
+            },
+            cache,
+            jnp.asarray([pos]),
+        )
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return out
+
+
+@pytest.mark.parametrize("storage", ["dense", "packed"])
+def test_engine_row_placement_is_invisible(storage):
+    """A request decoding in engine row 2 (rows 0/1 occupied by other
+    requests) emits exactly the tokens of a manual batch-1 loop — under the
+    v1 row-strided RNG this only held for row 0."""
+    cfg = _ssa_cfg(storage)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    target = np.array([5, 7, 9, 11], np.int32)
+    fillers = [np.array([1, 2, 3], np.int32), np.array([4, 4], np.int32)]
+
+    eng = ServingEngine(model, params, num_slots=3, max_seq=32)
+    reqs = [
+        Request(uid=i, prompt=p, max_new_tokens=8)
+        for i, p in enumerate(fillers)
+    ]
+    tgt = Request(uid=9, prompt=target, max_new_tokens=5)
+    for r in reqs + [tgt]:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=60)
+    # fillers admitted first -> target sat in row 2
+    assert tgt.out_tokens == _manual_greedy(model, params, target, 32, 5)
+
+
+def test_decode_invariant_to_cache_extent():
+    """The same prompt greedy-decodes identically against slab caches of
+    different extents — never-written rows carry pos=-1 and neither draw
+    nor count toward the eq. 6 normaliser."""
+    cfg = _ssa_cfg("packed")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    streams = [
+        _manual_greedy(model, params, prompt, max_seq, 6)
+        for max_seq in (16, 32, 64)
+    ]
+    assert streams[0] == streams[1] == streams[2]
+
+
+def test_request_seed_overrides_default_stream():
+    """Request.seed changes the sampled stream (and is deterministic)."""
+    cfg = _ssa_cfg("dense")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.array([5, 7, 9], np.int32)
+
+    def run(seed):
+        eng = ServingEngine(model, params, num_slots=1, max_seq=32)
+        req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=6,
+                      seed=seed)
+        eng.submit(req)
+        eng.run_until_done(max_ticks=30)
+        return req.out_tokens
+
+    default = run(None)
+    seeded_a = run(12345)
+    seeded_b = run(12345)
+    assert seeded_a == seeded_b
+    assert default == run(None)
+    # different seed streams genuinely differ (SSA sampling is live)
+    assert any(run(s) != default for s in (12345, 999, 4242))

@@ -20,7 +20,12 @@ tokens-per-sec / preemption counters to ``benchmarks/BENCH_paging.json``.
 ``--compare-sharing`` serves a bursty trace whose requests share a system
 prompt through the same tight paged pool with prefix sharing off and on,
 and writes physical-page savings / achieved concurrency / queue-wait
-deltas to ``benchmarks/BENCH_sharing.json``."""
+deltas to ``benchmarks/BENCH_sharing.json``.
+
+``--compare-prefill`` serves an over-long prompt through a paged engine
+with one-shot (slab-staged) vs chunked (direct-to-page) prefill and writes
+peak prefill staging bytes + admission latency to
+``benchmarks/BENCH_prefill.json``."""
 from __future__ import annotations
 
 import argparse
@@ -401,6 +406,186 @@ def bench_paging_compare(record_path: str | None = None):
     )
 
 
+def bench_prefill_compare(record_path: str | None = None):
+    """Chunked vs one-shot paged prefill on an over-long-prompt workload
+    (smoke SSA model, packed storage + paged cache, CPU).
+
+    One 48-token prompt — six pages, far wider than any chunk — served by a
+    fresh engine per variant (cold jit caches, fresh model instances so the
+    per-model compile memo cannot leak between variants).  The comparison
+    reports **peak prefill staging bytes** (the one-shot path materialises
+    an O(max_seq) slab row cache per admission and scatters it; the chunked
+    path writes O(chunk) tokens straight into pool pages) and **admission
+    latency** cold and warm (submit -> first sampled token), then verifies
+    the two streams are bit-identical and writes
+    ``benchmarks/BENCH_prefill.json``.  The memory ratios are the headline;
+    the latency columns are honesty checks — at smoke scale on CPU the
+    chunked path's N small dispatches cost more wall time than one big
+    dispatch, the deliberate trade for O(chunk) staging and per-chunk page
+    claims.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    max_seq, page_size, prompt_len, chunk = 64, 8, 48, 8
+    cfg = with_overrides(
+        get_smoke_config("codeqwen15_7b"),
+        attention__impl="ssa",
+        attention__spike_storage="packed",
+        attention__cache_layout="paged",
+    )
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+    warm_prompt = rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+
+    def staging_bytes(eng) -> int:
+        """Bytes of per-admission staging state outside the shared pool."""
+        if eng.prefill_chunk:
+            # chunked: no slab staging row; the transient is one chunk of
+            # tokens/positions (the written K/V lands in the pool in place)
+            return int(2 * chunk * np.dtype(np.int32).itemsize)
+        return sum(int(l.nbytes) for l in jax.tree.leaves(eng._init_row))
+
+    def compiled_temp_bytes(eng, model, params):
+        """XLA temp allocation of the compiled prefill computation (None if
+        this backend exposes no memory analysis)."""
+        try:
+            if eng.prefill_chunk:
+                from repro.attention import bucketed_table_width
+
+                cache = model.init_cache(
+                    1, max_seq, layout="paged",
+                    num_pages=eng.pool.num_pages, page_size=page_size,
+                )
+                # lower the PEAK chunk signature (the widest block table
+                # the engine compiles for this prompt), not the cheapest
+                width = bucketed_table_width(
+                    prompt_len, page_size, max_seq // page_size
+                )
+                cache = [
+                    {k: (v[:, :1, :width] if k == "bt" else v)
+                     for k, v in d.items()}
+                    for d in cache
+                ]
+                f = jax.jit(lambda p, b, c, i, s: model.decode_step(
+                    p, b, c, i, seeds=s, logits_at=jnp_scalar(chunk - 1)))
+                import jax.numpy as jnp
+                lowered = f.lower(
+                    params,
+                    {"tokens": jnp.zeros((1, chunk), jnp.int32),
+                     "positions": jnp.zeros((1, chunk), jnp.int32)},
+                    cache, jnp.zeros((1,), jnp.int32),
+                    jnp.zeros((1,), jnp.uint32),
+                )
+            else:
+                import jax.numpy as jnp
+                f = jax.jit(lambda p, b, c, s: model.prefill(
+                    p, b, c, logits_at=jnp_scalar(prompt_len - 1), seeds=s))
+                lowered = f.lower(
+                    params,
+                    {"tokens": jnp.zeros((1, max_seq), jnp.int32),
+                     "positions": jnp.zeros((1, max_seq), jnp.int32)},
+                    model.init_cache(1, max_seq),
+                    jnp.zeros((1,), jnp.uint32),
+                )
+            ma = lowered.compile().memory_analysis()
+            return int(ma.temp_size_in_bytes) if ma is not None else None
+        except Exception:
+            return None
+
+    def jnp_scalar(v):
+        import jax.numpy as jnp
+
+        return jnp.asarray(v, jnp.int32)
+
+    if record_path is None:
+        record_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "BENCH_prefill.json"
+        )
+    results, streams = {}, {}
+    for name, pc in (("one_shot", 0), ("chunked", chunk)):
+        model = build_model(cfg)          # fresh instance: cold jit memo
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(
+            model, params, num_slots=1, max_seq=max_seq,
+            page_size=page_size, prefill_chunk=pc,
+        )
+        def first_token_latency(uid, toks):
+            req = Request(uid=uid, prompt=toks, max_new_tokens=4)
+            t0 = time.perf_counter()
+            eng.submit(req)
+            while not req.out_tokens and eng.has_pending_work:
+                eng.step()
+            dt = time.perf_counter() - t0
+            eng.run_until_done(max_ticks=50)
+            return req, dt
+
+        req, t_cold = first_token_latency(0, prompt.copy())
+        # warm path: same length, different tokens — compiles are cached,
+        # this is the steady-state admission cost (min of 3 to cut noise).
+        # At smoke scale the chunked path is expected to be SLOWER here:
+        # it pays N small dispatches + host-side table builds where the
+        # one-shot path pays one big dispatch — the trade it makes for
+        # O(chunk) staging memory and per-chunk page claims.
+        t_warm = min(
+            first_token_latency(1 + i, warm_prompt.copy())[1]
+            for i in range(3)
+        )
+        streams[name] = list(req.out_tokens)
+        st = eng.stats()
+        results[name] = {
+            "prefill_chunk": pc,
+            "staging_bytes": staging_bytes(eng),
+            "compiled_temp_bytes": compiled_temp_bytes(eng, model, params),
+            "admission_latency_cold_s": round(t_cold, 4),
+            "admission_latency_warm_s": round(t_warm, 4),
+            "prefill_chunks_run": st["prefill_chunks_run"],
+            "chunk_signatures": len(eng._chunk_signatures),
+        }
+        r = results[name]
+        print(
+            f"prefill_compare/{name},{t_warm * 1e6:.0f},"
+            f"staging_bytes={r['staging_bytes']}"
+            f";temp_bytes={r['compiled_temp_bytes']}"
+            f";cold_s={r['admission_latency_cold_s']}"
+            f";chunks={r['prefill_chunks_run']}"
+        )
+    assert streams["one_shot"] == streams["chunked"], "stream identity broke"
+    rec = {
+        "bench": "prefill_compare",
+        "workload": {"prompt_len": prompt_len, "max_seq": max_seq,
+                     "page_size": page_size, "chunk": chunk},
+        "engines": results,
+        "streams_identical": True,
+        "staging_bytes_ratio": round(
+            results["one_shot"]["staging_bytes"]
+            / max(results["chunked"]["staging_bytes"], 1), 1
+        ),
+        "admission_latency_cold_ratio": round(
+            results["one_shot"]["admission_latency_cold_s"]
+            / max(results["chunked"]["admission_latency_cold_s"], 1e-9), 2
+        ),
+        "admission_latency_warm_ratio": round(
+            results["one_shot"]["admission_latency_warm_s"]
+            / max(results["chunked"]["admission_latency_warm_s"], 1e-9), 2
+        ),
+        "ts": time.time(),
+    }
+    with open(record_path, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(
+        f"prefill_compare/summary,0,"
+        f"staging_ratio={rec['staging_bytes_ratio']}"
+        f";warm_latency_ratio={rec['admission_latency_warm_ratio']}"
+        f";identical={rec['streams_identical']};path={record_path}"
+    )
+
+
 def bench_sharing_compare(record_path: str | None = None):
     """Prefix sharing on vs off over one bursty shared-system-prompt trace
     (smoke SSA model, packed storage + paged cache, CPU).
@@ -552,6 +737,12 @@ def main() -> None:
         help="only run the prefix-sharing on/off serving comparison "
         "(writes benchmarks/BENCH_sharing.json)",
     )
+    parser.add_argument(
+        "--compare-prefill",
+        action="store_true",
+        help="only run the chunked vs one-shot paged-prefill comparison "
+        "(writes benchmarks/BENCH_prefill.json)",
+    )
     args = parser.parse_args()
     if args.compare_storage:
         bench_storage_compare()
@@ -564,6 +755,9 @@ def main() -> None:
         return
     if args.compare_sharing:
         bench_sharing_compare()
+        return
+    if args.compare_prefill:
+        bench_prefill_compare()
         return
     bench_table2_energy()
     bench_table3_latency()

@@ -20,6 +20,12 @@ Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
           --cache-layout paged --page-size 16 --num-pages 14
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
           --cache-layout paged --share-prefix
+      PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
+          --cache-layout paged --prefill-chunk 16
+
+Paged engines prefill in page-aligned chunks written straight into pool
+pages by default (``--prefill-chunk 0`` restores the one-shot slab-staged
+prefill; streams are bit-identical either way).
 """
 import argparse
 import time
@@ -58,6 +64,10 @@ def main():
                          "preemption; see docs/serving.md)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="rows per page (paged layout; must divide max-seq)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged layout: prefill chunk size in tokens "
+                         "(page-aligned; default one page per chunk, 0 = "
+                         "one-shot slab-staged prefill)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="total pool pages incl. 2 reserved (paged layout; "
                          "default fits slots*max_seq)")
@@ -90,7 +100,8 @@ def main():
     engine = ServingEngine(model, params, num_slots=args.slots,
                            max_seq=args.max_seq, sampler=sampler,
                            page_size=args.page_size, num_pages=args.num_pages,
-                           share_prefix=args.share_prefix)
+                           share_prefix=args.share_prefix,
+                           prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
     system = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
@@ -141,6 +152,12 @@ def main():
               f"replay_steps={s['replay_steps']} migrations={s['migrations']} "
               f"max_concurrency={s['max_concurrency_seen']} "
               f"queue_wait={s['queue_wait_ticks']} ticks")
+        if s["prefill_chunk"]:
+            print(f"chunked prefill: chunk={s['prefill_chunk']} tokens, "
+                  f"{s['chunked_prefills']} admissions in "
+                  f"{s['prefill_chunks_run']} chunks "
+                  f"(skipped={s['prefill_chunks_skipped']} shared-resident, "
+                  f"pauses={s['prefill_pauses']} aborts={s['prefill_aborts']})")
         if s["share_prefix"]:
             print(f"prefix sharing: shared_page_hits={s['shared_page_hits']} "
                   f"cow_copies={s['cow_copies']} "

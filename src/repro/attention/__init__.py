@@ -20,6 +20,7 @@ from .base import (
     AttentionBackend,
     AttentionInvocation,
     available_backends,
+    bucketed_table_width,
     default_interpret,
     derive_request_seeds,
     derive_step_row_seeds,
@@ -28,6 +29,7 @@ from .base import (
     gather_pages,
     get_backend,
     is_paged_cache,
+    next_pow2,
     paged_extent,
     register_backend,
     resolve_backend,

@@ -65,6 +65,8 @@ __all__ = [
     "is_paged_cache",
     "paged_extent",
     "gather_pages",
+    "next_pow2",
+    "bucketed_table_width",
 ]
 
 # Version of the (seed, layer, t_step, position, channel) -> uniform mapping.
@@ -75,6 +77,14 @@ __all__ = [
 RNG_CONTRACT_VERSION = 2
 
 MODES = ("train", "prefill", "decode")
+
+# "decode" doubles as the **prefix-extend** mode: every registered backend
+# accepts n_q > 1 queries against an already-written KV span (the chunked
+# paged prefill writes a chunk of tokens through the block table and then
+# attends over previous pages + the chunk itself in one call).  Causality
+# inside the chunk needs no extra machinery — masks and SSA counter draws
+# key off absolute positions, so a chunk samples exactly the spikes a
+# one-shot prefill of the same tokens would.
 
 # Default tile geometry for the fused kernels.  Since RNG contract v2 the
 # counter streams are independent of tiling (position-keyed), so these are
@@ -346,6 +356,28 @@ def paged_extent(cache: dict, layer_window: Optional[int]) -> int:
     page_size = cache["pos"].shape[-1]
     span = cache["bt"].shape[-1] * page_size
     return span if layer_window is None else min(layer_window, span)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1) — the one bucketing primitive
+    behind prompt buckets, chunk buckets, and block-table widths."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def bucketed_table_width(rows: int, page_size: int, max_width: int) -> int:
+    """Pow2-bucketed block-table width covering ``rows`` written cache rows.
+
+    The single source of the growth-bucketing rule the serving engine uses
+    both for its per-tick table sync and for chunked-prefill calls: every
+    impl is extent-invariant (position-keyed RNG + position masks), so any
+    span covering the written rows decodes identically and pow2 bucketing
+    bounds recompiles by ``log2(max_width)``.
+    """
+    need = max(1, -(-max(rows, 1) // page_size))
+    return min(next_pow2(need), max_width)
 
 
 def gather_pages(pool: jax.Array, bt: jax.Array, extent: int) -> jax.Array:

@@ -175,22 +175,29 @@ def _cache_write(
 
     decode (``cache_index`` given): scalar index = one shared write offset
     (lock-step decode), (B,)-shaped = per-slot offsets (continuous-batching
-    engine); rolling-window caches wrap the offset.  prefill
+    engine); rolling-window caches wrap the offset.  Updates wider than one
+    token (``s > 1``) are the **prefix-extend** path (chunked prefill /
+    future multi-token decode): token ``j`` of the chunk lands at offset
+    ``cache_index + j`` (rolled per window layer), and tokens whose update
+    position is ``-1`` (pad rows of a bucketed chunk) are dropped so page /
+    cache rows beyond the real tokens keep their pristine fill.  prefill
     (``cache_index is None``): fill [0:s], keeping the tail when the update
     overflows the window.
 
     Paged caches (leaves ``(num_pages, page_size, ...)`` plus a block table
-    ``bt: (B, W)``) support the decode path only: the logical write offset
-    (rolled for window layers, exactly as the slab layout rolls) is routed
-    through the block table to a ``(page, row)`` pair.  Inactive engine rows
-    carry all-scratch tables, so their garbage writes land on the scratch
-    page and never touch real pages or the pristine zero page.
+    ``bt: (B, W)``) support the decode/prefix-extend paths only: each
+    logical write offset (rolled for window layers, exactly as the slab
+    layout rolls) is routed through the block table to a ``(page, row)``
+    pair.  Inactive engine rows carry all-scratch tables, so their garbage
+    writes land on the scratch page and never touch real pages or the
+    pristine zero page.
     """
     if is_paged_cache(cache):
         if cache_index is None:
             raise ValueError(
                 "paged KV caches are decode-only; the serving engine "
-                "prefills into a slab row cache and scatters it into pages"
+                "prefills through pages in chunks (prefix-extend) or "
+                "scatters a slab row cache into them"
             )
         from repro.attention import PAGE_SCRATCH, PAGE_ZERO
 
@@ -200,22 +207,41 @@ def _cache_write(
         write = jnp.broadcast_to(
             jnp.asarray(cache_index, jnp.int32), (batch,)
         )
-        r = write % extent if layer_window is not None else write
-        # stale offsets on inactive rows may exceed the table span; their
-        # entries are all scratch, so any clamped column is equivalent
+        s_upd = updates["pos"].shape[1]
+        if s_upd == 1:
+            r = write % extent if layer_window is not None else write
+            # stale offsets on inactive rows may exceed the table span;
+            # their entries are all scratch, so any clamped column is
+            # equivalent
+            col = jnp.clip(r // page_size, 0, bt.shape[1] - 1)
+            page = jnp.take_along_axis(bt, col[:, None], axis=1)[:, 0]
+            # the zero page is the immutable init fill every gather of
+            # unallocated columns depends on; a write can only resolve to
+            # it through zero-padded table entries (e.g. a replay tick for
+            # a row whose next page is granted later that tick), and such
+            # writes are re-issued after allocation — sink them to scratch
+            # instead
+            page = jnp.where(page == PAGE_ZERO, PAGE_SCRATCH, page)
+            off = r % page_size
+            new = {"bt": bt}
+            for name, upd in updates.items():
+                leaf = cache[name]
+                new[name] = leaf.at[page, off].set(upd[:, 0].astype(leaf.dtype))
+            return new
+        # prefix-extend: chunk token j writes offset cache_index + j
+        offs = write[:, None] + jnp.arange(s_upd, dtype=jnp.int32)[None, :]
+        r = offs % extent if layer_window is not None else offs
         col = jnp.clip(r // page_size, 0, bt.shape[1] - 1)
-        page = jnp.take_along_axis(bt, col[:, None], axis=1)[:, 0]
-        # the zero page is the immutable init fill every gather of
-        # unallocated columns depends on; a write can only resolve to it
-        # through zero-padded table entries (e.g. a replay tick for a row
-        # whose next page is granted later that tick), and such writes are
-        # re-issued after allocation — sink them to scratch instead
+        page = jnp.take_along_axis(bt, col, axis=1)          # (B, s)
         page = jnp.where(page == PAGE_ZERO, PAGE_SCRATCH, page)
+        # bucketed chunks pad with position -1: sink those writes to the
+        # scratch page so real page rows beyond the chunk stay pristine
+        page = jnp.where(updates["pos"] < 0, PAGE_SCRATCH, page)
         off = r % page_size
         new = {"bt": bt}
         for name, upd in updates.items():
             leaf = cache[name]
-            new[name] = leaf.at[page, off].set(upd[:, 0].astype(leaf.dtype))
+            new[name] = leaf.at[page, off].set(upd.astype(leaf.dtype))
         return new
 
     s_cache = cache["pos"].shape[1]
@@ -224,6 +250,23 @@ def _cache_write(
         write = cache_index % s_cache if layer_window is not None else cache_index
         per_row = jnp.ndim(write) == 1
         rows = jnp.arange(batch)
+        s_upd = updates["pos"].shape[1]
+        if s_upd > 1:
+            # prefix-extend on a slab cache: per-token offsets, pad tokens
+            # (position -1) dropped via an out-of-range scatter index
+            offs = (
+                jnp.broadcast_to(jnp.asarray(write, jnp.int32), (batch,))[:, None]
+                + jnp.arange(s_upd, dtype=jnp.int32)[None, :]
+            )
+            if layer_window is not None:
+                offs = offs % s_cache
+            offs = jnp.where(updates["pos"] < 0, s_cache, offs)
+            for name, upd in updates.items():
+                leaf = cache[name]
+                new[name] = leaf.at[rows[:, None], offs].set(
+                    upd.astype(leaf.dtype), mode="drop"
+                )
+            return new
         for name, upd in updates.items():
             leaf = cache[name]
             if per_row:

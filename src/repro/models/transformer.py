@@ -263,11 +263,25 @@ class DecoderLM:
         return self.logits(params, last), new_cache
 
     def decode_step(self, params, batch, cache, cache_index, rng=None,
-                    seeds=None):
+                    seeds=None, logits_at=None):
+        """Advance the cache by the batch's tokens; returns (logits, cache).
+
+        With one token per row this is the classic decode tick.  Wider
+        batches are the **prefix-extend** path (chunked prefill): token
+        ``j`` of each row writes cache offset ``cache_index + j`` and
+        attends over the previously-written cache plus the chunk itself —
+        causality falls out of the absolute positions every backend masks
+        by.  ``logits_at`` (scalar, may be traced) selects a single
+        sequence index whose logits to return (the chunked-prefill engine
+        reads the last *real* token of a padded chunk); default: logits for
+        every position.
+        """
         hidden, new_cache, _ = self.forward(
             params, batch, cache=cache, cache_index=cache_index, rng=rng,
             seeds=seeds,
         )
+        if logits_at is not None:
+            hidden = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
         return self.logits(params, hidden), new_cache
 
     # ------------------------------------------------------------------

@@ -30,6 +30,23 @@ are.  That buys the scheduler three freedoms this module implements:
     pages; a page is copied the first time an owner writes into it
     (sliding-window wrap / divergence), so shared pages stay pristine.
 
+Chunked paged prefill (``prefill_chunk=``, paged layout): instead of
+staging a whole prompt in a slab-row cache and scattering it into pages,
+the engine splits each prompt into page-aligned chunks and prefills
+chunk-by-chunk **directly into pool pages** through block-table indirection
+(the backends' prefix-extend path: a chunk attends over the previously
+written pages plus itself).  Because RNG contract v2 keys every SSA draw by
+(request seed, layer, head, t_step, absolute position), a chunked prefill
+samples exactly the spikes the one-shot prefill samples — streams stay
+bit-identical — while peak prefill memory drops from O(prompt bucket) to
+O(chunk) and pages are claimed per chunk: admission no longer waits for a
+full-prompt page grant, and a request mid-prefill pauses/resumes at chunk
+boundaries (or is rolled back entirely when running requests need its
+pages).  Prompts longer than the smallest sliding-window extent (or than
+``max_seq``) keep the one-shot slab-staged fallback, exactly as they
+already bypass pow2 bucketing.  With ``share_prefix=True``, chunks fully
+covered by already-resident shared prefix pages are skipped outright.
+
 Cache layouts (``AttentionConfig.cache_layout``):
 
 ``slab`` — each row owns a contiguous fixed-size cache region (the cache is
@@ -115,13 +132,6 @@ def _default_page_size(max_seq: int) -> int:
     return ps
 
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
-
-
 def _scrub_pages(cache: list, pages: jax.Array) -> list:
     """Reset the given page ids to the pristine zero-page fill.
 
@@ -197,12 +207,45 @@ def _copy_page(cache: list, src, dst) -> list:
     return out
 
 
+# Pool-surgery helpers are pure functions of (cache, operands): jit them
+# once at module scope so every engine instance shares the compile cache.
+_scrub_jit = jax.jit(_scrub_pages)
+_scatter_jit = jax.jit(_scatter_pages)
+_copy_jit = jax.jit(_copy_page)
+
+
+def _model_jit(model, key: str, make):
+    """Memoise jitted model entry points on the model instance itself, so
+    engines over the same model (tests build many) share compiled code
+    instead of re-tracing per engine."""
+    cache = model.__dict__.setdefault("_serving_jit_cache", {})
+    if key not in cache:
+        cache[key] = jax.jit(make())
+    return cache[key]
+
+
+@dataclass
+class _ChunkedPrefill:
+    """An admission mid-chunked-prefill: the head-of-line request, the row
+    reserved for it, and the pages claimed so far.  ``done`` is the chunk
+    boundary reached; pages beyond it hold nothing yet."""
+
+    req: Request
+    slot: int
+    pages: list                    # shared prefix pages + fresh, in order
+    keys: list                     # full-prompt-page keys (registration)
+    shared_rows: int               # rows covered by claimed shared pages
+    done: int = 0                  # tokens prefilled so far
+    logits: Optional[jax.Array] = None
+
+
 class ServingEngine:
     def __init__(self, model, params, *, num_slots: int, max_seq: int,
                  rng_seed: int = 0, sampler: Optional[Sampler] = None,
                  num_pages: Optional[int] = None,
                  page_size: Optional[int] = None,
-                 share_prefix: bool = False):
+                 share_prefix: bool = False,
+                 prefill_chunk: Optional[int] = None):
         self.model = model
         self.params = params
         self.b = num_slots
@@ -226,20 +269,21 @@ class ServingEngine:
 
         # models outside the decoder-LM family predate the seeds kwarg;
         # they keep their rng-derived streams (no serving identity contract)
-        self._seeded = (
-            "seeds" in inspect.signature(model.decode_step).parameters
-        )
+        decode_params = inspect.signature(model.decode_step).parameters
+        self._seeded = "seeds" in decode_params
         if self._seeded:
-            self._decode = jax.jit(
-                lambda p, batch, cache, idx, seeds: model.decode_step(
+            self._decode = _model_jit(
+                model, "decode_seeded",
+                lambda: lambda p, batch, cache, idx, seeds: model.decode_step(
                     p, batch, cache, idx, seeds=seeds
-                )
+                ),
             )
         else:
-            self._decode = jax.jit(
-                lambda p, batch, cache, idx: model.decode_step(
+            self._decode = _model_jit(
+                model, "decode",
+                lambda: lambda p, batch, cache, idx: model.decode_step(
                     p, batch, cache, idx
-                )
+                ),
             )
 
         a = getattr(getattr(model, "cfg", None), "attention", None)
@@ -277,9 +321,9 @@ class ServingEngine:
                     f"needed for max_seq={max_seq})"
                 )
             self.tables = BlockTables(num_slots, self.pages_per_seq)
-            self._scrub = jax.jit(_scrub_pages)
-            self._scatter = jax.jit(_scatter_pages)
-            self._copy = jax.jit(_copy_page)
+            self._scrub = _scrub_jit
+            self._scatter = _scatter_jit
+            self._copy = _copy_jit
             self.cache = model.init_cache(
                 num_slots, max_seq, layout="paged",
                 num_pages=num_pages, page_size=ps,
@@ -309,10 +353,57 @@ class ServingEngine:
             self._page_key: dict[int, bytes] = {}
             self.shared_page_hits = 0
             self.cow_copies = 0
+            # ---- chunked prefill (prefix-extend straight into pages) ----
+            # default = one page per chunk; prefill_chunk=0 restores the
+            # one-shot slab-staged prefill.  Needs the model to thread
+            # per-request seeds AND expose decode_step(logits_at=) (the
+            # chunk call is a multi-token decode whose last real token's
+            # logits seed sampling).
+            can_chunk = self._seeded and "logits_at" in decode_params
+            if prefill_chunk is None:
+                self.prefill_chunk = ps if can_chunk else 0
+            else:
+                pc = int(prefill_chunk)
+                if pc < 0:
+                    raise ValueError(f"prefill_chunk must be >= 0, got {pc}")
+                if pc and not can_chunk:
+                    raise ValueError(
+                        "prefill_chunk requires a model whose decode_step "
+                        "accepts seeds= and logits_at= (the chunked "
+                        "prefix-extend call); this model does not"
+                    )
+                if pc and pc % ps:
+                    raise ValueError(
+                        f"prefill_chunk={pc} must be page-aligned "
+                        f"(a multiple of page_size={ps})"
+                    )
+                self.prefill_chunk = pc
+            self._chunk = None
+            if self.prefill_chunk:
+                self._chunk = _model_jit(
+                    model, "chunk",
+                    lambda: lambda p, batch, cache, idx, seeds, last:
+                        model.decode_step(
+                            p, batch, cache, idx, seeds=seeds, logits_at=last
+                        ),
+                )
+            self._inflight: Optional[_ChunkedPrefill] = None
+            self._chunk_signatures: set[tuple[int, int]] = set()
+            self.chunked_prefills = 0
+            self.prefill_chunks_run = 0
+            self.prefill_chunks_skipped = 0
+            self.prefill_pauses = 0
+            self.prefill_aborts = 0
         else:
             if num_pages is not None or page_size is not None:
                 raise ValueError(
                     "num_pages/page_size require the paged cache layout "
+                    "(AttentionConfig.cache_layout='paged'); this model is "
+                    f"configured for layout={self.layout!r}"
+                )
+            if prefill_chunk is not None:
+                raise ValueError(
+                    "prefill_chunk requires the paged cache layout "
                     "(AttentionConfig.cache_layout='paged'); this model is "
                     f"configured for layout={self.layout!r}"
                 )
@@ -327,16 +418,18 @@ class ServingEngine:
         self._prefill_seeded = "seeds" in prefill_params
         if self._bucketed:
             if self._prefill_seeded:
-                self._prefill = jax.jit(
-                    lambda p, batch, cache, last, seeds: model.prefill(
+                self._prefill = _model_jit(
+                    model, "prefill_seeded",
+                    lambda: lambda p, batch, cache, last, seeds: model.prefill(
                         p, batch, cache, logits_at=last, seeds=seeds
-                    )
+                    ),
                 )
             else:
-                self._prefill = jax.jit(
-                    lambda p, batch, cache, last: model.prefill(
+                self._prefill = _model_jit(
+                    model, "prefill",
+                    lambda: lambda p, batch, cache, last: model.prefill(
                         p, batch, cache, logits_at=last
-                    )
+                    ),
                 )
         else:
             self._prefill = None
@@ -366,7 +459,10 @@ class ServingEngine:
         self.queue.append(req)
 
     def _free_slots(self):
-        return [i for i in range(self.b) if i not in self.active]
+        busy = set(self.active)
+        if self.paged and self._inflight is not None:
+            busy.add(self._inflight.slot)
+        return [i for i in range(self.b) if i not in busy]
 
     def _bucket(self, p: int) -> int:
         """Next power of two >= p, clamped to the slot's cache size.
@@ -374,10 +470,9 @@ class ServingEngine:
         ``_admit`` additionally refuses buckets wider than the smallest
         per-layer cache extent (sliding-window layers), falling back to
         exact-length prefill for those prompts."""
-        b = 1
-        while b < p:
-            b <<= 1
-        return min(b, self.max_seq)
+        from repro.attention import next_pow2
+
+        return min(next_pow2(p), self.max_seq)
 
     def _reset_pad_rows(self, row_cache, p: int):
         """Restore cache rows [p:] of a freshly prefilled single-row cache
@@ -501,10 +596,10 @@ class ServingEngine:
             self._prefix_map[key] = page
             self._page_key[page] = key
 
-    def _alloc_prompt_pages(self, req: Request, rows: int):
-        """Claim shared prefix pages + alloc the rest for ``rows`` cache
-        rows; returns ``(pages, keys)`` — keys for the later registration —
-        or None (taking nothing) if the pool is short."""
+    def _resident_prefix(self, req: Request):
+        """(shared pages already resident for this request's prompt prefix,
+        their keys) — the longest prefix of full prompt pages present in
+        the map; claims nothing."""
         keys = self._prefix_keys(req) if self._sharable(req) else []
         shared = []
         for key in keys:
@@ -512,20 +607,37 @@ class ServingEngine:
             if page is None:
                 break
             shared.append(page)
+        return shared, keys
+
+    def _claim_shared(self, shared: list[int]):
+        for page in shared:
+            self.pool.incref(page)
+            self.shared_page_hits += 1
+
+    def _alloc_prompt_pages(self, req: Request, rows: int):
+        """Claim shared prefix pages + alloc the rest for ``rows`` cache
+        rows; returns ``(pages, keys, num_shared)`` — keys for the later
+        registration — or None (taking nothing) if the pool is short."""
+        shared, keys = self._resident_prefix(req)
         fresh = self.pool.alloc(pages_for_rows(rows, self.pool.page_size)
                                 - len(shared))
         if fresh is None:
             return None
-        for page in shared:
-            self.pool.incref(page)
-            self.shared_page_hits += 1
-        return shared + fresh, keys
+        self._claim_shared(shared)
+        return shared + fresh, keys, len(shared)
 
     def _admit(self):
-        """Fill free rows FCFS: per-request prefill scattered into the
-        batch cache (slab) or into freshly allocated pages (paged) — with
-        ``share_prefix``, prompt-prefix pages already resident for the same
-        (seed, tokens) are mapped instead of re-allocated."""
+        """Fill free rows FCFS: per-request prefill written chunk-by-chunk
+        straight into pages (paged + chunked), scattered from a slab-row
+        staging cache (paged fallback), or scattered into the batch cache
+        (slab) — with ``share_prefix``, prompt-prefix pages already
+        resident for the same (seed, tokens) are mapped instead of
+        re-allocated."""
+        if self.paged and self._inflight is not None:
+            # continue the head-of-line admission already mid-prefill; if
+            # it pauses again (pool dry) nothing later may admit (FCFS)
+            if not self._advance_inflight():
+                return
         for slot in self._free_slots():
             if not self.queue:
                 break
@@ -536,12 +648,17 @@ class ServingEngine:
                 # longer than max_seq tail-keep into the slab row cache, so
                 # their footprint clamps to the table span
                 req = self.queue[0]
+                if self._chunkable(req):
+                    self._begin_chunked(req, slot)
+                    if not self._advance_inflight():
+                        return
+                    continue
                 alloc = self._alloc_prompt_pages(
                     req, min(len(req.prompt), self.max_seq)
                 )
                 if alloc is None:
                     break
-                pages, keys = alloc
+                pages, keys, _ = alloc
                 self.queue.popleft()
                 logits, row_cache = self._prefill_row(req)
                 self.tables.assign(slot, pages)
@@ -556,6 +673,147 @@ class ServingEngine:
                     row_cache,
                 )
             self._start(slot, req, logits)
+
+    # ------------------------------------------------------------------
+    # chunked prefill: prefix-extend chunks written directly into pages
+    # ------------------------------------------------------------------
+    def _chunkable(self, req: Request) -> bool:
+        """Chunked prefill serves every prompt the pow2-bucketed one-shot
+        path serves: prompts longer than the smallest sliding-window cache
+        extent (or than ``max_seq``) would tail-keep in the slab staging
+        row — a layout chunk writes cannot reproduce incrementally — so
+        they keep the one-shot fallback."""
+        return (
+            self.paged
+            and self._chunk is not None
+            and 0 < len(req.prompt) <= self._min_seq_extent
+        )
+
+    def _chunk_bucket(self, s: int) -> int:
+        """Pow2-bucket a partial chunk's length (clamped to the chunk size)
+        so the compiled chunk signatures stay O(log prefill_chunk)."""
+        from repro.attention import next_pow2
+
+        return min(next_pow2(s), self.prefill_chunk)
+
+    def _run_chunk(self, req: Request, c0: int, c1: int, pages: list[int],
+                   *, want_logits: bool):
+        """One prefix-extend call: prefill prompt[c0:c1] writing K/V
+        directly into ``pages`` through a single-row block table, attending
+        over the previously written pages + the chunk itself.  Pad tokens
+        of a bucketed partial chunk carry position -1: they neither draw
+        nor write (their page writes sink to scratch), so page rows beyond
+        the chunk stay pristine."""
+        from repro.attention import PAGE_ZERO, bucketed_table_width
+
+        s = c1 - c0
+        sb = self._chunk_bucket(s)
+        ps = self.pool.page_size
+        tokens = np.zeros((1, sb), np.int32)
+        tokens[0, :s] = req.prompt[c0:c1]
+        positions = np.full((1, sb), -1, np.int32)
+        positions[0, :s] = np.arange(c0, c1)
+        width = bucketed_table_width(c1, ps, self.pages_per_seq)
+        bt = np.full((1, width), PAGE_ZERO, np.int32)
+        n = min(len(pages), width)
+        bt[0, :n] = pages[:n]
+        arr = _dev(bt)
+        cache_view = []
+        for slot_d in self.cache:
+            d = dict(slot_d)
+            d["bt"] = jnp.broadcast_to(
+                arr[None], (slot_d["pos"].shape[0],) + arr.shape
+            )
+            cache_view.append(d)
+        self._chunk_signatures.add((sb, width))
+        logits, self.cache = self._chunk(
+            self.params,
+            {"tokens": _dev(tokens), "positions": _dev(positions)},
+            cache_view,
+            _dev(np.full((1,), c0, np.int32)),
+            _dev(np.asarray([req.seed], np.uint32)),
+            jnp.asarray(s - 1, jnp.int32),
+        )
+        self.prefill_chunks_run += 1
+        return logits if want_logits else None
+
+    def _begin_chunked(self, req: Request, slot: int):
+        """Pop the head-of-line request and open its chunked admission:
+        claim already-resident shared prefix pages now (they must survive
+        while we prefill), fresh pages come per chunk."""
+        self.queue.popleft()
+        shared, keys = self._resident_prefix(req)
+        self._claim_shared(shared)
+        self._inflight = _ChunkedPrefill(
+            req, slot, list(shared), keys,
+            len(shared) * self.pool.page_size,
+        )
+        self.chunked_prefills += 1
+
+    def _advance_inflight(self) -> bool:
+        """Run the in-flight admission's remaining chunks, claiming pages
+        per chunk.  Pauses (returns False) when the pool is dry — the
+        request resumes at the same chunk boundary once pages free up.  On
+        completion the row is seated and the first token sampled; returns
+        True when no admission is left in flight."""
+        inf = self._inflight
+        req = inf.req
+        p = len(req.prompt)
+        ps = self.pool.page_size
+        while inf.done < p:
+            c1 = min(inf.done + self.prefill_chunk, p)
+            need = pages_for_rows(c1, ps)
+            if need > len(inf.pages):
+                fresh = self.pool.alloc(need - len(inf.pages))
+                if fresh is None:
+                    self.prefill_pauses += 1
+                    return False
+                inf.pages.extend(fresh)
+            if c1 <= inf.shared_rows and c1 < p:
+                # chunk fully covered by shared prefix pages: the K/V is
+                # already resident (content-addressed under RNG contract
+                # v2), and only the final chunk must run for its logits
+                self.prefill_chunks_skipped += 1
+            else:
+                logits = self._run_chunk(
+                    req, inf.done, c1, inf.pages, want_logits=c1 == p
+                )
+                if c1 == p:
+                    inf.logits = logits
+            inf.done = c1
+        self._inflight = None
+        self.tables.assign(inf.slot, inf.pages)
+        self._register_prefix_pages(inf.pages, inf.keys)
+        self._start(inf.slot, req, inf.logits)
+        return True
+
+    def _cancel_inflight(self):
+        """Roll an in-flight admission back (running requests outrank it):
+        release every claimed page and requeue the request at the head —
+        it restarts from chunk 0, which cannot change its stream (no token
+        was sampled yet)."""
+        inf = self._inflight
+        self._inflight = None
+        self.queue.appendleft(inf.req)
+        self.prefill_aborts += 1
+        if inf.pages:
+            self._retire_dead(self.pool.free(inf.pages))
+
+    def _chunked_refill(self, req: Request, pages: list[int],
+                        shared_rows: int):
+        """Resume-path re-prefill straight into preallocated pages: same
+        chunk loop as admission, logits discarded (the first token was
+        sampled at the original admission), shared-resident chunks skipped
+        wholesale."""
+        p = len(req.prompt)
+        c0 = 0
+        while c0 < p:
+            c1 = min(c0 + self.prefill_chunk, p)
+            if c1 <= shared_rows:
+                self.prefill_chunks_skipped += 1
+            else:
+                self._run_chunk(req, c0, c1, pages, want_logits=False)
+            c0 = c1
 
     # ------------------------------------------------------------------
     # paged scheduling: scatter, growth, preemption, resume-by-replay, CoW
@@ -608,12 +866,17 @@ class ServingEngine:
         self.preemptions += 1
 
     def _alloc_one_or_preempt(self, exclude: int) -> Optional[list[int]]:
-        """One fresh page, preempting victims (newest admission first) as
-        needed; None only if no victim remains."""
+        """One fresh page, rolling back the in-flight chunked admission
+        first (it has sampled nothing yet, so it is the cheapest victim),
+        then preempting active victims (newest admission first); None only
+        if no victim remains."""
         while True:
             page = self.pool.alloc(1)
             if page is not None:
                 return page
+            if self._inflight is not None:
+                self._cancel_inflight()
+                continue
             victim = self._pick_victim(exclude=exclude)
             if victim is None:
                 return None
@@ -706,11 +969,13 @@ class ServingEngine:
         position — extent-invariant, so the decode computation never
         materialises a max_seq-extent tensor (recompiles are bounded by
         log2(pages_per_seq))."""
+        from repro.attention import bucketed_table_width
+
         ps = self.pool.page_size
-        need = 1
+        rows = 1
         for slot in self.active:
-            need = max(need, int(self.slot_pos[slot]) // ps + 1)
-        w = min(self.pages_per_seq, _next_pow2(need))
+            rows = max(rows, int(self.slot_pos[slot]) + 1)
+        w = bucketed_table_width(rows, ps, self.pages_per_seq)
         arr = _dev(self.tables.as_array(w))
         for slot_d in self.cache:
             steps = slot_d["pos"].shape[0]
@@ -790,13 +1055,21 @@ class ServingEngine:
             alloc = self._alloc_prompt_pages(req, rows)
             if alloc is None:
                 break  # oldest first: later arrivals keep waiting too
-            pages, keys = alloc
+            pages, keys, n_shared = alloc
             self._preempted.remove(req)
             slot = free.pop(0)
-            logits, row_cache = self._prefill_row(req)
-            del logits  # first token was sampled at original admission
             self.tables.assign(slot, pages)
-            self._scatter_row(slot, row_cache)
+            if self._chunkable(req):
+                # chunked re-prefill straight into the granted pages (the
+                # growth-region pages hold the pristine fill until replay
+                # rewrites them, exactly like the scattered slab rows did)
+                self._chunked_refill(
+                    req, pages, n_shared * self.pool.page_size
+                )
+            else:
+                logits, row_cache = self._prefill_row(req)
+                del logits  # first token sampled at original admission
+                self._scatter_row(slot, row_cache)
             self._register_prefix_pages(pages, keys)
             self.active[slot] = req
             self.slot_pos[slot] = len(req.prompt)
@@ -814,7 +1087,7 @@ class ServingEngine:
         scheduler internals)."""
         return bool(
             self.queue or self.active
-            or (self.paged and self._preempted)
+            or (self.paged and (self._preempted or self._inflight))
         )
 
     @property
@@ -928,6 +1201,13 @@ class ServingEngine:
             shared_pages_now=self.pool.num_shared,
             shared_page_hits=self.shared_page_hits,
             cow_copies=self.cow_copies,
+            prefill_chunk=self.prefill_chunk,
+            chunked_prefills=self.chunked_prefills,
+            prefill_chunks_run=self.prefill_chunks_run,
+            prefill_chunks_skipped=self.prefill_chunks_skipped,
+            prefill_pauses=self.prefill_pauses,
+            prefill_aborts=self.prefill_aborts,
+            prefill_in_flight=self._inflight is not None,
         )
         return out
 

@@ -22,9 +22,12 @@ makes every cache leaf a pool of fixed-size pages shared by all requests:
 
 Page ids are shared across layers and pattern slots: each slot's pool leaf
 is separate storage, so page ``p`` of a sliding-window slot and page ``p``
-of a global slot never collide.  The scheduler policy (admission, growth,
-preemption, resume-by-replay, prefix sharing / CoW) lives in
-:class:`~repro.serving.engine.ServingEngine`.
+of a global slot never collide.  The scheduler policy (admission, chunked
+prefill, growth, preemption, resume-by-replay, prefix sharing / CoW) lives
+in :class:`~repro.serving.engine.ServingEngine`; both classes expose
+refcount/reference introspection (:meth:`PagePool.refcounts`,
+:meth:`BlockTables.reference_counts`) so invariant checks — the scheduler
+property tests fuzz them after every engine step — never poke internals.
 """
 from __future__ import annotations
 
@@ -99,6 +102,16 @@ class PagePool:
     def ref_count(self, page: int) -> int:
         return self._ref.get(page, 0)
 
+    def refcounts(self) -> dict[int, int]:
+        """Snapshot of ``{page id: owner count}`` for every allocated page
+        (invariant checks compare this against the block-table references)."""
+        return dict(self._ref)
+
+    def free_pages(self) -> frozenset[int]:
+        """Snapshot of the free list (must stay disjoint from every live
+        reference)."""
+        return frozenset(self._free)
+
     def free(self, pages) -> list[int]:
         """Drop one owner per page; returns the pages whose refcount hit
         zero (actually recycled — the caller scrubs exactly these)."""
@@ -145,6 +158,16 @@ class BlockTables:
 
     def release(self, row: int) -> list[int]:
         return self.pages.pop(row, [])
+
+    def reference_counts(self) -> collections.Counter:
+        """``Counter`` of page ids over every row's table — with the
+        engine's in-flight chunked-admission pages added on top, this must
+        equal :meth:`PagePool.refcounts` exactly (the scheduler property
+        tests assert it after every step)."""
+        refs: collections.Counter = collections.Counter()
+        for pgs in self.pages.values():
+            refs.update(pgs)
+        return refs
 
     def as_array(self, width: Optional[int] = None) -> np.ndarray:
         """Combined ``(num_rows, width)`` int32 gather/write table.

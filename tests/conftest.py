@@ -4,8 +4,62 @@
 pytest tests and still run the latter when hypothesis isn't installed (the
 container only bakes in the jax toolchain): property tests skip individually
 instead of the whole module disappearing behind importorskip.
+
+`golden` is the loader for the checked-in token-stream fixtures under
+``tests/golden/``: regression anchors that pin RNG contract v2 (and the
+whole serving numerics stack) to concrete streams, instead of only
+cross-checking implementations against each other.  Regenerate with
+``pytest tests/test_golden_streams.py --regen-golden`` after an
+*intentional* stream change (and say so in the commit).
 """
+import json
+import pathlib
+
 import pytest
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden",
+        action="store_true",
+        default=False,
+        help="rewrite the tests/golden/ stream fixtures from the current "
+        "build instead of asserting against them",
+    )
+
+
+class GoldenStore:
+    """Assert-or-rewrite access to one JSON fixture per matrix entry."""
+
+    def __init__(self, regen: bool):
+        self.regen = regen
+
+    def check(self, name: str, payload: dict):
+        path = GOLDEN_DIR / f"{name}.json"
+        if self.regen:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(
+                json.dumps(payload, indent=2, sort_keys=True) + "\n"
+            )
+            return
+        assert path.exists(), (
+            f"missing golden fixture {path.name}; generate it with "
+            "`pytest tests/test_golden_streams.py --regen-golden`"
+        )
+        stored = json.loads(path.read_text())
+        assert payload == stored, (
+            f"golden stream mismatch for {name}: if the change is an "
+            "intentional (versioned) stream break, regenerate with "
+            "--regen-golden; otherwise a refactor broke bit-identity.\n"
+            f"expected: {stored}\n     got: {payload}"
+        )
+
+
+@pytest.fixture
+def golden(request) -> GoldenStore:
+    return GoldenStore(regen=request.config.getoption("--regen-golden"))
 
 
 @pytest.fixture

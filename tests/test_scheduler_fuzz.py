@@ -1,0 +1,230 @@
+"""Property tests for the paged serving scheduler.
+
+Randomised (and fixed, for hypothesis-less environments) sequences of
+admit/tick/preempt/resume/finish over deliberately tight pools — with and
+without prefix sharing, with and without chunked prefill — asserting the
+pool/table invariants after **every** engine step:
+
+  * refcount totals == block-table references (incl. the in-flight chunked
+    admission's claimed pages);
+  * free + owned == usable pages, free list disjoint from every table, and
+    reserved ids never allocated;
+  * no page mapped by two owners unless prefix sharing is on and the page
+    is still prefix-registered;
+  * ``stats()`` counters are monotone over the run;
+  * the pool drains to empty (no leaked pages or registrations).
+
+The allocator itself gets its own op-sequence fuzz below.
+"""
+import dataclasses
+import functools
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.attention import NUM_RESERVED_PAGES
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import PagePool, Request, ServingEngine
+
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
+
+_MONOTONE = (
+    "ticks", "queue_wait_ticks", "preemptions", "resumes", "replay_steps",
+    "migrations", "shared_page_hits", "cow_copies", "chunked_prefills",
+    "prefill_chunks_run", "prefill_chunks_skipped", "prefill_pauses",
+    "prefill_aborts", "peak_pages_used", "max_concurrency_seen",
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _model_and_params():
+    cfg = get_smoke_config("codeqwen15_7b")
+    cfg = dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(
+            cfg.attention, impl="ssa", spike_storage="packed",
+            cache_layout="paged",
+        ),
+    )
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _page_references(eng) -> Counter:
+    """Every reference the scheduler holds to an allocated page: block-table
+    entries of seated rows plus the in-flight admission's claimed pages."""
+    refs = eng.tables.reference_counts()
+    if eng._inflight is not None:
+        refs.update(eng._inflight.pages)
+    return refs
+
+
+def _check_invariants(eng, prev_stats):
+    pool = eng.pool
+    refs = _page_references(eng)
+    refcounts = pool.refcounts()
+    # reserved ids are never handed out or referenced
+    assert all(p >= NUM_RESERVED_PAGES for p in refs)
+    # refcount totals == table references, page by page
+    assert dict(refs) == refcounts, (refs, refcounts)
+    # conservation: free + owned == usable
+    assert pool.num_free + len(refcounts) == pool.num_usable
+    # the free list never aliases a live reference
+    assert pool.free_pages().isdisjoint(refs)
+    # a page with two owners implies sharing is on and it is still
+    # prefix-registered (CoW retires registrations before divergence)
+    for page, count in refs.items():
+        if count > 1:
+            assert eng.share_prefix and page in eng._page_key, (page, count)
+    # registration maps are mutually consistent and point at live pages
+    for key, page in eng._prefix_map.items():
+        assert eng._page_key.get(page) == key
+        assert pool.ref_count(page) >= 1
+    # seated rows always own a table entry; idle rows never do
+    for slot in eng.active:
+        assert slot in eng.tables.pages
+    assert set(eng.tables.pages) <= set(eng.active)
+    # counters only move forward
+    stats = eng.stats()
+    for key in _MONOTONE:
+        assert stats[key] >= prev_stats.get(key, 0), key
+    return stats
+
+
+def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
+                  share=False, chunked=True, prefix_len=0, rng_seed=0):
+    """Drive one schedule through a tight paged engine, checking the full
+    invariant set after every step; returns the drained engine."""
+    cfg, model, params = _model_and_params()
+    rng = np.random.default_rng(rng_seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    reqs = []
+    for uid, (l, mn) in enumerate(zip(lengths, max_new)):
+        tail = rng.integers(0, cfg.vocab_size, int(l)).astype(np.int32)
+        reqs.append(Request(
+            uid=uid, prompt=np.concatenate([prefix, tail])[:28],
+            max_new_tokens=int(mn),
+        ))
+    order = np.argsort(arrivals, kind="stable")
+    eng = ServingEngine(
+        model, params, num_slots=slots, max_seq=32, page_size=8,
+        num_pages=NUM_RESERVED_PAGES + usable,
+        share_prefix=share, prefill_chunk=8 if chunked else 0,
+    )
+    done, tick, i, stats = [], 0, 0, {}
+    while i < len(order) or eng.has_pending_work:
+        while i < len(order) and arrivals[order[i]] <= tick:
+            eng.submit(reqs[order[i]])
+            i += 1
+        done.extend(eng.step())
+        stats = _check_invariants(eng, stats)
+        tick += 1
+        assert tick < 500, "engine failed to drain"
+    # full drain: every request finished with output, nothing leaked
+    assert len(done) == len(reqs) and all(r.done for r in reqs)
+    assert all(len(r.out_tokens) >= 1 for r in reqs)
+    assert eng.pool.num_used == 0
+    assert not eng.tables.pages and eng._inflight is None
+    assert not eng._prefix_map and not eng._page_key
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# fixed schedules: the invariant harness runs even without hypothesis
+# ---------------------------------------------------------------------------
+def test_invariants_under_prefill_pressure_fixed():
+    """Long chunked admission squeezed by a growing active request: pauses
+    and rollbacks must keep the books balanced."""
+    eng = _run_scenario(lengths=[8, 28], arrivals=[0, 1], max_new=[20, 3],
+                        usable=5, slots=2)
+    assert eng.prefill_pauses >= 1
+
+
+def test_invariants_with_sharing_and_preemption_fixed():
+    """Three sharers of one 16-token prompt over a pool too small for their
+    combined growth: sharing + preemption + resume, invariants after every
+    tick."""
+    eng = _run_scenario(lengths=[0, 0, 0], arrivals=[0, 0, 2],
+                        max_new=[14, 14, 14], usable=6, slots=3,
+                        share=True, prefix_len=16, rng_seed=3)
+    assert eng.shared_page_hits >= 2
+    assert eng.preemptions >= 1
+
+
+def test_invariants_unchunked_fixed():
+    """The one-shot admission path stays invariant-clean too."""
+    eng = _run_scenario(lengths=[4, 5, 6], arrivals=[0, 0, 0],
+                        max_new=[14, 14, 14], usable=6, slots=3,
+                        chunked=False, rng_seed=5)
+    assert eng.preemptions >= 1 and eng.resumes >= 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz over random schedules
+# ---------------------------------------------------------------------------
+@given(data=st.data())
+@settings(max_examples=6, deadline=None, derandomize=True)
+def test_scheduler_invariants_hold_under_random_schedules(data):
+    n_req = data.draw(st.integers(2, 5), label="n_req")
+    _run_scenario(
+        lengths=[data.draw(st.integers(2, 18), label=f"len{i}")
+                 for i in range(n_req)],
+        arrivals=[data.draw(st.integers(0, 6), label=f"tick{i}")
+                  for i in range(n_req)],
+        max_new=[data.draw(st.integers(1, 10), label=f"new{i}")
+                 for i in range(n_req)],
+        usable=data.draw(st.integers(4, 9), label="usable"),
+        slots=data.draw(st.integers(1, 3), label="slots"),
+        share=data.draw(st.booleans(), label="share"),
+        chunked=data.draw(st.booleans(), label="chunked"),
+        prefix_len=data.draw(st.sampled_from([0, 8]), label="prefix"),
+        rng_seed=data.draw(st.integers(0, 2**16), label="rng"),
+    )
+
+
+@given(data=st.data())
+@settings(max_examples=100, deadline=None, derandomize=True)
+def test_page_pool_conservation_under_random_ops(data):
+    """Allocator-level fuzz: any interleaving of alloc / incref / free
+    conserves pages, keeps refcounts exact, and recycles ids exactly when
+    their last owner leaves."""
+    pool = PagePool(
+        num_pages=NUM_RESERVED_PAGES + data.draw(st.integers(1, 12)),
+        page_size=8,
+    )
+    shadow: Counter = Counter()          # page -> expected refcount
+    for _ in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.sampled_from(["alloc", "incref", "free"]))
+        if op == "alloc":
+            n = data.draw(st.integers(0, 4))
+            got = pool.alloc(n)
+            if got is None:
+                # all-or-nothing: only refused when the free list is short
+                assert n > pool.num_usable - len(shadow)
+            else:
+                assert len(got) == n and not (set(got) & set(shadow))
+                for p in got:
+                    shadow[p] = 1
+        elif op == "incref" and shadow:
+            p = data.draw(st.sampled_from(sorted(shadow)))
+            pool.incref(p)
+            shadow[p] += 1
+        elif op == "free" and shadow:
+            p = data.draw(st.sampled_from(sorted(shadow)))
+            dead = pool.free([p])
+            shadow[p] -= 1
+            if shadow[p] == 0:
+                del shadow[p]
+                assert dead == [p]
+            else:
+                assert dead == []
+        # conservation + exact refcounts after every op
+        assert pool.num_free + len(shadow) == pool.num_usable
+        assert dict(shadow) == pool.refcounts()
+    with pytest.raises(ValueError):
+        pool.free([NUM_RESERVED_PAGES - 1])

@@ -1,0 +1,221 @@
+"""Perf-trajectory regression gate over the deterministic compare benches.
+
+Re-runs the two fully deterministic comparison benchmarks
+(``--compare-backends`` and ``--compare-paging`` from ``benchmarks/run.py``)
+and diffs the result against the committed ``benchmarks/BENCH_baseline.json``:
+
+* **Deterministic fields block.**  Cache bytes, modeled bytes moved,
+  scheduler counters (requests / tokens / ticks / preemptions /
+  queue-wait), achieved concurrency, the paged-vs-slab ratios, and the
+  per-engine trace-event totals are pure functions of the code — any
+  drift is a real behavioural change and fails the gate (exit 1).
+* **Timing fields inform.**  ``decode_us`` and ``tokens_per_sec`` depend
+  on the host; they are compared against a tolerance band (default 3x
+  either way) and reported, but only fail the gate with
+  ``--strict-timing``.  When the baseline and candidate disagree on
+  ``interpret_mode`` (different accelerator), timing is informational
+  regardless.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.regression_gate                  # gate
+    PYTHONPATH=src python -m benchmarks.regression_gate --update-baseline
+
+``--update-baseline`` re-collects and (over)writes the baseline file —
+commit the result whenever a PR intentionally changes scheduler behaviour
+or memory accounting.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(_HERE, "BENCH_baseline.json")
+
+SCHEMA = 1
+
+# exact-match (blocking) fields
+DET_BACKEND = ("cache_bytes", "modeled_bytes_moved_per_layer", "batch", "n_ctx")
+DET_PAGING_TOP = ("page_size", "trace", "concurrency_gain", "kv_bytes_ratio")
+DET_PAGING_ENGINE = (
+    "kv_bytes_allocated",
+    "decode_rows",
+    "achieved_concurrency",
+    "requests",
+    "tokens",
+    "ticks",
+    "preemptions",
+    "queue_wait_ticks",
+    "events",
+)
+# host-dependent (tolerance-band) fields
+TIMING_BACKEND = ("decode_us",)
+TIMING_PAGING_ENGINE = ("tokens_per_sec",)
+
+
+def collect() -> dict:
+    """Run the deterministic compare benches and normalise their records."""
+    from . import run as bench
+
+    with tempfile.TemporaryDirectory() as td:
+        backend_records = bench.bench_backend_compare(
+            record_path=os.path.join(td, "trajectory.jsonl")
+        )
+        paging_rec = bench.bench_paging_compare(
+            record_path=os.path.join(td, "paging.json")
+        )
+    backends = {
+        r["backend"]: {k: r[k] for k in (*DET_BACKEND, *TIMING_BACKEND)}
+        for r in backend_records
+    }
+    interpret = backend_records[0]["interpret_mode"] if backend_records else None
+    paging = {k: paging_rec[k] for k in DET_PAGING_TOP}
+    paging["engines"] = {
+        name: {
+            k: eng[k] for k in (*DET_PAGING_ENGINE, *TIMING_PAGING_ENGINE)
+        }
+        for name, eng in paging_rec["engines"].items()
+    }
+    return {
+        "schema": SCHEMA,
+        "interpret_mode": interpret,
+        "backends": backends,
+        "paging": paging,
+    }
+
+
+def _cmp_exact(path: str, base, cand, blocking: list[str]) -> None:
+    if base != cand:
+        blocking.append(f"{path}: baseline={base!r} candidate={cand!r}")
+
+
+def _cmp_timing(
+    path: str, base, cand, tol: float, out: list[str]
+) -> None:
+    if not base or not cand:
+        return
+    ratio = cand / base
+    if ratio > tol or ratio < 1.0 / tol:
+        out.append(
+            f"{path}: baseline={base} candidate={cand} "
+            f"(ratio {ratio:.2f} outside [{1 / tol:.2f}, {tol:.2f}])"
+        )
+
+
+def diff(
+    baseline: dict, candidate: dict, *, tol: float, strict_timing: bool
+) -> tuple[list[str], list[str]]:
+    """Return (blocking, informational) regression messages."""
+    blocking: list[str] = []
+    info: list[str] = []
+    _cmp_exact("schema", baseline.get("schema"), candidate.get("schema"), blocking)
+
+    same_env = baseline.get("interpret_mode") == candidate.get("interpret_mode")
+    if not same_env:
+        info.append(
+            "interpret_mode differs "
+            f"(baseline={baseline.get('interpret_mode')} "
+            f"candidate={candidate.get('interpret_mode')}): "
+            "timing comparisons demoted to informational"
+        )
+    timing_sink = blocking if (strict_timing and same_env) else info
+
+    b_back, c_back = baseline.get("backends", {}), candidate.get("backends", {})
+    _cmp_exact("backends.keys", sorted(b_back), sorted(c_back), blocking)
+    for name in sorted(set(b_back) & set(c_back)):
+        for k in DET_BACKEND:
+            _cmp_exact(
+                f"backends.{name}.{k}",
+                b_back[name].get(k), c_back[name].get(k), blocking,
+            )
+        for k in TIMING_BACKEND:
+            _cmp_timing(
+                f"backends.{name}.{k}",
+                b_back[name].get(k), c_back[name].get(k), tol, timing_sink,
+            )
+
+    b_pag, c_pag = baseline.get("paging", {}), candidate.get("paging", {})
+    for k in DET_PAGING_TOP:
+        _cmp_exact(f"paging.{k}", b_pag.get(k), c_pag.get(k), blocking)
+    b_eng = b_pag.get("engines", {})
+    c_eng = c_pag.get("engines", {})
+    _cmp_exact("paging.engines.keys", sorted(b_eng), sorted(c_eng), blocking)
+    for name in sorted(set(b_eng) & set(c_eng)):
+        for k in DET_PAGING_ENGINE:
+            _cmp_exact(
+                f"paging.engines.{name}.{k}",
+                b_eng[name].get(k), c_eng[name].get(k), blocking,
+            )
+        for k in TIMING_PAGING_ENGINE:
+            _cmp_timing(
+                f"paging.engines.{name}.{k}",
+                b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
+            )
+    return blocking, info
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--baseline", default=DEFAULT_BASELINE,
+        help="baseline JSON to gate against (default: committed "
+        "benchmarks/BENCH_baseline.json)",
+    )
+    parser.add_argument(
+        "--update-baseline", action="store_true",
+        help="re-collect and overwrite the baseline instead of gating",
+    )
+    parser.add_argument(
+        "--strict-timing", action="store_true",
+        help="out-of-band timing fields fail the gate instead of warning",
+    )
+    parser.add_argument(
+        "--timing-tolerance", type=float, default=3.0, metavar="RATIO",
+        help="allowed timing ratio either way before flagging (default 3.0)",
+    )
+    args = parser.parse_args(argv)
+
+    candidate = collect()
+    if args.update_baseline:
+        candidate["meta"] = {
+            "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "note": "regenerate with: python -m benchmarks.regression_gate "
+            "--update-baseline (REPRO_SMOKE_OVERRIDES must be unset/empty)",
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(candidate, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"gate/baseline,0,updated;path={args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"gate/FAIL,0,missing baseline {args.baseline} "
+            "(run with --update-baseline and commit it)"
+        )
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    blocking, info = diff(
+        baseline, candidate,
+        tol=args.timing_tolerance, strict_timing=args.strict_timing,
+    )
+    for msg in info:
+        print(f"gate/info: {msg}")
+    for msg in blocking:
+        print(f"gate/REGRESSION: {msg}")
+    if blocking:
+        print(f"gate/FAIL,0,blocking={len(blocking)};info={len(info)}")
+        return 1
+    print(f"gate/OK,0,blocking=0;info={len(info)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,13 +25,25 @@ deltas to ``benchmarks/BENCH_sharing.json``.
 ``--compare-prefill`` serves an over-long prompt through a paged engine
 with one-shot (slab-staged) vs chunked (direct-to-page) prefill and writes
 peak prefill staging bytes + admission latency to
-``benchmarks/BENCH_prefill.json``."""
+``benchmarks/BENCH_prefill.json``.
+
+``--trace-out PATH.json`` (any serving compare mode) attaches a
+:class:`repro.obs.Tracer` to every engine and exports one Perfetto /
+Chrome-trace JSON per engine (``PATH.<bench>_<engine>.json`` — load at
+``ui.perfetto.dev``).  Every compare mode appends its summary record to
+``benchmarks/perf_trajectory.jsonl``; ``benchmarks/regression_gate.py``
+re-runs the deterministic compares and diffs them against the committed
+``benchmarks/BENCH_baseline.json``."""
 from __future__ import annotations
 
 import argparse
 import json
 import os
 import time
+
+# set by main(--trace-out); compare modes export one Perfetto file per
+# engine run under this stem when set
+_TRACE_OUT: str | None = None
 
 
 def _bench(fn, iters=10, warmup=2):
@@ -41,6 +53,48 @@ def _bench(fn, iters=10, warmup=2):
     for _ in range(iters):
         fn()
     return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _append_trajectory(rec: dict) -> None:
+    """Append one summary record to the per-PR perf history."""
+    path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "perf_trajectory.jsonl"
+    )
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def _make_tracer(always: bool = False):
+    """A Tracer when --trace-out is set (or the caller needs event counts
+    regardless — the regression gate diffs the paged engines' event
+    totals); None otherwise."""
+    if _TRACE_OUT is None and not always:
+        return None
+    from repro.obs import Tracer
+
+    return Tracer()
+
+
+def _event_totals(tracer) -> dict:
+    """Deterministic event-kind counts of a traced run (``phase`` events
+    are timing-only and excluded)."""
+    totals: dict[str, int] = {}
+    for ev in tracer.events():
+        if ev.kind != "phase":
+            totals[ev.kind] = totals.get(ev.kind, 0) + 1
+    return dict(sorted(totals.items()))
+
+
+def _export_trace(tracer, label: str) -> None:
+    """Write one engine run's Perfetto JSON next to the --trace-out stem."""
+    if tracer is None or _TRACE_OUT is None:
+        return
+    from repro.obs import export_perfetto
+
+    base, ext = os.path.splitext(_TRACE_OUT)
+    path = f"{base}.{label}{ext or '.json'}"
+    export_perfetto(tracer.events(), path)
+    print(f"trace/{label},0,events={tracer.events_emitted};path={path}")
 
 
 def bench_table2_energy():
@@ -273,6 +327,7 @@ def bench_backend_compare(record_path: str | None = None):
         for rec in records:
             f.write(json.dumps(rec) + "\n")
     print(f"backend_compare/records,0,appended={len(records)};path={record_path}")
+    return records
 
 
 def bench_paging_compare(record_path: str | None = None):
@@ -343,8 +398,12 @@ def bench_paging_compare(record_path: str | None = None):
         rng = np.random.default_rng(0)  # same trace per engine
         model = build_model(cfg)
         slots = slab_slots if name == "slab" else paged_slots
+        # always traced: event totals are deterministic scheduler outputs
+        # the regression gate diffs against the committed baseline
+        tracer = _make_tracer(always=True)
         eng = ServingEngine(
-            model, params, num_slots=slots, max_seq=max_seq, **kw
+            model, params, num_slots=slots, max_seq=max_seq,
+            tracer=tracer, **kw
         )
         reqs, arrivals = trace()
         t0 = time.perf_counter()
@@ -373,7 +432,9 @@ def bench_paging_compare(record_path: str | None = None):
             "tokens_per_sec": round(toks / wall, 1),
             "preemptions": stats.get("preemptions", 0),
             "queue_wait_ticks": stats.get("queue_wait_ticks", 0),
+            "events": _event_totals(tracer),
         }
+        _export_trace(tracer, f"paging_{name}")
         r = results[name]
         print(
             f"paging_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
@@ -400,10 +461,12 @@ def bench_paging_compare(record_path: str | None = None):
     with open(record_path, "w") as f:
         json.dump(rec, f, indent=2)
         f.write("\n")
+    _append_trajectory(rec)
     print(
         f"paging_compare/summary,0,concurrency_gain={rec['concurrency_gain']}"
         f";kv_bytes_ratio={rec['kv_bytes_ratio']};path={record_path}"
     )
+    return rec
 
 
 def bench_prefill_compare(record_path: str | None = None):
@@ -510,9 +573,10 @@ def bench_prefill_compare(record_path: str | None = None):
     for name, pc in (("one_shot", 0), ("chunked", chunk)):
         model = build_model(cfg)          # fresh instance: cold jit memo
         params = model.init(jax.random.PRNGKey(0))
+        tracer = _make_tracer()
         eng = ServingEngine(
             model, params, num_slots=1, max_seq=max_seq,
-            page_size=page_size, prefill_chunk=pc,
+            page_size=page_size, prefill_chunk=pc, tracer=tracer,
         )
         def first_token_latency(uid, toks):
             req = Request(uid=uid, prompt=toks, max_new_tokens=4)
@@ -546,6 +610,7 @@ def bench_prefill_compare(record_path: str | None = None):
             "prefill_chunks_run": st["prefill_chunks_run"],
             "chunk_signatures": len(eng._chunk_signatures),
         }
+        _export_trace(tracer, f"prefill_{name}")
         r = results[name]
         print(
             f"prefill_compare/{name},{t_warm * 1e6:.0f},"
@@ -578,12 +643,14 @@ def bench_prefill_compare(record_path: str | None = None):
     with open(record_path, "w") as f:
         json.dump(rec, f, indent=2)
         f.write("\n")
+    _append_trajectory(rec)
     print(
         f"prefill_compare/summary,0,"
         f"staging_ratio={rec['staging_bytes_ratio']}"
         f";warm_latency_ratio={rec['admission_latency_warm_ratio']}"
         f";identical={rec['streams_identical']};path={record_path}"
     )
+    return rec
 
 
 def bench_sharing_compare(record_path: str | None = None):
@@ -644,9 +711,11 @@ def bench_sharing_compare(record_path: str | None = None):
         )
     results = {}
     for name, share in (("unshared", False), ("shared", True)):
+        tracer = _make_tracer()
         eng = ServingEngine(
             model, params, num_slots=slots, max_seq=max_seq,
             page_size=page_size, num_pages=num_pages, share_prefix=share,
+            tracer=tracer,
         )
         reqs, arrivals = trace()
         t0 = time.perf_counter()
@@ -673,6 +742,7 @@ def bench_sharing_compare(record_path: str | None = None):
             "shared_page_hits": stats["shared_page_hits"],
             "cow_copies": stats["cow_copies"],
         }
+        _export_trace(tracer, f"sharing_{name}")
         r = results[name]
         print(
             f"sharing_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
@@ -705,11 +775,13 @@ def bench_sharing_compare(record_path: str | None = None):
     with open(record_path, "w") as f:
         json.dump(rec, f, indent=2)
         f.write("\n")
+    _append_trajectory(rec)
     print(
         f"sharing_compare/summary,0,page_savings={rec['page_savings']}"
         f";concurrency_gain={rec['concurrency_gain']}"
         f";queue_wait_ratio={rec['queue_wait_ratio']};path={record_path}"
     )
+    return rec
 
 
 def main() -> None:
@@ -743,7 +815,16 @@ def main() -> None:
         help="only run the chunked vs one-shot paged-prefill comparison "
         "(writes benchmarks/BENCH_prefill.json)",
     )
+    parser.add_argument(
+        "--trace-out",
+        metavar="PATH",
+        default=None,
+        help="export one Perfetto/Chrome-trace JSON per engine run to "
+        "PATH-stem.<bench>_<engine>.json (serving compare modes)",
+    )
     args = parser.parse_args()
+    global _TRACE_OUT
+    _TRACE_OUT = args.trace_out
     if args.compare_storage:
         bench_storage_compare()
         return

@@ -26,6 +26,13 @@ Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
 Paged engines prefill in page-aligned chunks written straight into pool
 pages by default (``--prefill-chunk 0`` restores the one-shot slab-staged
 prefill; streams are bit-identical either way).
+
+With ``--trace-out trace.json`` the run is traced (token streams stay
+bit-identical) and exported as Perfetto/Chrome-trace JSON — load it at
+``ui.perfetto.dev`` to see tick phases and per-request lifelines.
+``--trace-events N`` prints the last N trace-event signatures, and any
+traced run prints TTFT / inter-token latency percentiles from the
+engine's metrics registry (see docs/observability.md).
 """
 import argparse
 import time
@@ -35,6 +42,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config, with_overrides
 from repro.models import build_model
+from repro.obs import Tracer, export_perfetto
 from repro.serving import Request, ServingEngine, make_sampler
 
 
@@ -76,6 +84,12 @@ def main():
                          "same physical pages (copy-on-write; paged layout "
                          "only — the demo gives every request a shared "
                          "system prompt so the sharing is visible)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="trace the run and export Perfetto/Chrome-trace "
+                         "JSON to PATH (open at ui.perfetto.dev)")
+    ap.add_argument("--trace-events", type=int, default=0, metavar="N",
+                    help="trace the run and print the last N event "
+                         "signatures")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -97,11 +111,12 @@ def main():
             top_k=args.top_k,
             top_p=args.top_p,
         )
+    tracer = (Tracer() if args.trace_out or args.trace_events else None)
     engine = ServingEngine(model, params, num_slots=args.slots,
                            max_seq=args.max_seq, sampler=sampler,
                            page_size=args.page_size, num_pages=args.num_pages,
                            share_prefix=args.share_prefix,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk, tracer=tracer)
 
     rng = np.random.default_rng(0)
     system = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
@@ -162,6 +177,22 @@ def main():
             print(f"prefix sharing: shared_page_hits={s['shared_page_hits']} "
                   f"cow_copies={s['cow_copies']} "
                   f"shared_pages_now={s['shared_pages_now']}")
+    if tracer is not None:
+        m = engine.metrics
+        ttft, itl = m.histogram("ttft_ticks"), m.histogram("intertoken_wall_s")
+        print(f"latency: ttft p50={ttft.percentile(50):.0f} "
+              f"p95={ttft.percentile(95):.0f} ticks over {ttft.count} requests; "
+              f"inter-token p50={itl.percentile(50) * 1e3:.1f}ms "
+              f"p95={itl.percentile(95) * 1e3:.1f}ms over {itl.count} tokens")
+        print(f"trace: {tracer.events_emitted} events emitted "
+              f"({tracer.events_dropped} dropped)")
+        if args.trace_events:
+            for sig in tracer.signatures()[-args.trace_events:]:
+                print(f"  event {sig}")
+        if args.trace_out:
+            export_perfetto(tracer.events(), args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"(open at ui.perfetto.dev)")
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}...")
 

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace_scope
+
 from ..common import cdiv
 from .kernel import build_bernoulli_pallas
 
@@ -34,7 +36,8 @@ def bernoulli_encode_kernel(
         interpret=interpret,
     )
     seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
-    return call(seed_arr, pp)[:, :b, :f]
+    with trace_scope("repro/kernels/bernoulli"):
+        return call(seed_arr, pp)[:, :b, :f]
 
 
 def _enc_fwd(p, seed, num_steps, interpret):

@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace_scope
+
 from ..common import cdiv
 from .kernel import build_lif_pallas
 
@@ -43,7 +45,8 @@ def lif_forward(
         block_f=bf,
         interpret=interpret,
     )
-    return call(xp)[:, :b, :f]
+    with trace_scope("repro/kernels/lif"):
+        return call(xp)[:, :b, :f]
 
 
 def _lif_fwd(x, beta, threshold, alpha, interpret):

@@ -13,6 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace_scope
+
 from ..common import cdiv
 from .kernel import build_popcount_matmul_pallas
 
@@ -81,5 +83,6 @@ def popcount_matmul(
         block_w=block_w,
         interpret=interpret,
     )
-    out = call(_pad2(a_packed, m_pad, w_pad), _pad2(b_packed, n_pad, w_pad))
+    with trace_scope("repro/kernels/popcount_matmul"):
+        out = call(_pad2(a_packed, m_pad, w_pad), _pad2(b_packed, n_pad, w_pad))
     return out[:m, :n]

@@ -23,6 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace_scope
+
 from ..common import uniform_from_counter
 from .kernel import SALT_S, build_ssa_pallas
 from .ref import (
@@ -150,14 +152,15 @@ def ssa_attention(
         interpret=interpret,
         packed=True,
     )
-    out = call(
-        seeds.reshape(bsz, 1),
-        _pad_pos(q_pos, n_q_pad)[:, :, None],
-        _pad_pos(kv_pos, n_kv_pad)[:, None, :],
-        qp,
-        kp,
-        vp,
-    )
+    with trace_scope("repro/kernels/ssa_attention"):
+        out = call(
+            seeds.reshape(bsz, 1),
+            _pad_pos(q_pos, n_q_pad)[:, :, None],
+            _pad_pos(kv_pos, n_kv_pad)[:, None, :],
+            qp,
+            kp,
+            vp,
+        )
     return out[:, :n_q, :d_k]
 
 
@@ -203,14 +206,15 @@ def _ssa_attention_dense(
         block_k=block_k,
         interpret=interpret,
     )
-    out = call(
-        seeds.reshape(bsz, 1),
-        _pad_pos(q_pos, n_q_pad)[:, :, None],
-        _pad_pos(kv_pos, n_kv_pad)[:, None, :],
-        qp,
-        kp,
-        vp,
-    )
+    with trace_scope("repro/kernels/ssa_attention"):
+        out = call(
+            seeds.reshape(bsz, 1),
+            _pad_pos(q_pos, n_q_pad)[:, :, None],
+            _pad_pos(kv_pos, n_kv_pad)[:, None, :],
+            qp,
+            kp,
+            vp,
+        )
     return out[:, :n_q, :d_k]
 
 

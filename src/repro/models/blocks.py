@@ -31,6 +31,7 @@ from repro.attention import (
 )
 from repro.attention.ann_xla import sdpa as _sdpa, sdpa_chunked as _sdpa_chunked
 from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
+from repro.obs import trace_scope
 
 # ---------------------------------------------------------------------------
 # initialisers
@@ -432,12 +433,13 @@ def attention_apply(
     spike_q = None
     if spiking:
         t_steps = a.ssa_time_steps
-        spike_q = spike_encode(q, t_steps)
-        if spike_k is None and packed_k is None:
-            # dense-storage path: re-encode the real-valued K/V (for decode,
-            # the whole cache) into trains at kv-head granularity
-            spike_k = spike_encode(k, t_steps)
-            spike_v = spike_encode(v, t_steps)
+        with trace_scope("repro/spike_encode"):
+            spike_q = spike_encode(q, t_steps)
+            if spike_k is None and packed_k is None:
+                # dense-storage path: re-encode the real-valued K/V (for
+                # decode, the whole cache) into trains at kv-head granularity
+                spike_k = spike_encode(k, t_steps)
+                spike_v = spike_encode(v, t_steps)
         if q_positions is None:
             # train/prefill: spiking draws and masks are keyed by absolute
             # positions (pad rows carry -1 and never draw), which is what
@@ -454,27 +456,28 @@ def attention_apply(
                 )
 
     backend = resolve_backend(a, mode)
-    out = backend.apply(
-        AttentionInvocation(
-            a=a,
-            mode=mode,
-            q=q,
-            k=k,
-            v=v,
-            groups=h_pad // a.num_kv_heads,
-            causal=causal,
-            window=layer_window,
-            softcap=a.softcap,
-            seeds=seeds,
-            kv_positions=kv_positions,
-            q_positions=q_positions,
-            spike_q=spike_q,
-            spike_k=spike_k,
-            spike_v=spike_v,
-            packed_k=packed_k,
-            packed_v=packed_v,
+    with trace_scope(f"repro/attn/{a.impl}/{mode}"):
+        out = backend.apply(
+            AttentionInvocation(
+                a=a,
+                mode=mode,
+                q=q,
+                k=k,
+                v=v,
+                groups=h_pad // a.num_kv_heads,
+                causal=causal,
+                window=layer_window,
+                softcap=a.softcap,
+                seeds=seeds,
+                kv_positions=kv_positions,
+                q_positions=q_positions,
+                spike_q=spike_q,
+                spike_k=spike_k,
+                spike_v=spike_v,
+                packed_k=packed_k,
+                packed_v=packed_v,
+            )
         )
-    )
     out = out.astype(x.dtype).reshape(b, s, h_pad * a.head_dim)
     if a.impl in ("ssa", "spikformer"):
         out = norm_apply(p["out_norm"], out, "rmsnorm", 1e-6)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.attention import derive_request_seeds, fold_layer_seeds
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding import constrain
+from repro.obs import trace_scope
 from .blocks import (
     attention_apply,
     attention_params,
@@ -253,9 +254,10 @@ class DecoderLM:
         real last token, so one compiled prefill serves a whole bucket.
         ``seeds``: per-sequence sampling seeds (see :meth:`forward`).
         """
-        hidden, new_cache, _ = self.forward(
-            params, batch, cache=cache, rng=rng, seeds=seeds
-        )
+        with trace_scope("repro/prefill"):
+            hidden, new_cache, _ = self.forward(
+                params, batch, cache=cache, rng=rng, seeds=seeds
+            )
         if logits_at is None:
             last = hidden[:, -1:]
         else:
@@ -276,10 +278,11 @@ class DecoderLM:
         reads the last *real* token of a padded chunk); default: logits for
         every position.
         """
-        hidden, new_cache, _ = self.forward(
-            params, batch, cache=cache, cache_index=cache_index, rng=rng,
-            seeds=seeds,
-        )
+        with trace_scope("repro/decode_step"):
+            hidden, new_cache, _ = self.forward(
+                params, batch, cache=cache, cache_index=cache_index, rng=rng,
+                seeds=seeds,
+            )
         if logits_at is not None:
             hidden = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
         return self.logits(params, hidden), new_cache

@@ -1,0 +1,36 @@
+"""Observability subsystem: event traces, metrics, profiler annotations.
+
+Three layers, all zero-overhead on the serving hot path unless opted in
+(see docs/observability.md):
+
+* :mod:`repro.obs.trace` — typed, tick-stamped lifecycle events recorded
+  by a ring-buffer :class:`Tracer` with pluggable sinks; the structured
+  log of every scheduler decision (``ServingEngine(tracer=...)``);
+* :mod:`repro.obs.metrics` — :class:`MetricsRegistry` of counters /
+  gauges / histograms backing ``ServingEngine.stats()`` /
+  ``.snapshot()`` (always on: host-side bookkeeping only);
+* :mod:`repro.obs.perfetto` — Chrome-trace/Perfetto JSON export of a
+  traced run (one track per tick phase, one lifeline per request);
+* :mod:`repro.obs.profiling` — ``named_scope`` / ``TraceAnnotation``
+  helpers naming our ops in ``jax.profiler`` device traces.
+"""
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .perfetto import export_perfetto, to_chrome_trace
+from .profiling import annotate, trace_scope
+from .trace import EVENT_KINDS, Event, InMemorySink, JSONLSink, Tracer
+
+__all__ = [
+    "EVENT_KINDS",
+    "Counter",
+    "Event",
+    "Gauge",
+    "Histogram",
+    "InMemorySink",
+    "JSONLSink",
+    "MetricsRegistry",
+    "Tracer",
+    "annotate",
+    "export_perfetto",
+    "to_chrome_trace",
+    "trace_scope",
+]

@@ -1,0 +1,158 @@
+"""Counters / gauges / histograms for the serving engine.
+
+A :class:`MetricsRegistry` is always attached to a ``ServingEngine`` (it
+is host-side integer/float bookkeeping — no device transfers), and
+``engine.stats()`` is a frozen snapshot assembled from it, so downstream
+dashboards get one stable schema whether or not event tracing is on.
+
+Instruments:
+
+* :class:`Counter` — monotone non-negative increments (preemptions,
+  pages granted, tokens sampled, ...);
+* :class:`Gauge` — last-set value plus a running max (pool occupancy,
+  concurrency peaks);
+* :class:`Histogram` — streaming count/sum/min/max plus a bounded,
+  deterministic sample reservoir for percentile estimates (time to first
+  token, inter-token latency, tick-phase durations).  When the reservoir
+  fills, it is decimated by keeping every other retained sample and the
+  keep-stride doubles — no RNG, so two identical runs summarise
+  identically.
+
+``snapshot()`` returns plain nested dicts (deep copies — mutating a
+snapshot never touches the registry), the payload
+``ServingEngine.snapshot()`` wraps with engine config/state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter increments must be >= 0, got {n}")
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value", "max")
+
+    def __init__(self):
+        self.value = 0
+        self.max = 0
+
+    def set(self, v) -> None:
+        self.value = v
+        if v > self.max:
+            self.max = v
+
+
+class Histogram:
+    """Streaming summary + deterministic bounded reservoir."""
+
+    __slots__ = ("count", "total", "min", "max", "_samples", "_stride",
+                 "_skip", "_cap")
+
+    def __init__(self, max_samples: int = 4096):
+        self.count = 0
+        self.total = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+        self._samples: list[float] = []
+        self._stride = 1          # keep every _stride-th observation
+        self._skip = 0
+        self._cap = max_samples
+
+    def observe(self, v) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        if self.min is None or v < self.min:
+            self.min = v
+        if self.max is None or v > self.max:
+            self.max = v
+        if self._skip:
+            self._skip -= 1
+            return
+        self._skip = self._stride - 1
+        self._samples.append(v)
+        if len(self._samples) >= self._cap:
+            # deterministic decimation: halve the reservoir, double stride
+            self._samples = self._samples[::2]
+            self._stride *= 2
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Nearest-rank percentile over the retained samples (``q`` in
+        [0, 100]); None while empty."""
+        if not self._samples:
+            return None
+        s = sorted(self._samples)
+        rank = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+        return s[rank]
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "min": self.min,
+            "max": self.max,
+            "mean": self.total / self.count if self.count else None,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+        }
+
+
+class MetricsRegistry:
+    """Named instruments with get-or-create access and dict snapshots."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    # -- get-or-create accessors (register up front for schema stability) --
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram()
+        return h
+
+    # -- hot-path shorthands ------------------------------------------------
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counter(name).inc(n)
+
+    def observe(self, name: str, v) -> None:
+        self.histogram(name).observe(v)
+
+    # ----------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Frozen deep copy: ``{"counters", "gauges", "histograms"}``."""
+        return {
+            "counters": {k: c.value for k, c in sorted(self._counters.items())},
+            "gauges": {
+                k: {"value": g.value, "max": g.max}
+                for k, g in sorted(self._gauges.items())
+            },
+            "histograms": {
+                k: h.summary() for k, h in sorted(self._histograms.items())
+            },
+        }

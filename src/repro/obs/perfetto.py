@@ -1,0 +1,162 @@
+"""Perfetto / Chrome-trace JSON export for serving-engine traces.
+
+Converts a traced engine run (the :class:`~repro.obs.trace.Event` list a
+:class:`~repro.obs.trace.Tracer` buffered) into the Trace Event Format
+JSON that ``ui.perfetto.dev`` and ``chrome://tracing`` load directly:
+
+* **process "serving engine"** — one track per tick phase (``schedule`` /
+  ``host_stage`` / ``dispatch`` / ``device_sync`` / ``sample``) rendered
+  as duration slices, an ``events`` track with the scheduler's instant
+  events (compiles, page grants/releases, decode ticks), and counter
+  tracks for active rows / pool pages sampled at every decode tick;
+* **process "requests"** — one track (lifeline) per request uid showing
+  its ``queued`` → ``running`` → (``preempted`` → ``running``)* span
+  structure, with per-request instants (prefill chunks, CoW copies,
+  shared-prefix hits, migrations) pinned onto the lifeline.
+
+Timestamps are ``time.perf_counter()`` stamps normalised so the first
+event sits at t=0; durations come from the ``phase`` events' ``dur_s``
+payload.  Everything else in the export is deterministic, so two runs of
+the same trace differ only in slice widths.
+"""
+from __future__ import annotations
+
+import json
+
+__all__ = ["to_chrome_trace", "export_perfetto"]
+
+_ENGINE_PID = 1
+_REQUEST_PID = 2
+_EVENTS_TID = 0          # engine-process instant-event track
+_PHASE_TID_BASE = 1
+
+# request-lifeline span transitions: kind -> (span closed, span opened)
+_LIFELINE = {
+    "submit": (None, "queued"),
+    "admit": ("queued", "running"),
+    "preempt": ("running", "preempted"),
+    "resume": ("preempted", "running"),
+    "finish": ("running", None),
+}
+
+# per-request instants pinned to the lifeline track
+_REQUEST_INSTANTS = frozenset({
+    "prefill_chunk", "prefill_skip", "prefill_pause", "prefill_abort",
+    "cow_copy", "shared_prefix_hit", "migrate", "replay",
+})
+
+# engine-level instants on the shared events track
+_ENGINE_INSTANTS = frozenset({
+    "decode_tick", "compile", "page_grant", "page_share", "page_release",
+})
+
+
+def _meta(pid, name, tid=None, tname=None):
+    out = [{"ph": "M", "name": "process_name", "pid": pid,
+            "args": {"name": name}}]
+    if tid is not None:
+        out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                    "tid": tid, "args": {"name": tname}})
+    return out
+
+
+def to_chrome_trace(events) -> dict:
+    """Build the Trace Event Format dict for a list of traced events."""
+    if not events:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+    # normalise to the earliest *span start* — a phase slice begins at
+    # wall - dur, which precedes the earliest retained event wall when the
+    # ring dropped the run's opening events
+    t0 = min(
+        e.wall - float(e.data.get("dur_s", 0.0)) if e.kind == "phase"
+        else e.wall
+        for e in events
+    )
+    t_end = max(e.wall for e in events)
+
+    def us(wall: float) -> float:
+        return round((wall - t0) * 1e6, 3)
+
+    out: list[dict] = []
+    out += _meta(_ENGINE_PID, "serving engine", _EVENTS_TID, "events")
+
+    phase_tids: dict[str, int] = {}
+    uid_seen: dict[int, bool] = {}
+    open_spans: dict[tuple[int, str], float] = {}   # (uid, span) -> start
+
+    def close_span(uid, span, wall):
+        start = open_spans.pop((uid, span), None)
+        if start is None:
+            return
+        out.append({
+            "ph": "X", "name": span, "pid": _REQUEST_PID, "tid": uid,
+            "ts": us(start), "dur": max(us(wall) - us(start), 0.0),
+        })
+
+    for e in events:
+        if e.kind == "phase":
+            name = e.data.get("phase", "phase")
+            tid = phase_tids.get(name)
+            if tid is None:
+                tid = phase_tids[name] = _PHASE_TID_BASE + len(phase_tids)
+                out += _meta(_ENGINE_PID, "serving engine", tid,
+                             f"phase:{name}")[1:]
+            dur = float(e.data.get("dur_s", 0.0))
+            out.append({
+                "ph": "X", "name": name, "pid": _ENGINE_PID, "tid": tid,
+                "ts": us(e.wall - dur), "dur": round(dur * 1e6, 3),
+                "args": {"tick": e.tick},
+            })
+            continue
+
+        if e.uid is not None and e.uid not in uid_seen:
+            uid_seen[e.uid] = True
+            out += _meta(_REQUEST_PID, "requests", e.uid,
+                         f"req {e.uid}")[1 if len(uid_seen) > 1 else 0:]
+
+        transition = _LIFELINE.get(e.kind)
+        if transition is not None and e.uid is not None:
+            closes, opens = transition
+            if closes is not None:
+                close_span(e.uid, closes, e.wall)
+            if opens is not None:
+                open_spans[(e.uid, opens)] = e.wall
+
+        args = {"tick": e.tick, **{k: v for k, v in e.data.items()}}
+        if e.row is not None:
+            args["row"] = e.row
+        if e.kind in _REQUEST_INSTANTS and e.uid is not None:
+            out.append({
+                "ph": "i", "s": "t", "name": e.kind, "pid": _REQUEST_PID,
+                "tid": e.uid, "ts": us(e.wall), "args": args,
+            })
+        elif e.kind in _ENGINE_INSTANTS or e.uid is None:
+            out.append({
+                "ph": "i", "s": "t", "name": e.kind, "pid": _ENGINE_PID,
+                "tid": _EVENTS_TID, "ts": us(e.wall), "args": args,
+            })
+        if e.kind == "decode_tick":
+            for counter in ("active", "pages_used"):
+                if counter in e.data:
+                    out.append({
+                        "ph": "C", "name": counter, "pid": _ENGINE_PID,
+                        "ts": us(e.wall),
+                        "args": {counter: e.data[counter]},
+                    })
+
+    # close any spans still open (preempted/running at trace end)
+    for (uid, span) in list(open_spans):
+        close_span(uid, span, t_end)
+
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def export_perfetto(events, path) -> dict:
+    """Write the Chrome-trace JSON for ``events`` to ``path``; returns the
+    trace dict (tests inspect it without re-reading the file)."""
+    trace = to_chrome_trace(events)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+        f.write("\n")
+    return trace

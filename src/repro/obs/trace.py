@@ -1,0 +1,245 @@
+"""Structured event tracing for the serving engine.
+
+A :class:`Tracer` records typed, tick-stamped :class:`Event`s into a
+bounded ring buffer and fans them out to pluggable sinks.  The serving
+engine emits one event per scheduler decision (admission, preemption,
+migration, CoW copy, page grant, ...) and one per tick phase, so a full
+serving burst can be replayed offline — as a Perfetto timeline
+(:mod:`repro.obs.perfetto`), a JSONL log (:class:`JSONLSink`), or an
+in-memory list for tests (:meth:`Tracer.events`).
+
+Design constraints (the engine's acceptance criteria):
+
+* **deterministic sequence** — every field of an event except its
+  ``wall`` timestamp (and the ``dur_s`` payload of ``phase`` events) is a
+  pure function of the request trace and engine config, so golden-fixture
+  tests can assert the exact event *sequence* while ignoring wall times
+  (:meth:`Event.signature`);
+* **no behavioural coupling** — emitting an event never touches device
+  state; a traced engine produces bit-identical token streams to an
+  untraced one (asserted by ``tests/test_obs.py``);
+* **bounded memory** — the ring buffer drops the *oldest* events past
+  ``capacity``; sinks see every event exactly once regardless.
+
+Event taxonomy (``EVENT_KINDS``; docs/observability.md has the full
+field-by-field reference):
+
+================== =====================================================
+kind               emitted when
+================== =====================================================
+submit             a request enters the queue
+admit              a request is seated in a decode row (first token
+                   sampled)
+prefill_chunk      one chunked-prefill prefix-extend call ran
+prefill_skip       a chunk was skipped (fully covered by resident
+                   shared prefix pages)
+prefill_pause      a mid-prefill admission paused (pool dry)
+prefill_abort      an in-flight admission was rolled back wholesale
+decode_tick        one fused decode step is about to dispatch
+preempt            an active request released its pages and row
+resume             a preempted request was re-seated
+migrate            a resume landed in a different row than it left
+replay             a resume finished replaying its recorded tokens
+cow_copy           a shared page was copied before a write
+shared_prefix_hit  an admission mapped an already-resident prefix page
+page_grant         the pool handed out fresh pages (refcount 1)
+page_share         an existing page gained an owner (prefix sharing)
+page_release       owners were dropped; ``dead`` lists pages retired
+                   (refcount hit zero, about to be scrubbed)
+finish             a request completed (eos / max_new_tokens / max_seq)
+compile            a jit entry point saw a new signature (prefill
+                   bucket, chunk shape, decode table width)
+phase              one named tick phase completed (``dur_s`` payload)
+================== =====================================================
+"""
+from __future__ import annotations
+
+import collections
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+__all__ = [
+    "EVENT_KINDS",
+    "Event",
+    "InMemorySink",
+    "JSONLSink",
+    "Tracer",
+]
+
+EVENT_KINDS = frozenset({
+    "submit",
+    "admit",
+    "prefill_chunk",
+    "prefill_skip",
+    "prefill_pause",
+    "prefill_abort",
+    "decode_tick",
+    "preempt",
+    "resume",
+    "migrate",
+    "replay",
+    "cow_copy",
+    "shared_prefix_hit",
+    "page_grant",
+    "page_share",
+    "page_release",
+    "finish",
+    "compile",
+    "phase",
+})
+
+# payload keys that carry wall-clock-derived values: excluded from
+# Event.signature() so golden event-sequence fixtures stay deterministic
+_TIMING_KEYS = frozenset({"dur_s", "wall_s"})
+
+
+@dataclass(frozen=True)
+class Event:
+    """One traced engine event.
+
+    ``tick`` is the engine tick counter at emission; ``wall`` is a
+    ``time.perf_counter()`` stamp (monotonic, arbitrary origin — compare
+    within one process only).  ``uid``/``row`` identify the request and
+    decode row where applicable; everything else rides in ``data``.
+    """
+
+    kind: str
+    tick: int
+    wall: float
+    uid: Optional[int] = None
+    row: Optional[int] = None
+    data: dict = field(default_factory=dict)
+
+    def signature(self) -> list:
+        """Deterministic projection: everything except wall-clock values.
+
+        Returns ``[kind, tick, uid, row, {data minus timing keys}]`` —
+        the unit the golden event-stream fixtures pin exactly.
+        """
+        payload = {
+            k: v for k, v in sorted(self.data.items())
+            if k not in _TIMING_KEYS
+        }
+        return [self.kind, self.tick, self.uid, self.row, payload]
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "tick": self.tick,
+            "wall": self.wall,
+            "uid": self.uid,
+            "row": self.row,
+            "data": dict(self.data),
+        }
+
+
+class InMemorySink:
+    """Collects every event into a plain list (tests, ad-hoc analysis)."""
+
+    def __init__(self):
+        self.events: list[Event] = []
+
+    def append(self, event: Event) -> None:
+        self.events.append(event)
+
+    def close(self) -> None:  # symmetry with JSONLSink
+        pass
+
+
+class JSONLSink:
+    """Streams events to a JSON-lines file as they are emitted.
+
+    Accepts a path (opened lazily, closed by :meth:`close`) or an open
+    text file object (caller keeps ownership).
+    """
+
+    def __init__(self, path_or_file):
+        if hasattr(path_or_file, "write"):
+            self._fh = path_or_file
+            self._owns = False
+        else:
+            self._fh = open(path_or_file, "w")
+            self._owns = True
+
+    def append(self, event: Event) -> None:
+        self._fh.write(json.dumps(event.to_dict()) + "\n")
+
+    def close(self) -> None:
+        self._fh.flush()
+        if self._owns:
+            self._fh.close()
+
+
+class Tracer:
+    """Ring-buffer event recorder with pluggable sinks.
+
+    Pass one to ``ServingEngine(tracer=...)`` to switch lifecycle tracing
+    and tick-phase timing on; a ``None`` tracer (the default) keeps the
+    engine on its zero-instrumentation path.
+
+    ``sync_device=True`` additionally has the engine ``block_until_ready``
+    the decode logits inside the ``device_sync`` tick phase, separating
+    async dispatch cost from device execution in the phase timings (one
+    extra host sync per tick; numerics are unchanged).
+    """
+
+    def __init__(self, capacity: int = 65536, sinks: tuple = (),
+                 sync_device: bool = False,
+                 clock: Callable[[], float] = time.perf_counter):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._ring: collections.deque[Event] = collections.deque(
+            maxlen=capacity
+        )
+        self._sinks = list(sinks)
+        self.sync_device = bool(sync_device)
+        self._clock = clock
+        self.events_emitted = 0
+        self.events_dropped = 0
+
+    # ------------------------------------------------------------------
+    def emit(self, kind: str, *, tick: int, uid: Optional[int] = None,
+             row: Optional[int] = None, **data) -> Event:
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}")
+        ev = Event(kind=kind, tick=tick, wall=self._clock(), uid=uid,
+                   row=row, data=data)
+        if len(self._ring) == self._ring.maxlen:
+            self.events_dropped += 1
+        self._ring.append(ev)
+        self.events_emitted += 1
+        for sink in self._sinks:
+            sink.append(ev)
+        return ev
+
+    def add_sink(self, sink) -> None:
+        self._sinks.append(sink)
+
+    # ------------------------------------------------------------------
+    def events(self, kind: Optional[str] = None) -> list[Event]:
+        """Ring-buffer contents in emission order (optionally one kind)."""
+        if kind is None:
+            return list(self._ring)
+        return [e for e in self._ring if e.kind == kind]
+
+    def tail(self, n: int) -> list[Event]:
+        """The most recent ``n`` buffered events."""
+        if n <= 0:
+            return []
+        return list(self._ring)[-n:]
+
+    def signatures(self, *, include_phases: bool = False) -> list[list]:
+        """Deterministic event-sequence projection (golden fixtures).
+
+        ``phase`` events are timing-only and excluded by default.
+        """
+        return [
+            e.signature() for e in self._ring
+            if include_phases or e.kind != "phase"
+        ]
+
+    def close(self) -> None:
+        for sink in self._sinks:
+            sink.close()

@@ -72,17 +72,35 @@ reports occupancy / queue-wait / preemption / migration / sharing counters.
 
 Sampling is pluggable (``sampler=``, see `repro.serving.sampling`): greedy
 argmax by default, temperature / top-k / top-p via ``make_sampler``.
+
+Observability (see docs/observability.md): a
+:class:`~repro.obs.metrics.MetricsRegistry` is always attached (host-side
+integer bookkeeping only — zero device transfers) and backs every counter
+the engine exposes; ``stats()`` is a frozen snapshot of it and
+``snapshot()`` adds histogram summaries (TTFT, inter-token latency,
+queue wait, tick-phase timings).  Passing ``tracer=`` a
+:class:`~repro.obs.trace.Tracer` additionally records one typed event per
+scheduler decision (admit / preempt / migrate / CoW / page grant / ...)
+and splits the tick into named timed phases (``schedule`` /
+``host_stage`` / ``dispatch`` / ``device_sync`` / ``sample``) —
+exportable to Perfetto via :func:`repro.obs.perfetto.export_perfetto`.
+Tracing never touches device state, so a traced engine's token streams
+are bit-identical to an untraced one's.
 """
 from __future__ import annotations
 
 import collections
 import inspect
+import time
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import MetricsRegistry, annotate
+from repro.obs.trace import Tracer
 
 from .paging import pages_for_rows
 from .sampling import Sampler, greedy
@@ -224,6 +242,51 @@ def _model_jit(model, key: str, make):
     return cache[key]
 
 
+class _NullCtx:
+    """Reusable no-op context: the untraced engine's phase 'timer'."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+class _PhaseTimer:
+    """Times one named tick phase; emits a histogram sample + phase event."""
+
+    __slots__ = ("eng", "name", "t0")
+
+    def __init__(self, eng, name):
+        self.eng = eng
+        self.name = name
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur = time.perf_counter() - self.t0
+        self.eng.metrics.observe(f"phase_{self.name}_s", dur)
+        self.eng._trace("phase", phase=self.name, dur_s=dur)
+        return False
+
+
+def _counter_property(name: str, doc: str) -> property:
+    """Read-only view of a registry counter under a legacy attribute name
+    (tests and benchmarks read ``engine.preemptions`` etc. directly)."""
+    return property(lambda self: self.metrics.counter(name).value, doc=doc)
+
+
+def _gauge_max_property(name: str, doc: str) -> property:
+    return property(lambda self: self.metrics.gauge(name).max, doc=doc)
+
+
 @dataclass
 class _ChunkedPrefill:
     """An admission mid-chunked-prefill: the head-of-line request, the row
@@ -245,7 +308,9 @@ class ServingEngine:
                  num_pages: Optional[int] = None,
                  page_size: Optional[int] = None,
                  share_prefix: bool = False,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.b = num_slots
@@ -256,7 +321,22 @@ class ServingEngine:
         self.slot_pos = np.zeros(num_slots, np.int32)  # next position per row
         self.slot_seeds = np.zeros(num_slots, np.uint32)
         self.key = jax.random.PRNGKey(rng_seed)
-        self.queue_wait_ticks = 0
+        # observability: registry always on (host-side only); tracer opt-in
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        for name in ("ticks", "queue_wait_ticks", "requests_submitted",
+                     "requests_finished", "tokens_sampled", "compile_events"):
+            m.counter(name)
+        for name in ("concurrency", "occupancy"):
+            m.gauge(name)
+        for name in ("ttft_ticks", "ttft_wall_s", "intertoken_ticks",
+                     "intertoken_wall_s", "queue_wait_ticks",
+                     "phase_schedule_s", "phase_host_stage_s",
+                     "phase_dispatch_s", "phase_device_sync_s",
+                     "phase_sample_s"):
+            m.histogram(name)
+        self._ticks = m.counter("ticks")
 
         from repro.attention import derive_request_seeds
 
@@ -313,7 +393,15 @@ class ServingEngine:
                 # behaviour to the slab engine; callers shrink it to trade
                 # memory for preemptions
                 num_pages = NUM_RESERVED_PAGES + num_slots * self.pages_per_seq
-            self.pool = PagePool(num_pages, ps)
+            for name in ("preemptions", "resumes", "replay_steps",
+                         "migrations", "shared_page_hits", "cow_copies",
+                         "chunked_prefills", "prefill_chunks_run",
+                         "prefill_chunks_skipped", "prefill_pauses",
+                         "prefill_aborts", "pages_granted", "pages_shared",
+                         "pages_released", "pages_retired"):
+                m.counter(name)
+            m.gauge("pages_used")
+            self.pool = PagePool(num_pages, ps, on_event=self._pool_event)
             if self.pool.num_usable < self.pages_per_seq:
                 raise ValueError(
                     f"pool of {num_pages} pages cannot back even one "
@@ -341,18 +429,11 @@ class ServingEngine:
             self._admit_order: dict[int, int] = {}    # uid -> admission seq
             self._last_row: dict[int, int] = {}       # uid -> preempted row
             self._admit_seq = 0
-            self.preemptions = 0
-            self.resumes = 0
-            self.replay_steps = 0
-            self.migrations = 0
-            self.max_concurrency_seen = 0
-            self.peak_pages_used = 0
+            self._table_widths: set[int] = set()      # decode compile sigs
             # prefix sharing state: sha256(seed, prefix tokens) -> page id,
             # plus the reverse map for retiring entries when pages die
             self._prefix_map: dict[bytes, int] = {}
             self._page_key: dict[int, bytes] = {}
-            self.shared_page_hits = 0
-            self.cow_copies = 0
             # ---- chunked prefill (prefix-extend straight into pages) ----
             # default = one page per chunk; prefill_chunk=0 restores the
             # one-shot slab-staged prefill.  Needs the model to thread
@@ -389,11 +470,6 @@ class ServingEngine:
                 )
             self._inflight: Optional[_ChunkedPrefill] = None
             self._chunk_signatures: set[tuple[int, int]] = set()
-            self.chunked_prefills = 0
-            self.prefill_chunks_run = 0
-            self.prefill_chunks_skipped = 0
-            self.prefill_pauses = 0
-            self.prefill_aborts = 0
         else:
             if num_pages is not None or page_size is not None:
                 raise ValueError(
@@ -409,6 +485,8 @@ class ServingEngine:
                 )
             self.cache = model.init_cache(num_slots, max_seq)
         self._submit_tick: dict[int, int] = {}
+        self._submit_wall: dict[int, float] = {}
+        self._last_token: dict[int, tuple[int, float]] = {}  # (tick, wall)
 
         # Bucketed prefill needs the model to expose `logits_at` (read the
         # real last token's logits out of a padded prompt); models without
@@ -449,14 +527,78 @@ class ServingEngine:
         }
         self._min_seq_extent = min(extents) if extents else max_seq
         self._prefill_buckets: set[int] = set()
-        self.steps_run = 0
+
+    # ------------------------------------------------------------------
+    # legacy counter attributes: read-only views over the metrics registry
+    # (the registry is the single source of truth; these keep the public
+    # surface tests and benchmarks read — `engine.preemptions` etc.)
+    # ------------------------------------------------------------------
+    steps_run = _counter_property("ticks", "Decode ticks run.")
+    queue_wait_ticks = _counter_property(
+        "queue_wait_ticks", "Total ticks requests spent queued.")
+    preemptions = _counter_property("preemptions", "Requests preempted.")
+    resumes = _counter_property("resumes", "Preempted requests resumed.")
+    replay_steps = _counter_property("replay_steps", "Replayed decode ticks.")
+    migrations = _counter_property("migrations", "Resumes into a new row.")
+    shared_page_hits = _counter_property(
+        "shared_page_hits", "Prefix pages mapped instead of re-prefilled.")
+    cow_copies = _counter_property("cow_copies", "Copy-on-write page copies.")
+    chunked_prefills = _counter_property(
+        "chunked_prefills", "Admissions run through chunked prefill.")
+    prefill_chunks_run = _counter_property(
+        "prefill_chunks_run", "Prefix-extend chunk calls dispatched.")
+    prefill_chunks_skipped = _counter_property(
+        "prefill_chunks_skipped", "Chunks skipped (shared prefix resident).")
+    prefill_pauses = _counter_property(
+        "prefill_pauses", "Mid-prefill pauses (pool dry).")
+    prefill_aborts = _counter_property(
+        "prefill_aborts", "In-flight admissions rolled back.")
+    max_concurrency_seen = _gauge_max_property(
+        "concurrency", "Peak simultaneously active rows.")
+    peak_pages_used = _gauge_max_property(
+        "pages_used", "Peak pool pages in use.")
+
+    # ------------------------------------------------------------------
+    # observability plumbing
+    # ------------------------------------------------------------------
+    def _trace(self, kind: str, *, uid=None, row=None, **data):
+        """Emit one lifecycle event if a tracer is attached (no-op and
+        allocation-free otherwise — the zero-overhead-when-disabled path)."""
+        tr = self.tracer
+        if tr is not None:
+            tr.emit(kind, tick=self._ticks.value, uid=uid, row=row, **data)
+
+    def _phase(self, name: str):
+        """Timed named tick phase when traced; a shared no-op otherwise."""
+        return _NULL_CTX if self.tracer is None else _PhaseTimer(self, name)
+
+    def _compile_event(self, fn: str, signature):
+        """A jit entry point is about to see a new signature."""
+        self.metrics.inc("compile_events")
+        self._trace("compile", fn=fn, signature=signature)
+
+    def _pool_event(self, kind: str, **data):
+        """PagePool hook: page-accounting counters + pass-through trace."""
+        m = self.metrics
+        if kind == "page_grant":
+            m.inc("pages_granted", len(data["pages"]))
+        elif kind == "page_share":
+            m.inc("pages_shared")
+        elif kind == "page_release":
+            m.inc("pages_released", len(data["pages"]))
+            m.inc("pages_retired", len(data["dead"]))
+        self._trace(kind, **data)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         if req.seed is None:
             req.seed = self.default_seed
         self._submit_tick[id(req)] = self.steps_run
+        self._submit_wall[id(req)] = time.perf_counter()
         self.queue.append(req)
+        self.metrics.inc("requests_submitted")
+        self._trace("submit", uid=req.uid, prompt_len=len(req.prompt),
+                    queued=len(self.queue))
 
     def _free_slots(self):
         busy = set(self.active)
@@ -511,7 +653,9 @@ class ServingEngine:
                 # such prompts (and any longer than max_seq) prefill at
                 # exact length — correctness over compile reuse
                 pb = p
-            self._prefill_buckets.add(pb)
+            if pb not in self._prefill_buckets:
+                self._prefill_buckets.add(pb)
+                self._compile_event("prefill", pb)
             tokens = np.zeros((1, pb), np.int32)
             tokens[0, :p] = req.prompt
             # pad positions are -1: masked dead by the position-validity
@@ -524,38 +668,52 @@ class ServingEngine:
                 row_cache,
                 jnp.asarray(p - 1, jnp.int32),
             )
-            if self._prefill_seeded:
-                logits, row_cache = self._prefill(*args, _dev(seeds))
-            else:
-                logits, row_cache = self._prefill(*args)
+            ctx = (annotate("repro/prefill_dispatch")
+                   if self.tracer is not None else _NULL_CTX)
+            with ctx:
+                if self._prefill_seeded:
+                    logits, row_cache = self._prefill(*args, _dev(seeds))
+                else:
+                    logits, row_cache = self._prefill(*args)
             if pb != p:
                 row_cache = self._reset_pad_rows(row_cache, p)
         else:
             tokens = _dev(np.asarray(req.prompt, np.int32)[None])
             positions = _dev(np.arange(p, dtype=np.int32)[None])
             kwargs = {"seeds": _dev(seeds)} if self._prefill_seeded else {}
-            logits, row_cache = self.model.prefill(
-                self.params,
-                {"tokens": tokens, "positions": positions},
-                row_cache,
-                **kwargs,
-            )
+            ctx = (annotate("repro/prefill_dispatch")
+                   if self.tracer is not None else _NULL_CTX)
+            with ctx:
+                logits, row_cache = self.model.prefill(
+                    self.params,
+                    {"tokens": tokens, "positions": positions},
+                    row_cache,
+                    **kwargs,
+                )
         return logits, row_cache
 
     def _start(self, slot: int, req: Request, logits):
         """Shared admission tail: sample the first token, activate the row."""
-        self.queue_wait_ticks += self.steps_run - self._submit_tick.pop(
-            id(req), self.steps_run
-        )
+        m = self.metrics
+        wait = self.steps_run - self._submit_tick.pop(id(req), self.steps_run)
+        m.inc("queue_wait_ticks", wait)
+        m.observe("queue_wait_ticks", wait)
+        m.observe("ttft_ticks", wait)
+        now = time.perf_counter()
+        m.observe("ttft_wall_s", now - self._submit_wall.pop(id(req), now))
         self.key, sub = jax.random.split(self.key)
         nxt = int(self.sampler(sub, logits[0, -1]))
         req.out_tokens.append(nxt)
+        m.inc("tokens_sampled")
+        self._last_token[id(req)] = (self._ticks.value, now)
         self.active[slot] = req
         self.slot_pos[slot] = len(req.prompt)
         self.slot_seeds[slot] = np.uint32(req.seed)
         if self.paged:
             self._admit_order[req.uid] = self._admit_seq
             self._admit_seq += 1
+        self._trace("admit", uid=req.uid, row=slot,
+                    prompt_len=len(req.prompt), wait_ticks=wait)
 
     # ------------------------------------------------------------------
     # prefix sharing: lookup / registration over (seed, token-prefix) keys
@@ -609,10 +767,11 @@ class ServingEngine:
             shared.append(page)
         return shared, keys
 
-    def _claim_shared(self, shared: list[int]):
+    def _claim_shared(self, shared: list[int], uid: int):
         for page in shared:
             self.pool.incref(page)
-            self.shared_page_hits += 1
+            self.metrics.inc("shared_page_hits")
+            self._trace("shared_prefix_hit", uid=uid, page=page)
 
     def _alloc_prompt_pages(self, req: Request, rows: int):
         """Claim shared prefix pages + alloc the rest for ``rows`` cache
@@ -623,7 +782,7 @@ class ServingEngine:
                                 - len(shared))
         if fresh is None:
             return None
-        self._claim_shared(shared)
+        self._claim_shared(shared, req.uid)
         return shared + fresh, keys, len(shared)
 
     def _admit(self):
@@ -725,16 +884,23 @@ class ServingEngine:
                 arr[None], (slot_d["pos"].shape[0],) + arr.shape
             )
             cache_view.append(d)
-        self._chunk_signatures.add((sb, width))
-        logits, self.cache = self._chunk(
-            self.params,
-            {"tokens": _dev(tokens), "positions": _dev(positions)},
-            cache_view,
-            _dev(np.full((1,), c0, np.int32)),
-            _dev(np.asarray([req.seed], np.uint32)),
-            jnp.asarray(s - 1, jnp.int32),
-        )
-        self.prefill_chunks_run += 1
+        if (sb, width) not in self._chunk_signatures:
+            self._chunk_signatures.add((sb, width))
+            self._compile_event("prefill_chunk", [sb, width])
+        ctx = (annotate("repro/prefill_chunk_dispatch")
+               if self.tracer is not None else _NULL_CTX)
+        with ctx:
+            logits, self.cache = self._chunk(
+                self.params,
+                {"tokens": _dev(tokens), "positions": _dev(positions)},
+                cache_view,
+                _dev(np.full((1,), c0, np.int32)),
+                _dev(np.asarray([req.seed], np.uint32)),
+                jnp.asarray(s - 1, jnp.int32),
+            )
+        self.metrics.inc("prefill_chunks_run")
+        self._trace("prefill_chunk", uid=req.uid, c0=c0, c1=c1,
+                    bucket=sb, width=width)
         return logits if want_logits else None
 
     def _begin_chunked(self, req: Request, slot: int):
@@ -743,12 +909,12 @@ class ServingEngine:
         while we prefill), fresh pages come per chunk."""
         self.queue.popleft()
         shared, keys = self._resident_prefix(req)
-        self._claim_shared(shared)
+        self._claim_shared(shared, req.uid)
         self._inflight = _ChunkedPrefill(
             req, slot, list(shared), keys,
             len(shared) * self.pool.page_size,
         )
-        self.chunked_prefills += 1
+        self.metrics.inc("chunked_prefills")
 
     def _advance_inflight(self) -> bool:
         """Run the in-flight admission's remaining chunks, claiming pages
@@ -766,14 +932,16 @@ class ServingEngine:
             if need > len(inf.pages):
                 fresh = self.pool.alloc(need - len(inf.pages))
                 if fresh is None:
-                    self.prefill_pauses += 1
+                    self.metrics.inc("prefill_pauses")
+                    self._trace("prefill_pause", uid=req.uid, done=inf.done)
                     return False
                 inf.pages.extend(fresh)
             if c1 <= inf.shared_rows and c1 < p:
                 # chunk fully covered by shared prefix pages: the K/V is
                 # already resident (content-addressed under RNG contract
                 # v2), and only the final chunk must run for its logits
-                self.prefill_chunks_skipped += 1
+                self.metrics.inc("prefill_chunks_skipped")
+                self._trace("prefill_skip", uid=req.uid, c0=inf.done, c1=c1)
             else:
                 logits = self._run_chunk(
                     req, inf.done, c1, inf.pages, want_logits=c1 == p
@@ -795,7 +963,8 @@ class ServingEngine:
         inf = self._inflight
         self._inflight = None
         self.queue.appendleft(inf.req)
-        self.prefill_aborts += 1
+        self.metrics.inc("prefill_aborts")
+        self._trace("prefill_abort", uid=inf.req.uid, done=inf.done)
         if inf.pages:
             self._retire_dead(self.pool.free(inf.pages))
 
@@ -810,7 +979,8 @@ class ServingEngine:
         while c0 < p:
             c1 = min(c0 + self.prefill_chunk, p)
             if c1 <= shared_rows:
-                self.prefill_chunks_skipped += 1
+                self.metrics.inc("prefill_chunks_skipped")
+                self._trace("prefill_skip", uid=req.uid, c0=c0, c1=c1)
             else:
                 self._run_chunk(req, c0, c1, pages, want_logits=False)
             c0 = c1
@@ -863,7 +1033,9 @@ class ServingEngine:
         self._release_pages(slot)
         self._last_row[req.uid] = slot
         self._preempted.append(req)
-        self.preemptions += 1
+        self.metrics.inc("preemptions")
+        self._trace("preempt", uid=req.uid, row=slot,
+                    tokens=len(req.out_tokens))
 
     def _alloc_one_or_preempt(self, exclude: int) -> Optional[list[int]]:
         """One fresh page, rolling back the in-flight chunked admission
@@ -955,7 +1127,9 @@ class ServingEngine:
                     # last of them — a dead page must be scrubbed and its
                     # registration retired like any other release
                     self._retire_dead(self.pool.free([page]))
-                    self.cow_copies += 1
+                    self.metrics.inc("cow_copies")
+                    self._trace("cow_copy", uid=self.active[slot].uid,
+                                row=slot, src=page, dst=fresh[0], col=col)
                 elif page in self._page_key:
                     # sole owner about to write: retire the cache entry
                     self._prefix_map.pop(self._page_key.pop(page), None)
@@ -976,6 +1150,9 @@ class ServingEngine:
         for slot in self.active:
             rows = max(rows, int(self.slot_pos[slot]) + 1)
         w = bucketed_table_width(rows, ps, self.pages_per_seq)
+        if w not in self._table_widths:
+            self._table_widths.add(w)
+            self._compile_event("decode", w)
         arr = _dev(self.tables.as_array(w))
         for slot_d in self.cache:
             steps = slot_d["pos"].shape[0]
@@ -994,14 +1171,17 @@ class ServingEngine:
             "positions": _dev(positions),
         }
         idx = _dev(self.slot_pos)                    # per-row write offsets
-        if self._seeded:
-            logits, self.cache = self._decode(
-                self.params, batch, self.cache, idx, _dev(self.slot_seeds)
-            )
-        else:
-            logits, self.cache = self._decode(
-                self.params, batch, self.cache, idx
-            )
+        ctx = (annotate("repro/decode_dispatch")
+               if self.tracer is not None else _NULL_CTX)
+        with ctx:
+            if self._seeded:
+                logits, self.cache = self._decode(
+                    self.params, batch, self.cache, idx, _dev(self.slot_seeds)
+                )
+            else:
+                logits, self.cache = self._decode(
+                    self.params, batch, self.cache, idx
+                )
         return logits
 
     def _replay(self, slot: int, req: Request):
@@ -1033,7 +1213,7 @@ class ServingEngine:
             self._sync_tables()
             self._decode_tick(tokens)
             self.slot_pos[slot] += 1
-            self.replay_steps += 1
+            self.metrics.inc("replay_steps")
         return True
 
     def _resume_preempted(self):
@@ -1074,10 +1254,16 @@ class ServingEngine:
             self.active[slot] = req
             self.slot_pos[slot] = len(req.prompt)
             self.slot_seeds[slot] = np.uint32(req.seed)
-            if slot != self._last_row.pop(req.uid, slot):
-                self.migrations += 1
+            self._trace("resume", uid=req.uid, row=slot,
+                        tokens=len(req.out_tokens))
+            prev = self._last_row.pop(req.uid, slot)
+            if slot != prev:
+                self.metrics.inc("migrations")
+                self._trace("migrate", uid=req.uid, row=slot, from_row=prev)
             if self._replay(slot, req):
-                self.resumes += 1
+                self.metrics.inc("resumes")
+                self._trace("replay", uid=req.uid, row=slot,
+                            steps=len(req.out_tokens) - 1)
 
     # ------------------------------------------------------------------
     @property
@@ -1105,48 +1291,94 @@ class ServingEngine:
     def step(self) -> list[Request]:
         """One engine tick: resume / admit / grow pages / CoW, then one
         fused decode step for all rows.  Returns the requests that
-        finished."""
-        if self.paged:
-            self._resume_preempted()
-        self._admit()
+        finished.
+
+        With a tracer attached the tick is split into timed phases
+        (``schedule`` / ``host_stage`` / ``dispatch`` / ``device_sync`` /
+        ``sample``); untraced, the phase contexts are a shared no-op and
+        the tick body is unchanged."""
+        m = self.metrics
+        with self._phase("schedule"):
+            if self.paged:
+                self._resume_preempted()
+            self._admit()
+            if self.active and self.paged:
+                self._grow_pages()
+                self._cow_guard()
+                self._sync_tables()
+                m.gauge("pages_used").set(self.pool.num_used)
         if not self.active:
             return []
-        if self.paged:
-            self._grow_pages()
-            self._cow_guard()
-            self._sync_tables()
-            self.max_concurrency_seen = max(
-                self.max_concurrency_seen, len(self.active)
-            )
-            self.peak_pages_used = max(
-                self.peak_pages_used, self.pool.num_used
-            )
-        tokens = np.zeros((self.b, 1), np.int32)
-        for slot, req in self.active.items():
-            tokens[slot, 0] = req.out_tokens[-1]
+        m.gauge("concurrency").set(len(self.active))
+        m.gauge("occupancy").set(
+            self.pool.num_used / max(self.pool.num_usable, 1)
+            if self.paged else len(self.active) / max(self.b, 1)
+        )
+        with self._phase("host_stage"):
+            tokens = np.zeros((self.b, 1), np.int32)
+            for slot, req in self.active.items():
+                tokens[slot, 0] = req.out_tokens[-1]
+        if self.tracer is not None:
+            data = {
+                "active": len(self.active),
+                "rows": sorted([s, r.uid] for s, r in self.active.items()),
+            }
+            if self.paged:
+                data["pages_used"] = self.pool.num_used
+            self._trace("decode_tick", **data)
         # NOTE: static-shape engine uses one shared cache_index per tick via
         # per-slot positions; the cache write offset is each slot's position
-        logits = self._decode_tick(tokens)
-        self.steps_run += 1
-        self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(self.sampler(sub, logits[:, -1]))
+        with self._phase("dispatch"):
+            logits = self._decode_tick(tokens)
+        tr = self.tracer
+        if tr is not None and tr.sync_device:
+            # separates async-dispatch cost from device execution in the
+            # phase timings; numerics and token streams are unchanged
+            with self._phase("device_sync"):
+                jax.block_until_ready(logits)
+        with self._phase("sample"):
+            self._ticks.inc()
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(self.sampler(sub, logits[:, -1]))
+            finished = self._commit(nxt)
+        return finished
+
+    def _commit(self, nxt: np.ndarray) -> list[Request]:
+        """Append this tick's sampled tokens, record per-token latency,
+        and retire finished rows."""
+        m = self.metrics
+        now = time.perf_counter()
+        tick = self._ticks.value
         finished: list[Request] = []
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])
             req.out_tokens.append(tok)
+            m.inc("tokens_sampled")
+            last = self._last_token.get(id(req))
+            if last is not None:
+                m.observe("intertoken_ticks", tick - last[0])
+                m.observe("intertoken_wall_s", now - last[1])
+            self._last_token[id(req)] = (tick, now)
             self.slot_pos[slot] += 1
-            if (
-                tok in req.eos_ids()
-                or len(req.out_tokens) >= req.max_new_tokens
-                or self.slot_pos[slot] >= self.max_seq - 1
-            ):
-                req.done = True
-                finished.append(req)
-                del self.active[slot]
-                if self.paged:
-                    self._release_pages(slot)
-                    self._admit_order.pop(req.uid, None)
-                    self._last_row.pop(req.uid, None)
+            if tok in req.eos_ids():
+                reason = "eos"
+            elif len(req.out_tokens) >= req.max_new_tokens:
+                reason = "max_new_tokens"
+            elif self.slot_pos[slot] >= self.max_seq - 1:
+                reason = "max_seq"
+            else:
+                continue
+            req.done = True
+            finished.append(req)
+            del self.active[slot]
+            self._last_token.pop(id(req), None)
+            m.inc("requests_finished")
+            if self.paged:
+                self._release_pages(slot)
+                self._admit_order.pop(req.uid, None)
+                self._last_row.pop(req.uid, None)
+            self._trace("finish", uid=req.uid, row=slot,
+                        tokens=len(req.out_tokens), reason=reason)
         return finished
 
     def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
@@ -1171,8 +1403,11 @@ class ServingEngine:
         return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.cache))
 
     def stats(self) -> dict:
-        """Scheduler observability: occupancy, queueing, preemption,
-        migration, prefix sharing."""
+        """Scheduler observability: a frozen snapshot (plain dict, safe to
+        mutate) assembled from the metrics registry plus live queue / pool
+        state.  The key set is stable per layout (tests pin the schema);
+        :meth:`snapshot` adds the latency / phase histograms on top."""
+        c = self.metrics.counter
         out = {
             "layout": self.layout,
             "ticks": self.steps_run,
@@ -1180,6 +1415,10 @@ class ServingEngine:
             "queued": len(self.queue),
             "queue_wait_ticks": self.queue_wait_ticks,
             "kv_cache_nbytes": self.kv_cache_nbytes(),
+            "requests_submitted": c("requests_submitted").value,
+            "requests_finished": c("requests_finished").value,
+            "tokens_sampled": c("tokens_sampled").value,
+            "compile_events": c("compile_events").value,
         }
         if not self.paged:
             out["occupancy"] = len(self.active) / max(self.b, 1)
@@ -1208,7 +1447,24 @@ class ServingEngine:
             prefill_pauses=self.prefill_pauses,
             prefill_aborts=self.prefill_aborts,
             prefill_in_flight=self._inflight is not None,
+            pages_granted=c("pages_granted").value,
+            pages_shared=c("pages_shared").value,
+            pages_released=c("pages_released").value,
+            pages_retired=c("pages_retired").value,
         )
+        return out
+
+    def snapshot(self) -> dict:
+        """Full observability snapshot: :meth:`stats` plus the metrics
+        registry (histogram summaries for TTFT / inter-token latency /
+        queue wait / tick phases) and, when tracing, the tracer's emit
+        counters.  Everything is a plain deep-copied dict."""
+        out = {"stats": self.stats(), "metrics": self.metrics.snapshot()}
+        if self.tracer is not None:
+            out["trace"] = {
+                "events_emitted": self.tracer.events_emitted,
+                "events_dropped": self.tracer.events_dropped,
+            }
         return out
 
 

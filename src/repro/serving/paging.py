@@ -48,9 +48,17 @@ def pages_for_rows(rows: int, page_size: int) -> int:
 
 class PagePool:
     """Free-list allocator over ``num_pages`` refcounted page ids of
-    ``page_size`` rows."""
+    ``page_size`` rows.
 
-    def __init__(self, num_pages: int, page_size: int):
+    ``on_event`` (optional, settable after construction) is called on every
+    successful ownership change — ``("page_grant", pages=[...])`` from
+    :meth:`alloc`, ``("page_share", page=p)`` from :meth:`incref`, and
+    ``("page_release", pages=[...], dead=[...])`` from :meth:`free` — so
+    the serving engine's metrics/tracer see page accounting without the
+    pool knowing anything about them.  Failed calls (pool short, bad ids)
+    emit nothing."""
+
+    def __init__(self, num_pages: int, page_size: int, *, on_event=None):
         if num_pages <= NUM_RESERVED_PAGES:
             raise ValueError(
                 f"num_pages={num_pages} leaves no allocatable pages "
@@ -60,6 +68,7 @@ class PagePool:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.on_event = on_event
         self._free: collections.deque[int] = collections.deque(
             range(NUM_RESERVED_PAGES, num_pages)
         )
@@ -91,6 +100,8 @@ class PagePool:
         pages = [self._free.popleft() for _ in range(n)]
         for p in pages:
             self._ref[p] = 1
+        if pages and self.on_event is not None:
+            self.on_event("page_grant", pages=list(pages))
         return pages
 
     def incref(self, page: int) -> None:
@@ -98,6 +109,8 @@ class PagePool:
         if page not in self._ref:
             raise ValueError(f"incref of unallocated page id {page}")
         self._ref[page] += 1
+        if self.on_event is not None:
+            self.on_event("page_share", page=page)
 
     def ref_count(self, page: int) -> int:
         return self._ref.get(page, 0)
@@ -116,6 +129,7 @@ class PagePool:
         """Drop one owner per page; returns the pages whose refcount hit
         zero (actually recycled — the caller scrubs exactly these)."""
         dead: list[int] = []
+        released: list[int] = []
         for p in pages:
             p = int(p)
             if not NUM_RESERVED_PAGES <= p < self.num_pages:
@@ -129,6 +143,9 @@ class PagePool:
                 del self._ref[p]
                 self._free.append(p)
                 dead.append(p)
+            released.append(p)
+        if released and self.on_event is not None:
+            self.on_event("page_release", pages=released, dead=list(dead))
         return dead
 
 

@@ -12,7 +12,11 @@ pool/table invariants after **every** engine step:
   * no page mapped by two owners unless prefix sharing is on and the page
     is still prefix-registered;
   * ``stats()`` counters are monotone over the run;
-  * the pool drains to empty (no leaked pages or registrations).
+  * the pool drains to empty (no leaked pages or registrations);
+  * trace-level page accounting closes: every ``page_grant`` has a matching
+    release, the retired multiset equals the granted multiset, and
+    ``pages_granted + pages_shared == pages_released`` at drain (the engine
+    runs traced, so the event stream itself is under fuzz).
 
 The allocator itself gets its own op-sequence fuzz below.
 """
@@ -27,6 +31,7 @@ import pytest
 from repro.attention import NUM_RESERVED_PAGES
 from repro.configs import get_smoke_config
 from repro.models import build_model
+from repro.obs import Tracer
 from repro.serving import PagePool, Request, ServingEngine
 
 from conftest import hypothesis_or_stubs
@@ -38,6 +43,7 @@ _MONOTONE = (
     "migrations", "shared_page_hits", "cow_copies", "chunked_prefills",
     "prefill_chunks_run", "prefill_chunks_skipped", "prefill_pauses",
     "prefill_aborts", "peak_pages_used", "max_concurrency_seen",
+    "pages_granted", "pages_shared", "pages_released", "pages_retired",
 )
 
 
@@ -93,6 +99,13 @@ def _check_invariants(eng, prev_stats):
     stats = eng.stats()
     for key in _MONOTONE:
         assert stats[key] >= prev_stats.get(key, 0), key
+    # live page accounting: every grant/share the pool ever made is either
+    # still referenced or has been released
+    outstanding = (
+        stats["pages_granted"] + stats["pages_shared"]
+        - stats["pages_released"]
+    )
+    assert outstanding == sum(refcounts.values()), (stats, refcounts)
     return stats
 
 
@@ -111,10 +124,12 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
             max_new_tokens=int(mn),
         ))
     order = np.argsort(arrivals, kind="stable")
+    tracer = Tracer()
     eng = ServingEngine(
         model, params, num_slots=slots, max_seq=32, page_size=8,
         num_pages=NUM_RESERVED_PAGES + usable,
         share_prefix=share, prefill_chunk=8 if chunked else 0,
+        tracer=tracer,
     )
     done, tick, i, stats = [], 0, 0, {}
     while i < len(order) or eng.has_pending_work:
@@ -131,6 +146,27 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
     assert eng.pool.num_used == 0
     assert not eng.tables.pages and eng._inflight is None
     assert not eng._prefix_map and not eng._page_key
+    # trace-level page accounting: every page the pool ever granted has a
+    # matching release, and the released pages that died (refcount -> 0)
+    # are exactly the granted multiset (shares add refs, not pages)
+    assert tracer.events_dropped == 0
+    granted = Counter()
+    retired = Counter()
+    shares = 0
+    for ev in tracer.events():
+        if ev.kind == "page_grant":
+            granted.update(ev.data["pages"])
+        elif ev.kind == "page_release":
+            retired.update(ev.data["dead"])
+        elif ev.kind == "page_share":
+            shares += 1
+    assert granted == retired, (granted, retired)
+    stats = eng.stats()
+    assert stats["pages_granted"] == sum(granted.values())
+    assert stats["pages_retired"] == sum(retired.values())
+    assert stats["pages_shared"] == shares
+    assert (stats["pages_granted"] + stats["pages_shared"]
+            == stats["pages_released"])
     return eng
 
 

@@ -1,14 +1,17 @@
 """Perf-trajectory regression gate over the deterministic compare benches.
 
-Re-runs the two fully deterministic comparison benchmarks
-(``--compare-backends`` and ``--compare-paging`` from ``benchmarks/run.py``)
-and diffs the result against the committed ``benchmarks/BENCH_baseline.json``:
+Re-runs the fully deterministic comparison benchmarks
+(``--compare-backends``, ``--compare-paging`` and ``--compare-spec`` from
+``benchmarks/run.py``) and diffs the result against the committed
+``benchmarks/BENCH_baseline.json``:
 
 * **Deterministic fields block.**  Cache bytes, modeled bytes moved,
   scheduler counters (requests / tokens / ticks / preemptions /
-  queue-wait), achieved concurrency, the paged-vs-slab ratios, and the
-  per-engine trace-event totals are pure functions of the code — any
-  drift is a real behavioural change and fails the gate (exit 1).
+  queue-wait), achieved concurrency, the paged-vs-slab ratios, the
+  speculative-decode acceptance statistics (accept rate, target
+  dispatches per committed token), and the per-engine trace-event totals
+  are pure functions of the code — any drift is a real behavioural
+  change and fails the gate (exit 1).
 * **Timing fields inform.**  ``decode_us`` and ``tokens_per_sec`` depend
   on the host; they are compared against a tolerance band (default 3x
   either way) and reported, but only fail the gate with
@@ -37,7 +40,7 @@ import time
 _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(_HERE, "BENCH_baseline.json")
 
-SCHEMA = 1
+SCHEMA = 2
 
 # exact-match (blocking) fields
 DET_BACKEND = ("cache_bytes", "modeled_bytes_moved_per_layer", "batch", "n_ctx")
@@ -53,9 +56,31 @@ DET_PAGING_ENGINE = (
     "queue_wait_ticks",
     "events",
 )
+DET_SPEC_TOP = (
+    "workload",
+    "target_time_steps",
+    "draft_time_steps",
+    "spec_k",
+    "streams_identical",
+    "dispatch_savings",
+)
+DET_SPEC_ENGINE = (
+    "requests",
+    "tokens",
+    "ticks",
+    "target_dispatches",
+    "dispatches_per_token",
+    "draft_dispatches",
+    "drafted_tokens",
+    "accepted_tokens",
+    "accept_rate",
+    "accepted_len_hist",
+    "events",
+)
 # host-dependent (tolerance-band) fields
 TIMING_BACKEND = ("decode_us",)
 TIMING_PAGING_ENGINE = ("tokens_per_sec",)
+TIMING_SPEC_ENGINE = ("tokens_per_sec",)
 
 
 def collect() -> dict:
@@ -69,6 +94,9 @@ def collect() -> dict:
         paging_rec = bench.bench_paging_compare(
             record_path=os.path.join(td, "paging.json")
         )
+        spec_rec = bench.bench_spec_compare(
+            record_path=os.path.join(td, "spec.json")
+        )
     backends = {
         r["backend"]: {k: r[k] for k in (*DET_BACKEND, *TIMING_BACKEND)}
         for r in backend_records
@@ -81,11 +109,19 @@ def collect() -> dict:
         }
         for name, eng in paging_rec["engines"].items()
     }
+    spec = {k: spec_rec[k] for k in DET_SPEC_TOP}
+    spec["engines"] = {
+        name: {
+            k: eng[k] for k in (*DET_SPEC_ENGINE, *TIMING_SPEC_ENGINE)
+        }
+        for name, eng in spec_rec["engines"].items()
+    }
     return {
         "schema": SCHEMA,
         "interpret_mode": interpret,
         "backends": backends,
         "paging": paging,
+        "spec": spec,
     }
 
 
@@ -154,6 +190,24 @@ def diff(
         for k in TIMING_PAGING_ENGINE:
             _cmp_timing(
                 f"paging.engines.{name}.{k}",
+                b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
+            )
+
+    b_spec, c_spec = baseline.get("spec", {}), candidate.get("spec", {})
+    for k in DET_SPEC_TOP:
+        _cmp_exact(f"spec.{k}", b_spec.get(k), c_spec.get(k), blocking)
+    b_eng = b_spec.get("engines", {})
+    c_eng = c_spec.get("engines", {})
+    _cmp_exact("spec.engines.keys", sorted(b_eng), sorted(c_eng), blocking)
+    for name in sorted(set(b_eng) & set(c_eng)):
+        for k in DET_SPEC_ENGINE:
+            _cmp_exact(
+                f"spec.engines.{name}.{k}",
+                b_eng[name].get(k), c_eng[name].get(k), blocking,
+            )
+        for k in TIMING_SPEC_ENGINE:
+            _cmp_timing(
+                f"spec.engines.{name}.{k}",
                 b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
             )
     return blocking, info

@@ -27,6 +27,12 @@ with one-shot (slab-staged) vs chunked (direct-to-page) prefill and writes
 peak prefill staging bytes + admission latency to
 ``benchmarks/BENCH_prefill.json``.
 
+``--compare-spec`` serves one pinned greedy workload through a paged
+engine plain and with self-speculative decode (reduced-time-step SSA
+draft, exact position-keyed verification) and writes target dispatches
+per committed token / acceptance statistics / stream identity to
+``benchmarks/BENCH_spec.json``.
+
 ``--trace-out PATH.json`` (any serving compare mode) attaches a
 :class:`repro.obs.Tracer` to every engine and exports one Perfetto /
 Chrome-trace JSON per engine (``PATH.<bench>_<engine>.json`` — load at
@@ -784,6 +790,147 @@ def bench_sharing_compare(record_path: str | None = None):
     return rec
 
 
+def bench_spec_compare(record_path: str | None = None):
+    """Self-speculative vs plain greedy decode on one pinned workload
+    (smoke SSA model, packed storage + paged cache, CPU).
+
+    The target runs SSA at T=8; the draft is the same weights at T=4
+    (half the Bernoulli rounds per token, so roughly half the decode
+    cost) proposing ``k=4`` tokens per tick.  A single decode row keeps
+    the headline metric honest: for the plain engine every committed
+    token past a request's first (which prefill samples) costs exactly
+    one target dispatch, so the speculative engine's
+    ``verify_dispatches / tokens`` reads directly against the plain
+    engine's ``ticks / tokens``.  Acceptance statistics are
+    deterministic (pinned request seeds, greedy sampling, RNG contract
+    v2), streams must match token-for-token, and the record lands in
+    ``benchmarks/BENCH_spec.json`` + the perf trajectory.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+    from repro.serving import DraftConfig, Request, ServingEngine
+
+    max_seq, page_size, spec_k = 64, 8, 4
+    cfg = with_overrides(
+        get_smoke_config("codeqwen15_7b"),
+        attention__impl="ssa",
+        attention__spike_storage="packed",
+        attention__cache_layout="paged",
+        attention__ssa_time_steps=8,      # target precision: T=8
+    )
+
+    def trace():
+        rng = np.random.default_rng(0)
+        reqs = []
+        for uid in range(4):
+            reqs.append(
+                Request(
+                    uid=uid,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size, int(rng.integers(4, 12))
+                    ).astype(np.int32),
+                    max_new_tokens=12,
+                    seed=uid * 7 + 1,
+                )
+            )
+        return reqs
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if record_path is None:
+        record_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "BENCH_spec.json"
+        )
+    variants = {
+        "plain": None,
+        "speculative": DraftConfig(k=spec_k, time_steps=4),
+    }
+    results, streams = {}, {}
+    for name, draft in variants.items():
+        tracer = _make_tracer(always=True)
+        eng = ServingEngine(
+            model, params, num_slots=1, max_seq=max_seq,
+            page_size=page_size, draft=draft, tracer=tracer,
+        )
+        reqs = trace()
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run_until_done(max_ticks=500)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        streams[name] = [list(r.out_tokens) for r in reqs]
+        stats = eng.stats()
+        hist = eng.metrics.snapshot()["histograms"].get("accepted_len")
+        drafted = stats.get("spec_drafted_tokens", 0)
+        accepted = stats.get("spec_accepted_tokens", 0)
+        # "ticks" counts decode dispatches only (prefill chunks are not
+        # ticks), so for the plain engine it IS the target dispatch count
+        target_dispatches = (
+            stats.get("verify_dispatches", 0) if draft is not None
+            else stats["ticks"]
+        )
+        results[name] = {
+            "requests": len(done),
+            "tokens": toks,
+            "ticks": stats["ticks"],
+            "tokens_per_sec": round(toks / wall, 1),
+            "target_dispatches": target_dispatches,
+            "dispatches_per_token": round(
+                target_dispatches / max(toks, 1), 4
+            ),
+            "draft_dispatches": stats.get("draft_dispatches", 0),
+            "drafted_tokens": drafted,
+            "accepted_tokens": accepted,
+            "accept_rate": round(accepted / drafted, 4) if drafted else None,
+            "accepted_len_hist": (
+                {"count": hist["count"], "sum": hist["sum"],
+                 "mean": round(hist["mean"], 4), "max": hist["max"]}
+                if hist else None
+            ),
+            "events": _event_totals(tracer),
+        }
+        _export_trace(tracer, f"spec_{name}")
+        r = results[name]
+        print(
+            f"spec_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
+            f"dispatches_per_token={r['dispatches_per_token']}"
+            f";accept_rate={r['accept_rate']}"
+            f";ticks={r['ticks']};tok_s={r['tokens_per_sec']}"
+        )
+    assert streams["plain"] == streams["speculative"], (
+        "speculative greedy stream diverged from plain decode"
+    )
+    rec = {
+        "bench": "spec_compare",
+        "workload": {"requests": 4, "max_new_tokens": 12,
+                     "max_seq": max_seq, "page_size": page_size},
+        "target_time_steps": 8,
+        "draft_time_steps": 4,
+        "spec_k": spec_k,
+        "engines": results,
+        "streams_identical": True,
+        "dispatch_savings": round(
+            1.0 - results["speculative"]["dispatches_per_token"]
+            / max(results["plain"]["dispatches_per_token"], 1e-9), 4
+        ),
+        "ts": time.time(),
+    }
+    with open(record_path, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    _append_trajectory(rec)
+    print(
+        f"spec_compare/summary,0,"
+        f"dispatch_savings={rec['dispatch_savings']}"
+        f";identical={rec['streams_identical']};path={record_path}"
+    )
+    return rec
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -816,6 +963,12 @@ def main() -> None:
         "(writes benchmarks/BENCH_prefill.json)",
     )
     parser.add_argument(
+        "--compare-spec",
+        action="store_true",
+        help="only run the speculative vs plain greedy-decode comparison "
+        "(writes benchmarks/BENCH_spec.json)",
+    )
+    parser.add_argument(
         "--trace-out",
         metavar="PATH",
         default=None,
@@ -839,6 +992,9 @@ def main() -> None:
         return
     if args.compare_prefill:
         bench_prefill_compare()
+        return
+    if args.compare_spec:
+        bench_spec_compare()
         return
     bench_table2_energy()
     bench_table3_latency()

@@ -22,6 +22,8 @@ Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
           --cache-layout paged --share-prefix
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
           --cache-layout paged --prefill-chunk 16
+      PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
+          --cache-layout paged --draft-k 4
 
 Paged engines prefill in page-aligned chunks written straight into pool
 pages by default (``--prefill-chunk 0`` restores the one-shot slab-staged
@@ -43,7 +45,7 @@ import numpy as np
 from repro.configs import get_smoke_config, with_overrides
 from repro.models import build_model
 from repro.obs import Tracer, export_perfetto
-from repro.serving import Request, ServingEngine, make_sampler
+from repro.serving import DraftConfig, Request, ServingEngine, make_sampler
 
 
 def main():
@@ -84,6 +86,14 @@ def main():
                          "same physical pages (copy-on-write; paged layout "
                          "only — the demo gives every request a shared "
                          "system prompt so the sharing is visible)")
+    ap.add_argument("--draft-k", type=int, default=None, metavar="K",
+                    help="self-speculative decode: propose up to K tokens "
+                         "per tick with a cheap draft, verify with one "
+                         "target prefix-extend (paged layout; greedy "
+                         "streams stay exact — see docs/serving.md)")
+    ap.add_argument("--draft-time-steps", type=int, default=None,
+                    help="SSA time steps for the draft model (default "
+                         "half the target's; ignored without --draft-k)")
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="trace the run and export Perfetto/Chrome-trace "
                          "JSON to PATH (open at ui.perfetto.dev)")
@@ -112,11 +122,14 @@ def main():
             top_p=args.top_p,
         )
     tracer = (Tracer() if args.trace_out or args.trace_events else None)
+    draft = (DraftConfig(k=args.draft_k, time_steps=args.draft_time_steps)
+             if args.draft_k else None)
     engine = ServingEngine(model, params, num_slots=args.slots,
                            max_seq=args.max_seq, sampler=sampler,
                            page_size=args.page_size, num_pages=args.num_pages,
                            share_prefix=args.share_prefix,
-                           prefill_chunk=args.prefill_chunk, tracer=tracer)
+                           prefill_chunk=args.prefill_chunk, draft=draft,
+                           tracer=tracer)
 
     rng = np.random.default_rng(0)
     system = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
@@ -173,6 +186,14 @@ def main():
                   f"{s['prefill_chunks_run']} chunks "
                   f"(skipped={s['prefill_chunks_skipped']} shared-resident, "
                   f"pauses={s['prefill_pauses']} aborts={s['prefill_aborts']})")
+    if draft is not None:
+        s = engine.stats()
+        drafted = s["spec_drafted_tokens"]
+        rate = s["spec_accepted_tokens"] / max(drafted, 1)
+        print(f"speculative decode: k={draft.k}, {s['spec_ticks']} spec "
+              f"ticks, {drafted} drafted / {s['spec_accepted_tokens']} "
+              f"accepted ({rate:.1%}), verify dispatches="
+              f"{s['verify_dispatches']} draft={s['draft_dispatches']}")
         if s["share_prefix"]:
             print(f"prefix sharing: shared_page_hits={s['shared_page_hits']} "
                   f"cow_copies={s['cow_copies']} "

@@ -275,8 +275,12 @@ class DecoderLM:
         causality falls out of the absolute positions every backend masks
         by.  ``logits_at`` (scalar, may be traced) selects a single
         sequence index whose logits to return (the chunked-prefill engine
-        reads the last *real* token of a padded chunk); default: logits for
-        every position.
+        reads the last *real* token of a padded chunk); default: logits
+        for every position — the speculative-decode verifier: position
+        ``j``'s logits score the token at absolute position
+        ``cache_index + j + 1``, bit-identical to decoding one token at a
+        time because RNG contract v2 keys draws by absolute position,
+        never chunk shape (``tests/test_speculative.py``).
         """
         with trace_scope("repro/decode_step"):
             hidden, new_cache, _ = self.forward(

@@ -5,9 +5,11 @@ Converts a traced engine run (the :class:`~repro.obs.trace.Event` list a
 JSON that ``ui.perfetto.dev`` and ``chrome://tracing`` load directly:
 
 * **process "serving engine"** — one track per tick phase (``schedule`` /
-  ``host_stage`` / ``dispatch`` / ``device_sync`` / ``sample``) rendered
-  as duration slices, an ``events`` track with the scheduler's instant
-  events (compiles, page grants/releases, decode ticks), and counter
+  ``host_stage`` / ``dispatch`` / ``device_sync`` / ``sample``, plus
+  ``draft`` / ``verify`` on speculative engines — phase tracks are
+  allocated dynamically by name) rendered as duration slices, an
+  ``events`` track with the scheduler's instant events (compiles, page
+  grants/releases, decode ticks, draft/verify dispatches), and counter
   tracks for active rows / pool pages sampled at every decode tick;
 * **process "requests"** — one track (lifeline) per request uid showing
   its ``queued`` → ``running`` → (``preempted`` → ``running``)* span
@@ -43,11 +45,15 @@ _LIFELINE = {
 _REQUEST_INSTANTS = frozenset({
     "prefill_chunk", "prefill_skip", "prefill_pause", "prefill_abort",
     "cow_copy", "shared_prefix_hit", "migrate", "replay",
+    "accept", "reject",
 })
 
-# engine-level instants on the shared events track
+# engine-level instants on the shared events track (the speculative
+# ``draft``/``verify`` phase *slices* get their own tracks for free via the
+# dynamic phase-track allocation above; these are their instant markers)
 _ENGINE_INSTANTS = frozenset({
-    "decode_tick", "compile", "page_grant", "page_share", "page_release",
+    "decode_tick", "draft", "verify",
+    "compile", "page_grant", "page_share", "page_release",
 })
 
 

@@ -36,6 +36,13 @@ prefill_skip       a chunk was skipped (fully covered by resident
 prefill_pause      a mid-prefill admission paused (pool dry)
 prefill_abort      an in-flight admission was rolled back wholesale
 decode_tick        one fused decode step is about to dispatch
+draft              a speculative tick finished proposing draft tokens
+                   (one event per tick: rows, proposed counts, catch-ups)
+verify             the target's verify prefix-extend is about to dispatch
+accept             a row committed its verified tokens (``accepted``
+                   drafts + the correction/bonus token)
+reject             a row rejected a non-empty draft suffix (cache rewound
+                   past ``at``)
 preempt            an active request released its pages and row
 resume             a preempted request was re-seated
 migrate            a resume landed in a different row than it left
@@ -76,6 +83,10 @@ EVENT_KINDS = frozenset({
     "prefill_pause",
     "prefill_abort",
     "decode_tick",
+    "draft",
+    "verify",
+    "accept",
+    "reject",
     "preempt",
     "resume",
     "migrate",

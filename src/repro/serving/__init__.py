@@ -1,9 +1,10 @@
-from .engine import Request, ServingEngine
+from .engine import DraftConfig, Request, ServingEngine
 from .paging import BlockTables, PagePool, pages_for_rows
 from .sampling import Sampler, greedy, make_sampler
 
 __all__ = [
     "BlockTables",
+    "DraftConfig",
     "PagePool",
     "Request",
     "Sampler",

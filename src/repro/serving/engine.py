@@ -70,6 +70,29 @@ sequence shifts, so the cross-schedule guarantee is for per-tick-key-free
 allocated instead of ``num_slots * max_seq`` worth of slabs.  ``stats()``
 reports occupancy / queue-wait / preemption / migration / sharing counters.
 
+Preempted requests resume through the same chunked machinery: the prompt
+re-prefills chunk-by-chunk into per-chunk-claimed pages (pausable at chunk
+boundaries when the pool is dry, rolled back entirely when a running
+request needs the pages), and the replay growth region is granted page by
+page from the free list — a resume never preempts a running request.
+
+Self-speculative decoding (``draft=DraftConfig(...)``): each tick a cheap
+draft — the same weights at a reduced SSA time-step count, an ``ann``
+draft, or an explicit (model, params) pair — proposes up to ``k`` tokens
+per row one at a time, then ONE verify prefix-extend of the target scores
+the whole proposal window (``decode_step`` with ``logits_at=None`` returns
+logits at every chunk position) and the longest agreeing prefix commits.
+Exact under greedy: RNG contract v2 keys every draw by absolute position,
+so the verify chunk's per-position logits are bit-identical to one-at-a-
+time decode and accept/reject is a pure token comparison.  Rejected
+suffixes rewind by host-side position bookkeeping only (stale cache
+entries are causally masked and re-written before ever being attended);
+the draft's KV lives in its own small page pool, dropped wholesale on
+preemption/finish and rebuilt by a catch-up prefix-extend, so speculation
+composes with preemption, migration, and prefix sharing.  Speculative
+page needs (target span and draft alike) come from the free list only —
+a dry pool truncates the proposal window instead of evicting anyone.
+
 Sampling is pluggable (``sampler=``, see `repro.serving.sampling`): greedy
 argmax by default, temperature / top-k / top-p via ``make_sampler``.
 
@@ -82,7 +105,8 @@ queue wait, tick-phase timings).  Passing ``tracer=`` a
 :class:`~repro.obs.trace.Tracer` additionally records one typed event per
 scheduler decision (admit / preempt / migrate / CoW / page grant / ...)
 and splits the tick into named timed phases (``schedule`` /
-``host_stage`` / ``dispatch`` / ``device_sync`` / ``sample``) —
+``host_stage`` / ``dispatch`` / ``device_sync`` / ``sample``, plus
+``draft`` / ``verify`` on speculative engines) —
 exportable to Perfetto via :func:`repro.obs.perfetto.export_perfetto`.
 Tracing never touches device state, so a traced engine's token streams
 are bit-identical to an untraced one's.
@@ -139,6 +163,45 @@ class Request:
         if isinstance(self.eos_id, (int, np.integer)):
             return frozenset((int(self.eos_id),))
         return frozenset(int(t) for t in self.eos_id)
+
+
+@dataclass(frozen=True)
+class DraftConfig:
+    """Self-speculative decode configuration (``ServingEngine(draft=...)``).
+
+    Each engine tick, a cheap **draft** model proposes up to ``k`` tokens
+    per active row; the target model scores the whole proposal in ONE
+    verify prefix-extend (``decode_step(logits_at=None)`` returns logits at
+    every chunk position) and commits the longest accepted prefix plus one
+    correction/bonus token.  Acceptance compares the draft's token against
+    the token the target's sampler picks from the *verifier's* logits at
+    that position — exact under greedy (the committed stream is
+    token-identical to non-speculative decode), and distribution-exact
+    under temperature sampling (every committed token is a sampler draw
+    from target logits; only the per-tick key schedule differs).
+
+    The draft is derived from the target unless ``model`` is given:
+
+    * ``time_steps`` — same SSA weights run with fewer stochastic time
+      steps (``attention.ssa_time_steps``), the reduced-step self-draft.
+      Defaults to ``max(1, T // 2)`` for ssa/spikformer targets.
+    * ``impl`` — a different registry backend over the same weights (e.g.
+      ``"ann"`` for a non-spiking draft; forced onto the xla backend).
+
+    Draft KV state lives beside the target's: a private slab cache, or —
+    paged layout — a private ``num_pages``-page pool (default: ample,
+    every row can draft to ``max_seq``) whose grants/releases are traced
+    with ``pool="draft"`` and counted by ``draft_pages_*``.  Speculation
+    never preempts anyone: when target *or* draft pages run dry the row
+    simply drafts fewer (or zero) tokens that tick.
+    """
+
+    k: int = 4
+    time_steps: Optional[int] = None
+    impl: Optional[str] = None
+    num_pages: Optional[int] = None
+    model: Optional[object] = None
+    params: Optional[object] = None
 
 
 def _default_page_size(max_seq: int) -> int:
@@ -300,6 +363,10 @@ class _ChunkedPrefill:
     shared_rows: int               # rows covered by claimed shared pages
     done: int = 0                  # tokens prefilled so far
     logits: Optional[jax.Array] = None
+    # resume re-prefill (not a fresh admission): on completion the row is
+    # re-seated and its recorded tokens replayed instead of sampling a
+    # first token; on rollback the request returns to the preempted list
+    resume: bool = False
 
 
 class ServingEngine:
@@ -309,6 +376,7 @@ class ServingEngine:
                  page_size: Optional[int] = None,
                  share_prefix: bool = False,
                  prefill_chunk: Optional[int] = None,
+                 draft: Optional[DraftConfig] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None):
         self.model = model
@@ -351,6 +419,7 @@ class ServingEngine:
         # they keep their rng-derived streams (no serving identity contract)
         decode_params = inspect.signature(model.decode_step).parameters
         self._seeded = "seeds" in decode_params
+        self._has_logits_at = "logits_at" in decode_params
         if self._seeded:
             self._decode = _model_jit(
                 model, "decode_seeded",
@@ -527,6 +596,11 @@ class ServingEngine:
         }
         self._min_seq_extent = min(extents) if extents else max_seq
         self._prefill_buckets: set[int] = set()
+        # ---- self-speculative decode (draft + verify prefix-extend) ----
+        self.draft = draft
+        self._draft_model = None
+        if draft is not None:
+            self._init_draft(draft)
 
     # ------------------------------------------------------------------
     # legacy counter attributes: read-only views over the metrics registry
@@ -793,6 +867,10 @@ class ServingEngine:
         resident for the same (seed, tokens) are mapped instead of
         re-allocated."""
         if self.paged and self._inflight is not None:
+            if self._inflight.resume:
+                # a paused resume re-prefill heads the line; it is advanced
+                # (once per tick) by _resume_preempted, never here
+                return
             # continue the head-of-line admission already mid-prefill; if
             # it pauses again (pool dry) nothing later may admit (FCFS)
             if not self._advance_inflight():
@@ -917,11 +995,12 @@ class ServingEngine:
         self.metrics.inc("chunked_prefills")
 
     def _advance_inflight(self) -> bool:
-        """Run the in-flight admission's remaining chunks, claiming pages
+        """Run the in-flight prefill's remaining chunks, claiming pages
         per chunk.  Pauses (returns False) when the pool is dry — the
         request resumes at the same chunk boundary once pages free up.  On
-        completion the row is seated and the first token sampled; returns
-        True when no admission is left in flight."""
+        completion the row is seated; a fresh admission samples its first
+        token, a resume re-prefill replays its recorded tokens instead.
+        Returns True when nothing is left in flight."""
         inf = self._inflight
         req = inf.req
         p = len(req.prompt)
@@ -933,57 +1012,52 @@ class ServingEngine:
                 fresh = self.pool.alloc(need - len(inf.pages))
                 if fresh is None:
                     self.metrics.inc("prefill_pauses")
-                    self._trace("prefill_pause", uid=req.uid, done=inf.done)
+                    self._trace("prefill_pause", uid=req.uid, done=inf.done,
+                                resume=inf.resume)
                     return False
                 inf.pages.extend(fresh)
-            if c1 <= inf.shared_rows and c1 < p:
+            if c1 <= inf.shared_rows and (c1 < p or inf.resume):
                 # chunk fully covered by shared prefix pages: the K/V is
                 # already resident (content-addressed under RNG contract
-                # v2), and only the final chunk must run for its logits
+                # v2); only a fresh admission's final chunk must run, for
+                # its logits (a resume's first token is already sampled)
                 self.metrics.inc("prefill_chunks_skipped")
                 self._trace("prefill_skip", uid=req.uid, c0=inf.done, c1=c1)
             else:
                 logits = self._run_chunk(
-                    req, inf.done, c1, inf.pages, want_logits=c1 == p
+                    req, inf.done, c1, inf.pages,
+                    want_logits=c1 == p and not inf.resume,
                 )
-                if c1 == p:
+                if c1 == p and not inf.resume:
                     inf.logits = logits
             inf.done = c1
         self._inflight = None
         self.tables.assign(inf.slot, inf.pages)
         self._register_prefix_pages(inf.pages, inf.keys)
-        self._start(inf.slot, req, inf.logits)
+        if inf.resume:
+            self._finish_resume(inf.slot, req)
+        else:
+            self._start(inf.slot, req, inf.logits)
         return True
 
     def _cancel_inflight(self):
-        """Roll an in-flight admission back (running requests outrank it):
-        release every claimed page and requeue the request at the head —
-        it restarts from chunk 0, which cannot change its stream (no token
-        was sampled yet)."""
+        """Roll an in-flight prefill back (running requests outrank it):
+        release every claimed page, then requeue the request at the head
+        (fresh admission — it restarts from chunk 0, which cannot change
+        its stream since no token was sampled yet) or put it back on the
+        preempted list (resume re-prefill — its recorded tokens are
+        intact, so a later resume replays the identical stream)."""
         inf = self._inflight
         self._inflight = None
-        self.queue.appendleft(inf.req)
+        if inf.resume:
+            self._preempted.append(inf.req)
+        else:
+            self.queue.appendleft(inf.req)
         self.metrics.inc("prefill_aborts")
-        self._trace("prefill_abort", uid=inf.req.uid, done=inf.done)
+        self._trace("prefill_abort", uid=inf.req.uid, done=inf.done,
+                    resume=inf.resume)
         if inf.pages:
             self._retire_dead(self.pool.free(inf.pages))
-
-    def _chunked_refill(self, req: Request, pages: list[int],
-                        shared_rows: int):
-        """Resume-path re-prefill straight into preallocated pages: same
-        chunk loop as admission, logits discarded (the first token was
-        sampled at the original admission), shared-resident chunks skipped
-        wholesale."""
-        p = len(req.prompt)
-        c0 = 0
-        while c0 < p:
-            c1 = min(c0 + self.prefill_chunk, p)
-            if c1 <= shared_rows:
-                self.metrics.inc("prefill_chunks_skipped")
-                self._trace("prefill_skip", uid=req.uid, c0=c0, c1=c1)
-            else:
-                self._run_chunk(req, c0, c1, pages, want_logits=False)
-            c0 = c1
 
     # ------------------------------------------------------------------
     # paged scheduling: scatter, growth, preemption, resume-by-replay, CoW
@@ -1031,6 +1105,7 @@ class ServingEngine:
         the request-addressed RNG, so migration cannot change its stream)."""
         req = self.active.pop(slot)
         self._release_pages(slot)
+        self._drop_draft(slot)
         self._last_row[req.uid] = slot
         self._preempted.append(req)
         self.metrics.inc("preemptions")
@@ -1078,17 +1153,20 @@ class ServingEngine:
                     )
                 self.tables.append(slot, page[0])
 
-    def _cow_guard(self):
+    def _cow_guard(self, spec_upto: Optional[dict] = None):
         """Copy-on-write: before a decode tick, every page any active row is
         about to write must be privately owned.
 
         A row's tick writes column ``pos // ps`` of global layers and the
         *rolled* column ``(pos % window_extent) // ps`` of sliding-window
         layers — the latter is how a write lands in a shared prompt-prefix
-        page (window wrap).  Shared pages (refcount > 1) are copied to a
-        fresh page first (byte-identical, so gathers are unchanged); a
-        still-registered page with a single owner just retires its prefix
-        registration, since its content is about to stop matching the key.
+        page (window wrap).  A speculative verify chunk widens the write
+        span: ``spec_upto`` maps slot -> highest position the chunk writes,
+        and every column in [pos, upto] is guarded.  Shared pages
+        (refcount > 1) are copied to a fresh page first (byte-identical, so
+        gathers are unchanged); a still-registered page with a single owner
+        just retires its prefix registration, since its content is about to
+        stop matching the key.
         """
         if not (self.paged and self.share_prefix):
             return
@@ -1098,10 +1176,12 @@ class ServingEngine:
             if not pgs:
                 continue
             pos = int(self.slot_pos[slot])
+            hi = spec_upto.get(slot, pos) if spec_upto else pos
             cols = set()
             for ext in self._slot_extents:
-                r = min(pos, self.max_seq - 1) if ext >= self.max_seq else pos % ext
-                cols.add(r // ps)
+                for p in range(pos, hi + 1):
+                    r = min(p, self.max_seq - 1) if ext >= self.max_seq else p % ext
+                    cols.add(r // ps)
             for col in sorted(cols):
                 if slot not in self.active:
                     break
@@ -1134,21 +1214,25 @@ class ServingEngine:
                     # sole owner about to write: retire the cache entry
                     self._prefix_map.pop(self._page_key.pop(page), None)
 
-    def _sync_tables(self):
+    def _sync_tables(self, spec_upto: Optional[dict] = None):
         """Rebuild the block-table leaves the decode step reads this tick.
 
         Every impl gets a pow2-bucketed span just wide enough for the
-        longest active request: position masking makes all backends —
-        spiking included, since RNG contract v2 keys draws by absolute
-        position — extent-invariant, so the decode computation never
-        materialises a max_seq-extent tensor (recompiles are bounded by
-        log2(pages_per_seq))."""
+        longest active request (widened to the speculative verify span via
+        ``spec_upto``, slot -> highest written position): position masking
+        makes all backends — spiking included, since RNG contract v2 keys
+        draws by absolute position — extent-invariant, so the decode
+        computation never materialises a max_seq-extent tensor (recompiles
+        are bounded by log2(pages_per_seq))."""
         from repro.attention import bucketed_table_width
 
         ps = self.pool.page_size
         rows = 1
         for slot in self.active:
-            rows = max(rows, int(self.slot_pos[slot]) + 1)
+            r = int(self.slot_pos[slot])
+            if spec_upto:
+                r = max(r, spec_upto.get(slot, r))
+            rows = max(rows, r + 1)
         w = bucketed_table_width(rows, ps, self.pages_per_seq)
         if w not in self._table_widths:
             self._table_widths.add(w)
@@ -1198,10 +1282,26 @@ class ServingEngine:
         tick would.  No sampler keys are consumed.
 
         Returns False if the request was itself preempted mid-replay (the
-        CoW guard's page hunt may pick it as a victim): its pages are
-        already released and it is back on the preempted list with its
-        tokens intact, so the caller must not activate it further."""
+        CoW guard's page hunt may pick it as a victim, and a chunked
+        resume's replay region grows from the free list only — when it
+        runs dry the resume re-preempts itself rather than evicting a
+        running request): its pages are already released and it is back on
+        the preempted list with its tokens intact, so the caller must not
+        activate it further."""
+        ps = self.pool.page_size if self.paged else 0
         for tok in req.out_tokens[:-1]:
+            if self.paged:
+                # chunked resumes claim only their prompt pages up front;
+                # the replayed growth region is granted per page here.
+                # Free-list only — a resume must never evict a running
+                # request (the old full-footprint grant never did either)
+                col = min(int(self.slot_pos[slot]), self.max_seq - 1) // ps
+                while not self.tables.has_col(slot, col):
+                    page = self.pool.alloc(1)
+                    if page is None:
+                        self._abort_resume(slot, req)
+                        return False
+                    self.tables.append(slot, page[0])
             tokens = np.zeros((self.b, 1), np.int32)
             for r2, rq2 in self.active.items():
                 if r2 != slot and rq2.out_tokens:
@@ -1216,13 +1316,57 @@ class ServingEngine:
             self.metrics.inc("replay_steps")
         return True
 
+    def _abort_resume(self, slot: int, req: Request):
+        """Re-preempt a resume that ran out of free pages mid-replay: its
+        work is dropped (replay is pure recomputation) and it retries once
+        pages free up, with its recorded tokens — hence its stream —
+        untouched."""
+        del self.active[slot]
+        self._release_pages(slot)
+        self._drop_draft(slot)
+        self._last_row[req.uid] = slot
+        self._preempted.append(req)
+        self.metrics.inc("preemptions")
+        self._trace("preempt", uid=req.uid, row=slot,
+                    tokens=len(req.out_tokens), during_replay=True)
+
+    def _finish_resume(self, slot: int, req: Request):
+        """Seat a re-prefilled request back into a row and replay its
+        recorded tokens (shared tail of the one-shot and chunked resume
+        paths; no token is sampled — the stream is already decided)."""
+        self.active[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self.slot_seeds[slot] = np.uint32(req.seed)
+        self._trace("resume", uid=req.uid, row=slot,
+                    tokens=len(req.out_tokens))
+        prev = self._last_row.pop(req.uid, slot)
+        if slot != prev:
+            self.metrics.inc("migrations")
+            self._trace("migrate", uid=req.uid, row=slot, from_row=prev)
+        if self._replay(slot, req):
+            self.metrics.inc("resumes")
+            self._trace("replay", uid=req.uid, row=slot,
+                        steps=len(req.out_tokens) - 1)
+
     def _resume_preempted(self):
-        """Resume preempted requests (oldest admission first) whose full
-        current footprint fits the pool, into any free row: re-run the
-        bucketed prompt prefill (bit-identical to the original admission),
-        scatter it into fresh pages, then replay the generated tokens."""
+        """Resume preempted requests (oldest admission first) into free
+        rows.  Chunkable prompts route through the same per-chunk
+        claim/pause/rollback machinery as admission (``_ChunkedPrefill``
+        with ``resume=True``): pages are claimed chunk by chunk, a dry
+        pool pauses the re-prefill at a chunk boundary instead of blocking
+        until the full footprint fits, and the replay growth region is
+        granted per page during :meth:`_replay`.  Non-chunkable prompts
+        keep the one-shot path: full current footprint up front, bucketed
+        prefill into a slab row, scatter, replay."""
+        if self._inflight is not None and self._inflight.resume:
+            # continue the head-of-line resume already mid-re-prefill; if
+            # it pauses again nothing later may resume or admit (FCFS)
+            if not self._advance_inflight():
+                return
         if not self._preempted:
             return
+        if self._inflight is not None:
+            return  # a paused *admission* heads the line; resumes wait
         free = self._free_slots()
         for req in sorted(
             list(self._preempted),
@@ -1230,40 +1374,559 @@ class ServingEngine:
         ):
             if not free:
                 break
+            if self._chunkable(req):
+                self._preempted.remove(req)
+                slot = free.pop(0)
+                shared, keys = self._resident_prefix(req)
+                self._claim_shared(shared, req.uid)
+                self._inflight = _ChunkedPrefill(
+                    req, slot, list(shared), keys,
+                    len(shared) * self.pool.page_size, resume=True,
+                )
+                if not self._advance_inflight():
+                    return  # paused: FCFS — nothing may resume past it
+                continue
             rows = min(len(req.prompt) + len(req.out_tokens) - 1,
                        self.max_seq)
             alloc = self._alloc_prompt_pages(req, rows)
             if alloc is None:
                 break  # oldest first: later arrivals keep waiting too
-            pages, keys, n_shared = alloc
+            pages, keys, _ = alloc
             self._preempted.remove(req)
             slot = free.pop(0)
             self.tables.assign(slot, pages)
-            if self._chunkable(req):
-                # chunked re-prefill straight into the granted pages (the
-                # growth-region pages hold the pristine fill until replay
-                # rewrites them, exactly like the scattered slab rows did)
-                self._chunked_refill(
-                    req, pages, n_shared * self.pool.page_size
-                )
-            else:
-                logits, row_cache = self._prefill_row(req)
-                del logits  # first token sampled at original admission
-                self._scatter_row(slot, row_cache)
+            logits, row_cache = self._prefill_row(req)
+            del logits  # first token sampled at original admission
+            self._scatter_row(slot, row_cache)
             self._register_prefix_pages(pages, keys)
-            self.active[slot] = req
-            self.slot_pos[slot] = len(req.prompt)
-            self.slot_seeds[slot] = np.uint32(req.seed)
-            self._trace("resume", uid=req.uid, row=slot,
-                        tokens=len(req.out_tokens))
-            prev = self._last_row.pop(req.uid, slot)
-            if slot != prev:
-                self.metrics.inc("migrations")
-                self._trace("migrate", uid=req.uid, row=slot, from_row=prev)
-            if self._replay(slot, req):
-                self.metrics.inc("resumes")
-                self._trace("replay", uid=req.uid, row=slot,
-                            steps=len(req.out_tokens) - 1)
+            self._finish_resume(slot, req)
+
+    # ------------------------------------------------------------------
+    # self-speculative decode (draft k tokens, verify in ONE prefix-extend)
+    # ------------------------------------------------------------------
+    def _init_draft(self, draft: DraftConfig):
+        """Build the draft model + its private KV state (slab row block or
+        small paged pool) and register the speculative metrics."""
+        if draft.k < 1:
+            raise ValueError(f"DraftConfig.k must be >= 1, got {draft.k}")
+        if not (self._seeded and self._has_logits_at):
+            raise ValueError(
+                "speculative decode requires a model whose decode_step "
+                "accepts seeds= and logits_at= (the verify prefix-extend "
+                "returns logits at every drafted position); this model "
+                "does not"
+            )
+        if self._min_seq_extent < self.max_seq:
+            raise ValueError(
+                "speculative decode is incompatible with sliding-window "
+                "layers: a rejected verify chunk's rolled writes would "
+                "have destroyed window history the re-decode needs "
+                f"(smallest cache extent {self._min_seq_extent} < "
+                f"max_seq {self.max_seq})"
+            )
+        if draft.model is not None:
+            dmodel = draft.model
+        else:
+            cfg = getattr(self.model, "cfg", None)
+            if cfg is None:
+                raise ValueError(
+                    "cannot derive a draft model (target exposes no .cfg); "
+                    "pass DraftConfig(model=..., params=...) explicitly"
+                )
+            from repro.configs import with_overrides
+            from repro.models import build_model
+
+            ov: dict = {}
+            if draft.impl is not None:
+                ov["attention__impl"] = draft.impl
+                ov["attention__backend"] = "auto"
+                if draft.impl == "ann":
+                    # ann has no spike planes; packed storage is ssa-only
+                    ov["attention__spike_storage"] = "dense"
+                if draft.time_steps is not None:
+                    ov["attention__ssa_time_steps"] = int(draft.time_steps)
+            else:
+                if cfg.attention.impl not in ("ssa", "spikformer"):
+                    raise ValueError(
+                        "the reduced-time-step self-draft needs a spiking "
+                        f"target (impl ssa/spikformer), got "
+                        f"{cfg.attention.impl!r}; set DraftConfig.impl or "
+                        "DraftConfig.model instead"
+                    )
+                t = (int(draft.time_steps) if draft.time_steps is not None
+                     else max(1, cfg.attention.ssa_time_steps // 2))
+                ov["attention__ssa_time_steps"] = t
+            # memoise derived drafts on the target model instance: engines
+            # over the same target share the draft's jit cache (tests and
+            # benchmarks build many engines per model)
+            dcache = self.model.__dict__.setdefault("_draft_models", {})
+            dkey = tuple(sorted(ov.items()))
+            if dkey not in dcache:
+                dcache[dkey] = build_model(with_overrides(cfg, **ov))
+            dmodel = dcache[dkey]
+        dparams = inspect.signature(dmodel.decode_step).parameters
+        if "seeds" not in dparams or "logits_at" not in dparams:
+            raise ValueError(
+                "the draft model's decode_step must accept seeds= and "
+                "logits_at= (catch-up runs as a prefix-extend chunk)"
+            )
+        self._draft_model = dmodel
+        self._draft_params = (draft.params if draft.params is not None
+                              else self.params)
+        self.spec_k = int(draft.k)
+        self._draft_decode = _model_jit(
+            dmodel, "decode_seeded",
+            lambda: lambda p, batch, cache, idx, seeds: dmodel.decode_step(
+                p, batch, cache, idx, seeds=seeds
+            ),
+        )
+        self._draft_chunk = _model_jit(
+            dmodel, "chunk",
+            lambda: lambda p, batch, cache, idx, seeds, last:
+                dmodel.decode_step(
+                    p, batch, cache, idx, seeds=seeds, logits_at=last
+                ),
+        )
+        # per-row draft cache frontier: positions [0, _draft_pos) hold valid
+        # draft KV; -1 = cold (no draft state, full catch-up on first use)
+        self._draft_pos = np.full(self.b, -1, np.int32)
+        m = self.metrics
+        for name in ("spec_ticks", "draft_dispatches", "verify_dispatches",
+                     "spec_drafted_tokens", "spec_accepted_tokens",
+                     "spec_rejected_tokens"):
+            m.counter(name)
+        for name in ("accepted_len", "phase_draft_s", "phase_verify_s"):
+            m.histogram(name)
+        self._spec_widths: set = set()          # verify compile signatures
+        self._draft_widths: set[int] = set()    # draft table-width sigs
+        self._draft_chunk_signatures: set = set()
+        if self.paged:
+            from repro.attention import NUM_RESERVED_PAGES
+
+            from .paging import BlockTables, PagePool
+
+            for name in ("draft_pages_granted", "draft_pages_released",
+                         "draft_pages_retired"):
+                m.counter(name)
+            m.gauge("draft_pages_used")
+            ps = self.pool.page_size
+            dn = (draft.num_pages if draft.num_pages is not None
+                  else NUM_RESERVED_PAGES + self.b * self.pages_per_seq)
+            self.draft_pool = PagePool(dn, ps,
+                                       on_event=self._draft_pool_event)
+            self.draft_tables = BlockTables(self.b, self.pages_per_seq)
+            self._draft_cache = dmodel.init_cache(
+                self.b, self.max_seq, layout="paged",
+                num_pages=dn, page_size=ps,
+            )
+        else:
+            self.draft_pool = None
+            self.draft_tables = None
+            self._draft_cache = dmodel.init_cache(self.b, self.max_seq)
+
+    def _draft_pool_event(self, kind: str, **data):
+        """Draft PagePool hook: separate counters, ``pool="draft"`` trace
+        tag (the fuzz invariants filter main-pool accounting on it)."""
+        m = self.metrics
+        if kind == "page_grant":
+            m.inc("draft_pages_granted", len(data["pages"]))
+        elif kind == "page_release":
+            m.inc("draft_pages_released", len(data["pages"]))
+            m.inc("draft_pages_retired", len(data["dead"]))
+        self._trace(kind, pool="draft", **data)
+
+    def _scrub_draft(self, dead: list[int]):
+        """Scrub recycled draft pages to the pristine fill (their next
+        tenant's gather tail must look never-used, exactly as the target
+        pool's :meth:`_retire_dead` guarantees)."""
+        from repro.attention import PAGE_SCRATCH
+
+        if not dead:
+            return
+        padded = np.full((self.pages_per_seq,), PAGE_SCRATCH, np.int32)
+        padded[: len(dead)] = dead
+        self._draft_cache = self._scrub(self._draft_cache, _dev(padded))
+
+    def _drop_draft(self, slot: int):
+        """Forget a row's draft state (preempt / finish / abort): the
+        frontier resets to cold and — paged — its draft pages go home.
+        Draft KV is pure recomputation, so dropping it never affects the
+        committed stream; the row just pays a catch-up chunk next time."""
+        if self._draft_model is None:
+            return
+        self._draft_pos[slot] = -1
+        if self.paged:
+            pages = self.draft_tables.release(slot)
+            if pages:
+                self._scrub_draft(self.draft_pool.free(pages))
+
+    def _sync_draft_tables(self, rows: int):
+        """Rebuild the draft cache's block-table leaves wide enough for
+        ``rows`` written rows (pow2-bucketed like the target's)."""
+        from repro.attention import bucketed_table_width
+
+        ps = self.draft_pool.page_size
+        w = bucketed_table_width(max(rows, 1), ps, self.pages_per_seq)
+        if w not in self._draft_widths:
+            self._draft_widths.add(w)
+            self._compile_event("draft_decode", w)
+        arr = _dev(self.draft_tables.as_array(w))
+        for slot_d in self._draft_cache:
+            steps = slot_d["pos"].shape[0]
+            slot_d["bt"] = jnp.broadcast_to(arr[None], (steps,) + arr.shape)
+
+    def _claim_draft_pages(self, slot: int, rows: int) -> bool:
+        """Grow row ``slot``'s draft allocation to cover ``rows`` written
+        rows — free list only (speculation never preempts).  Returns False
+        (taking nothing extra) when the draft pool is short."""
+        need = pages_for_rows(min(rows, self.max_seq), self.draft_pool.page_size)
+        have = self.draft_tables.num_pages(slot)
+        if need <= have:
+            return True
+        fresh = self.draft_pool.alloc(need - have)
+        if fresh is None:
+            return False
+        if have == 0:
+            self.draft_tables.assign(slot, fresh)
+        else:
+            for p in fresh:
+                self.draft_tables.append(slot, p)
+        return True
+
+    def _draft_catchup(self, slot: int, req: Request):
+        """Advance a row's draft cache frontier to the target's position in
+        one prefix-extend chunk over its already-committed tokens (logits
+        discarded).  RNG contract v2 keys every draw by absolute position,
+        so the chunk writes exactly the rows a token-by-token draft decode
+        would have."""
+        from repro.attention import next_pow2
+
+        p0 = int(self.slot_pos[slot])
+        d0 = max(int(self._draft_pos[slot]), 0)
+        if d0 >= p0:
+            return
+        hist = list(req.prompt) + list(req.out_tokens)
+        s = p0 - d0
+        sb = min(next_pow2(s), self.max_seq)
+        tokens = np.zeros((self.b, sb), np.int32)
+        positions = np.full((self.b, sb), -1, np.int32)
+        tokens[slot, :s] = hist[d0:p0]
+        positions[slot, :s] = np.arange(d0, p0, dtype=np.int32)
+        # non-participating rows write at their first *stale* draft offset
+        # (the width-1 write path has no pad-drop; wider chunks sink pads
+        # to scratch / drop them, so this only matters when sb == 1)
+        idx = np.clip(self._draft_pos, 0, self.max_seq - 1).astype(np.int32)
+        idx[slot] = d0
+        if self.paged:
+            self._sync_draft_tables(max(p0, int(idx.max()) + 1))
+            tw = self._draft_cache[0]["bt"].shape[-1]
+        else:
+            tw = 0
+        sig = (sb, tw)
+        if sig not in self._draft_chunk_signatures:
+            self._draft_chunk_signatures.add(sig)
+            self._compile_event("draft_catchup", sig)
+        batch = {"tokens": _dev(tokens), "positions": _dev(positions)}
+        ctx = (annotate("repro/draft_dispatch")
+               if self.tracer is not None else _NULL_CTX)
+        with ctx:
+            logits, self._draft_cache = self._draft_chunk(
+                self._draft_params, batch, self._draft_cache, _dev(idx),
+                _dev(self.slot_seeds), jnp.asarray(0, jnp.int32),
+            )
+        del logits
+        self.metrics.inc("draft_dispatches")
+        self._draft_pos[slot] = p0
+
+    def _spec_draft(self, k_row: np.ndarray) -> dict:
+        """Propose up to ``k_row[slot]`` draft tokens per active row with
+        greedy token-by-token draft decode; returns {slot: [tokens]}.
+
+        Rows whose draft-page claim comes up short draft fewer (or zero)
+        tokens this tick — speculation never preempts anyone.  The verify
+        + correction token still advances every row, so a starved tick
+        degrades to plain decode, not a stall."""
+        proposals: dict[int, list[int]] = {}
+        live: dict[int, int] = {}       # slot -> last fed token
+        catchups = 0
+        for slot in sorted(self.active):
+            if k_row[slot] <= 0:
+                k_row[slot] = 0
+                continue
+            req = self.active[slot]
+            p0 = int(self.slot_pos[slot])
+            if self.paged and not self._claim_draft_pages(
+                    slot, p0 + int(k_row[slot])):
+                fit = (self.draft_tables.num_pages(slot)
+                       * self.draft_pool.page_size - p0)
+                k_row[slot] = max(0, min(int(k_row[slot]), fit))
+                if k_row[slot] == 0:
+                    continue
+            if int(self._draft_pos[slot]) < p0:
+                catchups += 1
+                self._draft_catchup(slot, req)
+            live[slot] = req.out_tokens[-1]
+            proposals[slot] = []
+        kmax = max((int(k_row[s]) for s in live), default=0)
+        for i in range(kmax):
+            rows = [s for s in live if int(k_row[s]) > i]
+            if not rows:
+                break
+            tokens = np.zeros((self.b, 1), np.int32)
+            positions = np.full((self.b, 1), -1, np.int32)
+            idx = np.clip(self._draft_pos, 0, self.max_seq - 1).astype(
+                np.int32)
+            for s in live:
+                p0_s = int(self.slot_pos[s])
+                if int(k_row[s]) > i:
+                    tokens[s, 0] = live[s] if i == 0 else proposals[s][-1]
+                    positions[s, 0] = idx[s] = p0_s + i
+                else:
+                    idx[s] = p0_s + int(k_row[s])   # first stale offset
+            if self.paged:
+                self._sync_draft_tables(int(idx.max()) + 1)
+            batch = {"tokens": _dev(tokens), "positions": _dev(positions)}
+            ctx = (annotate("repro/draft_dispatch")
+                   if self.tracer is not None else _NULL_CTX)
+            with ctx:
+                logits, self._draft_cache = self._draft_decode(
+                    self._draft_params, batch, self._draft_cache,
+                    _dev(idx), _dev(self.slot_seeds),
+                )
+            self.metrics.inc("draft_dispatches")
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for s in rows:
+                proposals[s].append(int(nxt[s]))
+                self._draft_pos[s] = int(self.slot_pos[s]) + i + 1
+        proposed = sum(len(v) for v in proposals.values())
+        self.metrics.inc("spec_drafted_tokens", proposed)
+        self._trace(
+            "draft", proposed=proposed, catchups=catchups,
+            rows=sorted([s, len(proposals.get(s, ()))] for s in self.active),
+        )
+        return {s: v for s, v in proposals.items() if v}
+
+    def _spec_stage(self, proposals: dict):
+        """Grow the target's pages over each row's speculative span (free
+        list only — on a dry pool the row's proposal is truncated to what
+        its pages can hold), run the CoW guard + table sync over the
+        widened write span, and build the verify chunk's host arrays.
+
+        Token ``j`` of row ``slot``'s chunk is the last committed token
+        (j=0) followed by its draft proposals, at positions ``p0..p0+k`` —
+        the verify prefix-extend writes their KV and returns logits at
+        every position, so ``logits[:, j]`` scores position ``p0+j+1``'s
+        token under the *target* model."""
+        if self.paged:
+            ps = self.pool.page_size
+            for slot in sorted(proposals):
+                p0 = int(self.slot_pos[slot])
+                while proposals[slot]:
+                    col = (p0 + len(proposals[slot])) // ps
+                    if self.tables.has_col(slot, col):
+                        break
+                    page = self.pool.alloc(1)
+                    if page is None:
+                        fit = self.tables.num_pages(slot) * ps - 1 - p0
+                        del proposals[slot][max(0, fit):]
+                        continue
+                    self.tables.append(slot, page[0])
+                if not proposals[slot]:
+                    del proposals[slot]
+            upto = {
+                s: int(self.slot_pos[s]) + len(proposals.get(s, ()))
+                for s in self.active
+            }
+            self._cow_guard(upto)
+            # the CoW page hunt may have preempted proposal rows
+            for s in list(proposals):
+                if s not in self.active:
+                    del proposals[s]
+            self._sync_tables(upto)
+        width = 1 + max((len(v) for v in proposals.values()), default=0)
+        tokens = np.zeros((self.b, width), np.int32)
+        positions = np.full((self.b, width), -1, np.int32)
+        idx = self.slot_pos.astype(np.int32).copy()
+        for slot, req in self.active.items():
+            row = [req.out_tokens[-1]] + proposals.get(slot, [])
+            p0 = int(self.slot_pos[slot])
+            tokens[slot, : len(row)] = row
+            positions[slot, : len(row)] = np.arange(
+                p0, p0 + len(row), dtype=np.int32
+            )
+            idx[slot] = p0
+        return width, tokens, positions, idx
+
+    def _spec_verify(self, width, tokens, positions, idx):
+        """One target prefix-extend over every row's ``[last committed,
+        drafts...]`` chunk; returns ``(B, width, V)`` logits."""
+        tw = self.cache[0]["bt"].shape[-1] if self.paged else 0
+        if width > 1:
+            # width == 1 is the plain decode signature _sync_tables tracks
+            sig = (width, tw)
+            if sig not in self._spec_widths:
+                self._spec_widths.add(sig)
+                self._compile_event("verify", sig)
+        self._trace("verify", width=width, active=len(self.active))
+        batch = {"tokens": _dev(tokens), "positions": _dev(positions)}
+        ctx = (annotate("repro/verify_dispatch")
+               if self.tracer is not None else _NULL_CTX)
+        with ctx:
+            logits, self.cache = self._decode(
+                self.params, batch, self.cache, _dev(idx),
+                _dev(self.slot_seeds),
+            )
+        self.metrics.inc("verify_dispatches")
+        return logits
+
+    def _rewind_spec(self, slot: int, p0: int, drafted: int):
+        """Roll back the rejected suffix of a row's speculative span.
+
+        The *target* cache needs no data rewind: every stale entry beyond
+        the new ``slot_pos`` stores its own position, so queries below it
+        mask it out, and the genuine decode of a rewound position rewrites
+        its row before anything attends (write-before-attend) — RNG
+        contract v2 makes that re-decode bit-identical.  Only the paged
+        block-table *extents* roll back so unbacked tail pages return to
+        the pool.  The draft frontier drops to the last position whose
+        draft KV still matches the committed stream."""
+        pos = int(self.slot_pos[slot])
+        cur = int(self._draft_pos[slot])
+        if cur >= 0:
+            self._draft_pos[slot] = min(cur, pos, p0 + drafted)
+        if not self.paged:
+            return
+        ps = self.pool.page_size
+        tail = self.tables.truncate(slot, pos // ps + 1)
+        if tail:
+            self._retire_dead(self.pool.free(tail))
+        d = int(self._draft_pos[slot])
+        if d >= 0 and self.draft_tables.num_pages(slot):
+            dtail = self.draft_tables.truncate(slot, d // ps + 1)
+            if dtail:
+                self._scrub_draft(self.draft_pool.free(dtail))
+
+    def _spec_commit(self, proposals: dict, width: int, logits):
+        """Accept the longest draft prefix the target's sampler agrees
+        with, commit it plus one correction/bonus token, rewind the rest.
+
+        One sampler key per tick (as in plain decode), folded per chunk
+        position: ``cand[:, j]`` is the token the target would sample at
+        position ``p0+j+1``.  Greedy ignores the key entirely, so the
+        committed stream is token-identical to non-speculative decode;
+        keyed samplers commit only sampler draws from target logits
+        (distribution-exact), with a different key schedule."""
+        m = self.metrics
+        self.key, sub = jax.random.split(self.key)
+        cand = np.stack(
+            [np.asarray(self.sampler(jax.random.fold_in(sub, j),
+                                     logits[:, j]))
+             for j in range(width)],
+            axis=1,
+        )
+        now = time.perf_counter()
+        tick = self._ticks.value
+        finished: list[Request] = []
+        for slot, req in list(self.active.items()):
+            p0 = int(self.slot_pos[slot])
+            props = proposals.get(slot, [])
+            kr = len(props)
+            accepted = 0
+            committed: list[int] = []
+            for j in range(kr + 1):
+                tok = int(cand[slot, j])
+                committed.append(tok)
+                if j < kr and props[j] == tok:
+                    accepted += 1
+                else:
+                    break
+            rejected = kr - accepted
+            if kr:  # rows that drafted nothing just ran a plain decode
+                m.observe("accepted_len", accepted)
+                m.inc("spec_accepted_tokens", accepted)
+                self._trace("accept", uid=req.uid, row=slot, drafted=kr,
+                            accepted=accepted, committed=len(committed))
+            if rejected:
+                m.inc("spec_rejected_tokens", rejected)
+                self._trace("reject", uid=req.uid, row=slot,
+                            rejected=rejected, at=p0 + accepted + 1)
+            reason = None
+            for tok in committed:
+                req.out_tokens.append(tok)
+                m.inc("tokens_sampled")
+                last = self._last_token.get(id(req))
+                if last is not None:
+                    m.observe("intertoken_ticks", tick - last[0])
+                    m.observe("intertoken_wall_s", now - last[1])
+                self._last_token[id(req)] = (tick, now)
+                self.slot_pos[slot] += 1
+                if tok in req.eos_ids():
+                    reason = "eos"
+                elif len(req.out_tokens) >= req.max_new_tokens:
+                    reason = "max_new_tokens"
+                elif self.slot_pos[slot] >= self.max_seq - 1:
+                    reason = "max_seq"
+                if reason is not None:
+                    break  # later tokens were never generated (identity)
+            if reason is None:
+                self._rewind_spec(slot, p0, kr)
+                continue
+            req.done = True
+            finished.append(req)
+            del self.active[slot]
+            self._drop_draft(slot)
+            self._last_token.pop(id(req), None)
+            m.inc("requests_finished")
+            if self.paged:
+                self._release_pages(slot)
+                self._admit_order.pop(req.uid, None)
+                self._last_row.pop(req.uid, None)
+            self._trace("finish", uid=req.uid, row=slot,
+                        tokens=len(req.out_tokens), reason=reason)
+        m.inc("spec_ticks")
+        return finished
+
+    def _spec_tick(self) -> list[Request]:
+        """One speculative engine tick: draft up to k tokens per row, one
+        verify prefix-extend, longest-accepted-prefix commit + rewind."""
+        m = self.metrics
+        k_row = np.zeros(self.b, np.int32)
+        for slot, req in self.active.items():
+            p0 = int(self.slot_pos[slot])
+            k_row[slot] = max(0, min(
+                self.spec_k,
+                req.max_new_tokens - len(req.out_tokens) - 1,
+                self.max_seq - 1 - p0,
+            ))
+        with self._phase("draft"):
+            proposals = self._spec_draft(k_row)
+        if self.paged:
+            m.gauge("draft_pages_used").set(self.draft_pool.num_used)
+        with self._phase("host_stage"):
+            width, tokens, positions, idx = self._spec_stage(proposals)
+        if not self.active:
+            return []  # the CoW page hunt preempted every row
+        if self.paged:
+            m.gauge("pages_used").set(self.pool.num_used)
+        if self.tracer is not None:
+            data = {
+                "active": len(self.active),
+                "rows": sorted([s, r.uid] for s, r in self.active.items()),
+                "width": width,
+            }
+            if self.paged:
+                data["pages_used"] = self.pool.num_used
+            self._trace("decode_tick", **data)
+        with self._phase("verify"):
+            logits = self._spec_verify(width, tokens, positions, idx)
+        tr = self.tracer
+        if tr is not None and tr.sync_device:
+            with self._phase("device_sync"):
+                jax.block_until_ready(logits)
+        with self._phase("sample"):
+            self._ticks.inc()
+            finished = self._spec_commit(proposals, width, logits)
+        return finished
 
     # ------------------------------------------------------------------
     @property
@@ -1304,8 +1967,11 @@ class ServingEngine:
             self._admit()
             if self.active and self.paged:
                 self._grow_pages()
-                self._cow_guard()
-                self._sync_tables()
+                if self._draft_model is None:
+                    # spec ticks rerun the guard + sync over the widened
+                    # speculative write span inside _spec_stage
+                    self._cow_guard()
+                    self._sync_tables()
                 m.gauge("pages_used").set(self.pool.num_used)
         if not self.active:
             return []
@@ -1314,6 +1980,8 @@ class ServingEngine:
             self.pool.num_used / max(self.pool.num_usable, 1)
             if self.paged else len(self.active) / max(self.b, 1)
         )
+        if self._draft_model is not None:
+            return self._spec_tick()
         with self._phase("host_stage"):
             tokens = np.zeros((self.b, 1), np.int32)
             for slot, req in self.active.items():
@@ -1420,6 +2088,24 @@ class ServingEngine:
             "tokens_sampled": c("tokens_sampled").value,
             "compile_events": c("compile_events").value,
         }
+        if self._draft_model is not None:
+            out.update(
+                spec_k=self.spec_k,
+                spec_ticks=c("spec_ticks").value,
+                draft_dispatches=c("draft_dispatches").value,
+                verify_dispatches=c("verify_dispatches").value,
+                spec_drafted_tokens=c("spec_drafted_tokens").value,
+                spec_accepted_tokens=c("spec_accepted_tokens").value,
+                spec_rejected_tokens=c("spec_rejected_tokens").value,
+            )
+            if self.paged:
+                out.update(
+                    draft_num_pages=self.draft_pool.num_pages,
+                    draft_pages_used=self.draft_pool.num_used,
+                    draft_pages_granted=c("draft_pages_granted").value,
+                    draft_pages_released=c("draft_pages_released").value,
+                    draft_pages_retired=c("draft_pages_retired").value,
+                )
         if not self.paged:
             out["occupancy"] = len(self.active) / max(self.b, 1)
             return out

@@ -176,6 +176,19 @@ class BlockTables:
     def release(self, row: int) -> list[int]:
         return self.pages.pop(row, [])
 
+    def truncate(self, row: int, ncols: int) -> list[int]:
+        """Drop a row's columns beyond the first ``ncols``; returns the
+        removed page ids (speculative-decode rewind: pages backing a
+        rejected draft suffix roll back to the pool — the caller frees and
+        scrubs them).  A no-op (empty list) when the row holds ``ncols``
+        pages or fewer, or no allocation at all."""
+        pgs = self.pages.get(row)
+        if not pgs or len(pgs) <= ncols:
+            return []
+        tail = pgs[ncols:]
+        del pgs[ncols:]
+        return tail
+
     def reference_counts(self) -> collections.Counter:
         """``Counter`` of page ids over every row's table — with the
         engine's in-flight chunked-admission pages added on top, this must

@@ -20,6 +20,7 @@ import pytest
 from repro.attention import NUM_RESERVED_PAGES
 from repro.configs import get_smoke_config
 from repro.models import build_model
+from repro.obs import Tracer
 from repro.serving import Request, ServingEngine
 
 
@@ -261,6 +262,42 @@ def test_preempt_during_prefill_rolls_back_and_retries_bit_identically():
     # the long request's prefill was in flight across ticks before the abort
     assert any(s is not None for s in slots_seen)
     # pool hygiene after the rollback dance
+    assert eng.pool.num_used == 0 and not eng.tables.pages
+
+
+def test_resume_pauses_at_chunk_boundary_when_pool_runs_dry():
+    """A preempted request's re-prefill routes through the same per-chunk
+    claim/pause/rollback machinery as admission: when the pool runs dry
+    mid-resume, the resume pauses at a chunk boundary (instead of
+    blocking until its full footprint fits) and completes as pages free —
+    with its stream bit-identical to an ample-pool run."""
+    cfg, model, params = _model_and_params(
+        "codeqwen15_7b", "ssa", "dense", "paged"
+    )
+    prompts = _prompts(cfg.vocab_size, [8, 24], seed=11)
+
+    def run(**kw):
+        tracer = Tracer()
+        eng = ServingEngine(
+            model, params, num_slots=2, max_seq=32, page_size=8,
+            prefill_chunk=8, tracer=tracer, **kw,
+        )
+        reqs = [
+            Request(uid=0, prompt=prompts[0].copy(), max_new_tokens=20),
+            Request(uid=1, prompt=prompts[1].copy(), max_new_tokens=6),
+        ]
+        _drive(eng, reqs, [0, 0])
+        return [r.out_tokens for r in reqs], eng, tracer
+
+    s_ref, _, _ = run()
+    s, eng, tracer = run(num_pages=NUM_RESERVED_PAGES + 5)
+    assert s == s_ref
+    assert eng.preemptions >= 1 and eng.resumes >= 1
+    pauses = [e for e in tracer.events("prefill_pause")
+              if e.data.get("resume")]
+    assert pauses, "no resume ever paused mid-re-prefill"
+    # a paused resume keeps partial progress: done > 0 at pause time
+    assert any(e.data["done"] > 0 for e in pauses)
     assert eng.pool.num_used == 0 and not eng.tables.pages
 
 

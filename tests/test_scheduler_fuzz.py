@@ -32,7 +32,7 @@ from repro.attention import NUM_RESERVED_PAGES
 from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.obs import Tracer
-from repro.serving import PagePool, Request, ServingEngine
+from repro.serving import DraftConfig, PagePool, Request, ServingEngine
 
 from conftest import hypothesis_or_stubs
 
@@ -106,11 +106,41 @@ def _check_invariants(eng, prev_stats):
         - stats["pages_released"]
     )
     assert outstanding == sum(refcounts.values()), (stats, refcounts)
+    if getattr(eng, "_draft_model", None) is not None:
+        _check_draft_invariants(eng, stats, prev_stats)
     return stats
 
 
+def _check_draft_invariants(eng, stats, prev_stats):
+    """Speculative engines: the draft pool obeys the same conservation laws
+    as the main pool — never shared, never leaked past a preemption or
+    rewind, extents always backed."""
+    dpool, dtables = eng.draft_pool, eng.draft_tables
+    drefs = dtables.reference_counts()
+    dref_counts = dpool.refcounts()
+    assert all(p >= NUM_RESERVED_PAGES for p in drefs)
+    assert dict(drefs) == dref_counts, (drefs, dref_counts)
+    assert dpool.num_free + len(dref_counts) == dpool.num_usable
+    assert dpool.free_pages().isdisjoint(drefs)
+    # draft pages are private: no sharing machinery touches this pool
+    assert all(c == 1 for c in dref_counts.values())
+    # preempted / finished rows never keep draft pages or draft state
+    assert set(dtables.pages) <= set(eng.active)
+    for slot in range(eng.b):
+        if slot not in eng.active:
+            assert eng._draft_pos[slot] == -1, slot
+    for key in ("spec_ticks", "draft_dispatches", "verify_dispatches",
+                "spec_drafted_tokens", "spec_accepted_tokens",
+                "spec_rejected_tokens", "draft_pages_granted",
+                "draft_pages_released", "draft_pages_retired"):
+        assert stats[key] >= prev_stats.get(key, 0), key
+    assert (stats["draft_pages_granted"] - stats["draft_pages_released"]
+            == sum(dref_counts.values()))
+
+
 def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
-                  share=False, chunked=True, prefix_len=0, rng_seed=0):
+                  share=False, chunked=True, prefix_len=0, rng_seed=0,
+                  draft=None):
     """Drive one schedule through a tight paged engine, checking the full
     invariant set after every step; returns the drained engine."""
     cfg, model, params = _model_and_params()
@@ -129,7 +159,7 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
         model, params, num_slots=slots, max_seq=32, page_size=8,
         num_pages=NUM_RESERVED_PAGES + usable,
         share_prefix=share, prefill_chunk=8 if chunked else 0,
-        tracer=tracer,
+        draft=draft, tracer=tracer,
     )
     done, tick, i, stats = [], 0, 0, {}
     while i < len(order) or eng.has_pending_work:
@@ -152,8 +182,18 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
     assert tracer.events_dropped == 0
     granted = Counter()
     retired = Counter()
+    draft_granted = Counter()
+    draft_retired = Counter()
     shares = 0
     for ev in tracer.events():
+        if ev.data.get("pool") == "draft":
+            # the draft pool keeps its own books (no sharing, ever)
+            assert ev.kind in ("page_grant", "page_release")
+            if ev.kind == "page_grant":
+                draft_granted.update(ev.data["pages"])
+            else:
+                draft_retired.update(ev.data["dead"])
+            continue
         if ev.kind == "page_grant":
             granted.update(ev.data["pages"])
         elif ev.kind == "page_release":
@@ -161,6 +201,12 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
         elif ev.kind == "page_share":
             shares += 1
     assert granted == retired, (granted, retired)
+    assert draft_granted == draft_retired, (draft_granted, draft_retired)
+    if draft is not None:
+        assert eng.draft_pool.num_used == 0 and not eng.draft_tables.pages
+        stats_d = eng.stats()
+        assert stats_d["draft_pages_granted"] == sum(draft_granted.values())
+        assert stats_d["draft_pages_retired"] == sum(draft_retired.values())
     stats = eng.stats()
     assert stats["pages_granted"] == sum(granted.values())
     assert stats["pages_retired"] == sum(retired.values())
@@ -190,6 +236,24 @@ def test_invariants_with_sharing_and_preemption_fixed():
                         share=True, prefix_len=16, rng_seed=3)
     assert eng.shared_page_hits >= 2
     assert eng.preemptions >= 1
+
+
+def test_invariants_with_speculation_fixed():
+    """Speculative rows squeezed by a pool too small for their combined
+    growth: drafts are proposed, rows are preempted mid-draft (dropping
+    draft state and pages), resumed, and re-drafted — draft-pool
+    conservation and rewind bookkeeping checked after every tick."""
+    eng = _run_scenario(
+        lengths=[4, 6, 5], arrivals=[0, 0, 1], max_new=[14, 12, 10],
+        usable=5, slots=3, rng_seed=7,
+        draft=DraftConfig(k=2, time_steps=1,
+                          num_pages=NUM_RESERVED_PAGES + 4),
+    )
+    stats = eng.stats()
+    # speculation actually engaged, and pressure actually hit mid-draft
+    assert stats["spec_drafted_tokens"] > 0
+    assert stats["draft_pages_granted"] > 0
+    assert eng.preemptions >= 1 and eng.resumes >= 1
 
 
 def test_invariants_unchunked_fixed():

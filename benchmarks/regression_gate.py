@@ -1,13 +1,15 @@
 """Perf-trajectory regression gate over the deterministic compare benches.
 
 Re-runs the fully deterministic comparison benchmarks
-(``--compare-backends``, ``--compare-paging`` and ``--compare-spec`` from
-``benchmarks/run.py``) and diffs the result against the committed
-``benchmarks/BENCH_baseline.json``:
+(``--compare-backends``, ``--compare-paging``, ``--compare-sharing`` and
+``--compare-spec`` from ``benchmarks/run.py``) and diffs the result
+against the committed ``benchmarks/BENCH_baseline.json``:
 
 * **Deterministic fields block.**  Cache bytes, modeled bytes moved,
   scheduler counters (requests / tokens / ticks / preemptions /
   queue-wait), achieved concurrency, the paged-vs-slab ratios, the
+  prefix-cache counters (inserts / hits / misses / evictions / resident
+  pages and the cached-vs-shared prefill-dispatch reduction), the
   speculative-decode acceptance statistics (accept rate, target
   dispatches per committed token), and the per-engine trace-event totals
   are pure functions of the code — any drift is a real behavioural
@@ -40,11 +42,38 @@ import time
 _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(_HERE, "BENCH_baseline.json")
 
-SCHEMA = 2
+SCHEMA = 3
 
 # exact-match (blocking) fields
 DET_BACKEND = ("cache_bytes", "modeled_bytes_moved_per_layer", "batch", "n_ctx")
 DET_PAGING_TOP = ("page_size", "trace", "concurrency_gain", "kv_bytes_ratio")
+DET_SHARING_TOP = (
+    "trace",
+    "pool",
+    "streams_identical",
+    "page_savings",
+    "cache_hit_rate",
+    "prefill_dispatch_reduction",
+)
+DET_SHARING_ENGINE = (
+    "requests",
+    "tokens",
+    "ticks",
+    "peak_pages_used",
+    "achieved_concurrency",
+    "queue_wait_ticks",
+    "preemptions",
+    "shared_page_hits",
+    "cow_copies",
+    "prefill_chunks_run",
+    "prefill_chunks_skipped",
+    "cache_inserts",
+    "cache_hits",
+    "cache_misses",
+    "cache_evictions",
+    "cached_pages_now",
+    "events",
+)
 DET_PAGING_ENGINE = (
     "kv_bytes_allocated",
     "decode_rows",
@@ -80,6 +109,7 @@ DET_SPEC_ENGINE = (
 # host-dependent (tolerance-band) fields
 TIMING_BACKEND = ("decode_us",)
 TIMING_PAGING_ENGINE = ("tokens_per_sec",)
+TIMING_SHARING_ENGINE = ("tokens_per_sec",)
 TIMING_SPEC_ENGINE = ("tokens_per_sec",)
 
 
@@ -93,6 +123,9 @@ def collect() -> dict:
         )
         paging_rec = bench.bench_paging_compare(
             record_path=os.path.join(td, "paging.json")
+        )
+        sharing_rec = bench.bench_sharing_compare(
+            record_path=os.path.join(td, "sharing.json")
         )
         spec_rec = bench.bench_spec_compare(
             record_path=os.path.join(td, "spec.json")
@@ -109,6 +142,13 @@ def collect() -> dict:
         }
         for name, eng in paging_rec["engines"].items()
     }
+    sharing = {k: sharing_rec[k] for k in DET_SHARING_TOP}
+    sharing["engines"] = {
+        name: {
+            k: eng[k] for k in (*DET_SHARING_ENGINE, *TIMING_SHARING_ENGINE)
+        }
+        for name, eng in sharing_rec["engines"].items()
+    }
     spec = {k: spec_rec[k] for k in DET_SPEC_TOP}
     spec["engines"] = {
         name: {
@@ -121,6 +161,7 @@ def collect() -> dict:
         "interpret_mode": interpret,
         "backends": backends,
         "paging": paging,
+        "sharing": sharing,
         "spec": spec,
     }
 
@@ -190,6 +231,24 @@ def diff(
         for k in TIMING_PAGING_ENGINE:
             _cmp_timing(
                 f"paging.engines.{name}.{k}",
+                b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
+            )
+
+    b_shr, c_shr = baseline.get("sharing", {}), candidate.get("sharing", {})
+    for k in DET_SHARING_TOP:
+        _cmp_exact(f"sharing.{k}", b_shr.get(k), c_shr.get(k), blocking)
+    b_eng = b_shr.get("engines", {})
+    c_eng = c_shr.get("engines", {})
+    _cmp_exact("sharing.engines.keys", sorted(b_eng), sorted(c_eng), blocking)
+    for name in sorted(set(b_eng) & set(c_eng)):
+        for k in DET_SHARING_ENGINE:
+            _cmp_exact(
+                f"sharing.engines.{name}.{k}",
+                b_eng[name].get(k), c_eng[name].get(k), blocking,
+            )
+        for k in TIMING_SHARING_ENGINE:
+            _cmp_timing(
+                f"sharing.engines.{name}.{k}",
                 b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
             )
 

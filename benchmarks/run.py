@@ -17,10 +17,12 @@ engine and through a paged engine holding the *same pool bytes* but more
 decode rows, and writes kv bytes allocated / achieved concurrency /
 tokens-per-sec / preemption counters to ``benchmarks/BENCH_paging.json``.
 
-``--compare-sharing`` serves a bursty trace whose requests share a system
-prompt through the same tight paged pool with prefix sharing off and on,
-and writes physical-page savings / achieved concurrency / queue-wait
-deltas to ``benchmarks/BENCH_sharing.json``.
+``--compare-sharing`` serves a bursty multi-tenant trace (Zipf-skewed
+tenant popularity, drain-separated arrival waves) through unshared,
+CoW-shared, and persistently-cached paged engines holding the same tight
+pool, and writes prefill-dispatch counts, cache hit/eviction counters and
+the cached-vs-shared dispatch reduction to
+``benchmarks/BENCH_sharing.json``.
 
 ``--compare-prefill`` serves an over-long prompt through a paged engine
 with one-shot (slab-staged) vs chunked (direct-to-page) prefill and writes
@@ -660,16 +662,30 @@ def bench_prefill_compare(record_path: str | None = None):
 
 
 def bench_sharing_compare(record_path: str | None = None):
-    """Prefix sharing on vs off over one bursty shared-system-prompt trace
-    (smoke SSA model, packed storage + paged cache, CPU).
+    """Prefix sharing and the persistent prefix cache over one bursty
+    multi-tenant trace (smoke SSA model, packed storage + paged cache,
+    CPU).
 
-    Every request carries the same 16-token system prompt plus a short
-    random suffix — the chat-serving shape prefix sharing targets.  Both
-    engines hold the same (deliberately tight) page pool; the shared run
-    maps the prompt's full pages once per (seed, tokens) key instead of
-    once per request, so the comparison reports physical-page peaks,
-    achieved concurrency and queue wait, and writes
-    ``benchmarks/BENCH_sharing.json``.
+    Four tenants each pin a distinct 16-token system prompt; request
+    popularity is Zipf-skewed across tenants (the hot tenant dominates)
+    and requests arrive in waves separated by idle gaps long enough for
+    every wave to drain — the shape where plain live-owner sharing buys
+    nothing *across* waves because the last owner's pages are scrubbed on
+    release.  Three engines serve the identical trace from identical
+    pools:
+
+    * ``unshared`` — every request prefills its own pages;
+    * ``shared``   — live CoW prefix sharing only (skips chunks within a
+      wave, re-prefills every wave);
+    * ``cached``   — sharing plus a persistent cache tier that parks
+      refcount-0 prefix pages between waves, so later waves revive hot
+      tenants' pages instead of re-running their prefill chunks.
+
+    Greedy token streams are asserted bit-identical across all three.
+    The record (``benchmarks/BENCH_sharing.json``) carries the prefill
+    dispatch counts, cache hit/miss/eviction counters, the cache hit rate
+    and the headline ``prefill_dispatch_reduction`` of cached vs shared,
+    plus per-engine trace-event totals for the regression gate.
     """
     import jax
     import numpy as np
@@ -681,6 +697,8 @@ def bench_sharing_compare(record_path: str | None = None):
 
     slots, max_seq, page_size = 6, 64, 8
     num_pages = NUM_RESERVED_PAGES + 14   # tight: forces queueing unshared
+    cache_pages = 6   # < 4 tenants * 2 prefix pages: cold tenants evict
+    n_tenants, waves, per_wave = 4, 3, 6
     cfg = with_overrides(
         get_smoke_config("codeqwen15_7b"),
         attention__impl="ssa",
@@ -690,24 +708,31 @@ def bench_sharing_compare(record_path: str | None = None):
 
     def trace():
         rng = np.random.default_rng(0)
-        system = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
-        reqs, arrivals = [], []
-        uid = 0
-        for tick in (0, 3, 6):
-            for _ in range(6):
+        systems = [
+            rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+            for _ in range(n_tenants)
+        ]
+        # Zipf popularity over tenants: p(rank) ~ 1 / rank^1.2
+        p = 1.0 / np.arange(1, n_tenants + 1) ** 1.2
+        p /= p.sum()
+        burst, uid = [], 0
+        for _ in range(waves):
+            wave = []
+            for _ in range(per_wave):
+                tenant = int(rng.choice(n_tenants, p=p))
                 suffix = rng.integers(
                     0, cfg.vocab_size, int(rng.integers(3, 9))
                 ).astype(np.int32)
-                reqs.append(
+                wave.append(
                     Request(
                         uid=uid,
-                        prompt=np.concatenate([system, suffix]),
+                        prompt=np.concatenate([systems[tenant], suffix]),
                         max_new_tokens=int(rng.integers(4, 10)),
                     )
                 )
-                arrivals.append(tick)
                 uid += 1
-        return reqs, arrivals
+            burst.append(wave)
+        return burst
 
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -715,27 +740,35 @@ def bench_sharing_compare(record_path: str | None = None):
         record_path = os.path.join(
             os.path.dirname(os.path.abspath(__file__)), "BENCH_sharing.json"
         )
-    results = {}
-    for name, share in (("unshared", False), ("shared", True)):
-        tracer = _make_tracer()
+    variants = (
+        ("unshared", dict(share_prefix=False)),
+        ("shared", dict(share_prefix=True)),
+        ("cached", dict(share_prefix=True, prefix_cache_pages=cache_pages)),
+    )
+    results, streams = {}, {}
+    for name, kw in variants:
+        tracer = _make_tracer(always=True)
         eng = ServingEngine(
             model, params, num_slots=slots, max_seq=max_seq,
-            page_size=page_size, num_pages=num_pages, share_prefix=share,
-            tracer=tracer,
+            page_size=page_size, num_pages=num_pages, tracer=tracer, **kw,
         )
-        reqs, arrivals = trace()
+        burst = trace()
         t0 = time.perf_counter()
-        done, tick, i = [], 0, 0
-        while i < len(reqs) or eng.has_pending_work:
-            while i < len(reqs) and arrivals[i] <= tick:
-                eng.submit(reqs[i])
-                i += 1
-            done.extend(eng.step())
-            tick += 1
-            assert tick < 2000
+        done, tick = [], 0
+        for wave in burst:
+            for req in wave:
+                eng.submit(req)
+            # idle gap until the wave drains: the persistent-cache case
+            while eng.has_pending_work:
+                done.extend(eng.step())
+                tick += 1
+                assert tick < 2000
         wall = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in done)
         stats = eng.stats()
+        streams[name] = {
+            r.uid: [int(t) for t in r.out_tokens] for r in done
+        }
         results[name] = {
             "requests": len(done),
             "tokens": toks,
@@ -747,34 +780,50 @@ def bench_sharing_compare(record_path: str | None = None):
             "preemptions": stats["preemptions"],
             "shared_page_hits": stats["shared_page_hits"],
             "cow_copies": stats["cow_copies"],
+            "prefill_chunks_run": stats["prefill_chunks_run"],
+            "prefill_chunks_skipped": stats["prefill_chunks_skipped"],
+            "cache_inserts": stats.get("cache_inserts", 0),
+            "cache_hits": stats.get("cache_hits", 0),
+            "cache_misses": stats.get("cache_misses", 0),
+            "cache_evictions": stats.get("cache_evictions", 0),
+            "cached_pages_now": stats.get("cached_pages_now", 0),
+            "events": _event_totals(tracer),
         }
         _export_trace(tracer, f"sharing_{name}")
         r = results[name]
         print(
             f"sharing_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
             f"peak_pages={r['peak_pages_used']}"
-            f";concurrency={r['achieved_concurrency']}"
             f";queue_wait={r['queue_wait_ticks']}"
-            f";ticks={r['ticks']};hits={r['shared_page_hits']}"
-            f";cow={r['cow_copies']}"
+            f";chunks_run={r['prefill_chunks_run']}"
+            f";chunks_skipped={r['prefill_chunks_skipped']}"
+            f";hits={r['shared_page_hits']};cow={r['cow_copies']}"
+            f";cache_hits={r['cache_hits']}"
+            f";cache_evictions={r['cache_evictions']}"
         )
+    assert streams["unshared"] == streams["shared"] == streams["cached"], (
+        "greedy streams must be bit-identical across sharing/cache variants"
+    )
+    cached = results["cached"]
+    lookups = cached["cache_hits"] + cached["cache_misses"]
     rec = {
         "bench": "sharing_compare",
-        "trace": {"requests": 18, "waves": 3, "system_prompt_tokens": 16},
+        "trace": {"requests": waves * per_wave, "waves": waves,
+                  "tenants": n_tenants, "zipf_s": 1.2,
+                  "system_prompt_tokens": 16},
         "pool": {"num_pages": num_pages, "page_size": page_size,
-                 "slots": slots, "max_seq": max_seq},
+                 "slots": slots, "max_seq": max_seq,
+                 "cache_pages": cache_pages},
         "engines": results,
+        "streams_identical": True,
         "page_savings": round(
             1.0 - results["shared"]["peak_pages_used"]
             / max(results["unshared"]["peak_pages_used"], 1), 3
         ),
-        "concurrency_gain": round(
-            results["shared"]["achieved_concurrency"]
-            / max(results["unshared"]["achieved_concurrency"], 1), 2
-        ),
-        "queue_wait_ratio": round(
-            results["shared"]["queue_wait_ticks"]
-            / max(results["unshared"]["queue_wait_ticks"], 1), 3
+        "cache_hit_rate": round(cached["cache_hits"] / max(lookups, 1), 3),
+        "prefill_dispatch_reduction": round(
+            1.0 - cached["prefill_chunks_run"]
+            / max(results["shared"]["prefill_chunks_run"], 1), 3
         ),
         "ts": time.time(),
     }
@@ -784,8 +833,9 @@ def bench_sharing_compare(record_path: str | None = None):
     _append_trajectory(rec)
     print(
         f"sharing_compare/summary,0,page_savings={rec['page_savings']}"
-        f";concurrency_gain={rec['concurrency_gain']}"
-        f";queue_wait_ratio={rec['queue_wait_ratio']};path={record_path}"
+        f";cache_hit_rate={rec['cache_hit_rate']}"
+        f";prefill_dispatch_reduction={rec['prefill_dispatch_reduction']}"
+        f";path={record_path}"
     )
     return rec
 

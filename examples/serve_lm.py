@@ -86,6 +86,13 @@ def main():
                          "same physical pages (copy-on-write; paged layout "
                          "only — the demo gives every request a shared "
                          "system prompt so the sharing is visible)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0, metavar="N",
+                    help="persistent prefix cache: park up to N refcount-0 "
+                         "shared pages unscrubbed when their last owner "
+                         "drains, so later requests with the same prefix "
+                         "skip the prefill (0 = off; requires "
+                         "--share-prefix — the demo submits in two waves "
+                         "so the revival is visible)")
     ap.add_argument("--draft-k", type=int, default=None, metavar="K",
                     help="self-speculative decode: propose up to K tokens "
                          "per tick with a cheap draft, verify with one "
@@ -128,6 +135,7 @@ def main():
                            max_seq=args.max_seq, sampler=sampler,
                            page_size=args.page_size, num_pages=args.num_pages,
                            share_prefix=args.share_prefix,
+                           prefix_cache_pages=args.prefix_cache_pages,
                            prefill_chunk=args.prefill_chunk, draft=draft,
                            tracer=tracer)
 
@@ -140,25 +148,33 @@ def main():
         prompt = np.concatenate(
             [system, rng.integers(0, cfg.vocab_size, plen).astype(np.int32)]
         )
-        req = Request(uid=uid, prompt=prompt,
-                      max_new_tokens=int(rng.integers(8, 24)))
-        reqs.append(req)
-        engine.submit(req)
+        reqs.append(Request(uid=uid, prompt=prompt,
+                            max_new_tokens=int(rng.integers(8, 24))))
+
+    # with a persistent prefix cache, submit in two drain-separated waves:
+    # wave 2's admissions revive the pages wave 1 parked on its way out
+    waves = ([reqs[: len(reqs) // 2], reqs[len(reqs) // 2:]]
+             if args.prefix_cache_pages else [reqs])
 
     t0 = time.time()
     ticks = 0
-    while engine.has_pending_work:
-        engine.step()
-        ticks += 1
-        if ticks % 8 == 0:
-            done = sum(r.done for r in reqs)
-            extra = ""
-            if engine.paged:
-                s = engine.stats()
-                extra = (f" pages={s['pages_used']}/{s['pages_used'] + s['pages_free']}"
-                         f" preempted={s['preempted_now']}")
-            print(f"tick {ticks:4d}: active={len(engine.active)} "
-                  f"queued={len(engine.queue)} done={done}{extra}")
+    for wave in waves:
+        for req in wave:
+            engine.submit(req)
+        while engine.has_pending_work:
+            engine.step()
+            ticks += 1
+            if ticks % 8 == 0:
+                done = sum(r.done for r in reqs)
+                extra = ""
+                if engine.paged:
+                    s = engine.stats()
+                    extra = (f" pages={s['pages_used']}/{s['pages_used'] + s['pages_free']}"
+                             f" preempted={s['preempted_now']}")
+                print(f"tick {ticks:4d}: active={len(engine.active)} "
+                      f"queued={len(engine.queue)} done={done}{extra}")
+            if ticks > 500:
+                break
         if ticks > 500:
             break
     dt = time.time() - t0
@@ -186,6 +202,14 @@ def main():
                   f"{s['prefill_chunks_run']} chunks "
                   f"(skipped={s['prefill_chunks_skipped']} shared-resident, "
                   f"pauses={s['prefill_pauses']} aborts={s['prefill_aborts']})")
+        if s.get("prefix_cache_pages"):
+            looked_up = s["cache_hits"] + s["cache_misses"]
+            rate = s["cache_hits"] / max(looked_up, 1)
+            print(f"prefix cache: capacity={s['prefix_cache_pages']} pages, "
+                  f"{s['cache_inserts']} inserts, {s['cache_hits']} hits "
+                  f"({rate:.0%} of {looked_up} lookups), "
+                  f"evictions={s['cache_evictions']} "
+                  f"resident_now={s['cached_pages_now']}")
     if draft is not None:
         s = engine.stats()
         drafted = s["spec_drafted_tokens"]

@@ -54,6 +54,7 @@ _REQUEST_INSTANTS = frozenset({
 _ENGINE_INSTANTS = frozenset({
     "decode_tick", "draft", "verify",
     "compile", "page_grant", "page_share", "page_release",
+    "cache_insert", "cache_hit", "cache_evict",
 })
 
 
@@ -143,7 +144,7 @@ def to_chrome_trace(events) -> dict:
                 "tid": _EVENTS_TID, "ts": us(e.wall), "args": args,
             })
         if e.kind == "decode_tick":
-            for counter in ("active", "pages_used"):
+            for counter in ("active", "pages_used", "cache_pages"):
                 if counter in e.data:
                     out.append({
                         "ph": "C", "name": counter, "pid": _ENGINE_PID,

@@ -53,6 +53,11 @@ page_grant         the pool handed out fresh pages (refcount 1)
 page_share         an existing page gained an owner (prefix sharing)
 page_release       owners were dropped; ``dead`` lists pages retired
                    (refcount hit zero, about to be scrubbed)
+cache_insert       refcount-0 prefix pages parked unscrubbed in the
+                   pool's persistent cache tier
+cache_hit          an admission revived a parked prefix page
+cache_evict        cached pages left the tier (``reason`` = capacity
+                   overflow or allocation pressure) to be scrubbed
 finish             a request completed (eos / max_new_tokens / max_seq)
 compile            a jit entry point saw a new signature (prefill
                    bucket, chunk shape, decode table width)
@@ -96,6 +101,9 @@ EVENT_KINDS = frozenset({
     "page_grant",
     "page_share",
     "page_release",
+    "cache_insert",
+    "cache_hit",
+    "cache_evict",
     "finish",
     "compile",
     "phase",

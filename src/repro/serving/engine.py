@@ -202,6 +202,17 @@ class DraftConfig:
     num_pages: Optional[int] = None
     model: Optional[object] = None
     params: Optional[object] = None
+    # adaptive throttling: track a per-row EMA of the accept rate and
+    # shrink that row's k ceiling while the EMA sits below accept_floor
+    # (down to k=0, a plain decode tick), probing one k wider every
+    # probe_period spec ticks.  Hard rows stop paying for doomed draft
+    # dispatches; easy rows keep the full k.  Throttle steps are counted
+    # in stats()["spec_throttled"].  Committed streams are unchanged
+    # (acceptance is per-token; a smaller k only shortens proposals).
+    adaptive: bool = False
+    accept_floor: float = 0.35
+    ema_alpha: float = 0.5
+    probe_period: int = 4
 
 
 def _default_page_size(max_seq: int) -> int:
@@ -375,6 +386,7 @@ class ServingEngine:
                  num_pages: Optional[int] = None,
                  page_size: Optional[int] = None,
                  share_prefix: bool = False,
+                 prefix_cache_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  draft: Optional[DraftConfig] = None,
                  tracer: Optional[Tracer] = None,
@@ -445,6 +457,18 @@ class ServingEngine:
                 "(AttentionConfig.cache_layout='paged'); this model is "
                 f"configured for layout={self.layout!r}"
             )
+        self.prefix_cache_pages = int(prefix_cache_pages or 0)
+        if self.prefix_cache_pages < 0:
+            raise ValueError(
+                f"prefix_cache_pages must be >= 0, got {prefix_cache_pages}"
+            )
+        if self.prefix_cache_pages and not (self.paged and self.share_prefix):
+            raise ValueError(
+                "prefix_cache_pages requires share_prefix=True on the paged "
+                "cache layout (the cache parks shared-prefix registrations); "
+                f"got layout={self.layout!r}, share_prefix={share_prefix}"
+            )
+        self._cache_on = self.prefix_cache_pages > 0
         if self.paged:
             from repro.attention import NUM_RESERVED_PAGES
 
@@ -467,10 +491,15 @@ class ServingEngine:
                          "chunked_prefills", "prefill_chunks_run",
                          "prefill_chunks_skipped", "prefill_pauses",
                          "prefill_aborts", "pages_granted", "pages_shared",
-                         "pages_released", "pages_retired"):
+                         "pages_released", "pages_retired",
+                         "cache_inserts", "cache_hits", "cache_misses",
+                         "cache_evictions"):
                 m.counter(name)
             m.gauge("pages_used")
-            self.pool = PagePool(num_pages, ps, on_event=self._pool_event)
+            m.gauge("cache_pages")
+            self.pool = PagePool(num_pages, ps,
+                                 cache_pages=self.prefix_cache_pages,
+                                 on_event=self._pool_event)
             if self.pool.num_usable < self.pages_per_seq:
                 raise ValueError(
                     f"pool of {num_pages} pages cannot back even one "
@@ -661,6 +690,15 @@ class ServingEngine:
         elif kind == "page_release":
             m.inc("pages_released", len(data["pages"]))
             m.inc("pages_retired", len(data["dead"]))
+        elif kind == "cache_insert":
+            m.inc("cache_inserts", len(data["pages"]))
+            m.gauge("cache_pages").set(self.pool.num_cached)
+        elif kind == "cache_hit":
+            m.inc("cache_hits")
+            m.gauge("cache_pages").set(self.pool.num_cached)
+        elif kind == "cache_evict":
+            m.inc("cache_evictions", len(data["pages"]))
+            m.gauge("cache_pages").set(self.pool.num_cached)
         self._trace(kind, **data)
 
     # ------------------------------------------------------------------
@@ -837,23 +875,57 @@ class ServingEngine:
         for key in keys:
             page = self._prefix_map.get(key)
             if page is None:
+                if self._cache_on and keys:
+                    # the walk ended on an unregistered key: a cache-tier
+                    # lookup miss (hit rate = hits / (hits + misses))
+                    self.metrics.inc("cache_misses")
                 break
             shared.append(page)
         return shared, keys
 
     def _claim_shared(self, shared: list[int], uid: int):
         for page in shared:
-            self.pool.incref(page)
+            if self.pool.is_cached(page):
+                # revive the parked page (the pool emits cache_hit); the
+                # claimant maps it exactly as if it had stayed live-shared
+                self.pool.cache_claim(page)
+            else:
+                self.pool.incref(page)
             self.metrics.inc("shared_page_hits")
             self._trace("shared_prefix_hit", uid=uid, page=page)
+
+    def _pool_free(self, pages) -> list[int]:
+        """Release pages, parking the ones that carry a live prefix
+        registration in the pool's cache tier (when enabled); returns the
+        dead list to scrub — exactly like :meth:`PagePool.free`."""
+        if not self._cache_on:
+            return self.pool.free(pages)
+        cacheable = [p for p in pages if int(p) in self._page_key]
+        return self.pool.free(pages, cacheable=cacheable)
+
+    def _alloc_reclaim(self, n: int, protect=()) -> Optional[list]:
+        """``PagePool.alloc`` with cache-tier reclamation: when the free
+        list is short, evict lowest-weight cached pages (scrubbed through
+        the ordinary dead-list) and retry — so the scheduler reclaims from
+        the cache BEFORE pausing prefills or preempting runners.  Pages in
+        ``protect`` (an admission's about-to-be-claimed prefix) survive."""
+        pages = self.pool.alloc(n)
+        if pages is not None or not self._cache_on:
+            return pages
+        evicted = self.pool.cache_reclaim(n - self.pool.num_free,
+                                          protect=protect)
+        if not evicted:
+            return None
+        self._retire_dead(evicted)
+        return self.pool.alloc(n)
 
     def _alloc_prompt_pages(self, req: Request, rows: int):
         """Claim shared prefix pages + alloc the rest for ``rows`` cache
         rows; returns ``(pages, keys, num_shared)`` — keys for the later
         registration — or None (taking nothing) if the pool is short."""
         shared, keys = self._resident_prefix(req)
-        fresh = self.pool.alloc(pages_for_rows(rows, self.pool.page_size)
-                                - len(shared))
+        fresh = self._alloc_reclaim(pages_for_rows(rows, self.pool.page_size)
+                                    - len(shared), protect=shared)
         if fresh is None:
             return None
         self._claim_shared(shared, req.uid)
@@ -1009,7 +1081,7 @@ class ServingEngine:
             c1 = min(inf.done + self.prefill_chunk, p)
             need = pages_for_rows(c1, ps)
             if need > len(inf.pages):
-                fresh = self.pool.alloc(need - len(inf.pages))
+                fresh = self._alloc_reclaim(need - len(inf.pages))
                 if fresh is None:
                     self.metrics.inc("prefill_pauses")
                     self._trace("prefill_pause", uid=req.uid, done=inf.done,
@@ -1057,7 +1129,7 @@ class ServingEngine:
         self._trace("prefill_abort", uid=inf.req.uid, done=inf.done,
                     resume=inf.resume)
         if inf.pages:
-            self._retire_dead(self.pool.free(inf.pages))
+            self._retire_dead(self._pool_free(inf.pages))
 
     # ------------------------------------------------------------------
     # paged scheduling: scatter, growth, preemption, resume-by-replay, CoW
@@ -1088,7 +1160,7 @@ class ServingEngine:
         another owner survive untouched."""
         pages = self.tables.release(slot)
         if pages:
-            self._retire_dead(self.pool.free(pages))
+            self._retire_dead(self._pool_free(pages))
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         """LRU-of-idle victim: all active rows were last scheduled on the
@@ -1118,7 +1190,7 @@ class ServingEngine:
         then preempting active victims (newest admission first); None only
         if no victim remains."""
         while True:
-            page = self.pool.alloc(1)
+            page = self._alloc_reclaim(1)
             if page is not None:
                 return page
             if self._inflight is not None:
@@ -1206,7 +1278,7 @@ class ServingEngine:
                     # co-owners, but the alloc above may have preempted the
                     # last of them — a dead page must be scrubbed and its
                     # registration retired like any other release
-                    self._retire_dead(self.pool.free([page]))
+                    self._retire_dead(self._pool_free([page]))
                     self.metrics.inc("cow_copies")
                     self._trace("cow_copy", uid=self.active[slot].uid,
                                 row=slot, src=page, dst=fresh[0], col=col)
@@ -1293,11 +1365,12 @@ class ServingEngine:
             if self.paged:
                 # chunked resumes claim only their prompt pages up front;
                 # the replayed growth region is granted per page here.
-                # Free-list only — a resume must never evict a running
-                # request (the old full-footprint grant never did either)
+                # Free-list (+ cache reclamation) only — a resume must
+                # never evict a running request (the old full-footprint
+                # grant never did either)
                 col = min(int(self.slot_pos[slot]), self.max_seq - 1) // ps
                 while not self.tables.has_col(slot, col):
-                    page = self.pool.alloc(1)
+                    page = self._alloc_reclaim(1)
                     if page is None:
                         self._abort_resume(slot, req)
                         return False
@@ -1490,10 +1563,29 @@ class ServingEngine:
         # per-row draft cache frontier: positions [0, _draft_pos) hold valid
         # draft KV; -1 = cold (no draft state, full catch-up on first use)
         self._draft_pos = np.full(self.b, -1, np.int32)
+        # adaptive throttling state (see DraftConfig.adaptive): EMA of the
+        # accept rate, current per-row k ceiling, ticks until the next probe
+        self.spec_adaptive = bool(draft.adaptive)
+        if self.spec_adaptive:
+            if not 0.0 < draft.accept_floor < 1.0:
+                raise ValueError(
+                    f"DraftConfig.accept_floor must be in (0, 1), "
+                    f"got {draft.accept_floor}")
+            if not 0.0 < draft.ema_alpha <= 1.0:
+                raise ValueError(
+                    f"DraftConfig.ema_alpha must be in (0, 1], "
+                    f"got {draft.ema_alpha}")
+            if draft.probe_period < 1:
+                raise ValueError(
+                    f"DraftConfig.probe_period must be >= 1, "
+                    f"got {draft.probe_period}")
+        self._spec_ema = np.ones(self.b, np.float64)
+        self._spec_cur_k = np.full(self.b, self.spec_k, np.int32)
+        self._spec_cooldown = np.zeros(self.b, np.int32)
         m = self.metrics
         for name in ("spec_ticks", "draft_dispatches", "verify_dispatches",
                      "spec_drafted_tokens", "spec_accepted_tokens",
-                     "spec_rejected_tokens"):
+                     "spec_rejected_tokens", "spec_throttled"):
             m.counter(name)
         for name in ("accepted_len", "phase_draft_s", "phase_verify_s"):
             m.histogram(name)
@@ -1555,6 +1647,10 @@ class ServingEngine:
         if self._draft_model is None:
             return
         self._draft_pos[slot] = -1
+        # the row's next occupant starts optimistic (full k, fresh EMA)
+        self._spec_ema[slot] = 1.0
+        self._spec_cur_k[slot] = self.spec_k
+        self._spec_cooldown[slot] = 0
         if self.paged:
             pages = self.draft_tables.release(slot)
             if pages:
@@ -1725,7 +1821,7 @@ class ServingEngine:
                     col = (p0 + len(proposals[slot])) // ps
                     if self.tables.has_col(slot, col):
                         break
-                    page = self.pool.alloc(1)
+                    page = self._alloc_reclaim(1)
                     if page is None:
                         fit = self.tables.num_pages(slot) * ps - 1 - p0
                         del proposals[slot][max(0, fit):]
@@ -1799,7 +1895,7 @@ class ServingEngine:
         ps = self.pool.page_size
         tail = self.tables.truncate(slot, pos // ps + 1)
         if tail:
-            self._retire_dead(self.pool.free(tail))
+            self._retire_dead(self._pool_free(tail))
         d = int(self._draft_pos[slot])
         if d >= 0 and self.draft_tables.num_pages(slot):
             dtail = self.draft_tables.truncate(slot, d // ps + 1)
@@ -1850,6 +1946,8 @@ class ServingEngine:
                 m.inc("spec_rejected_tokens", rejected)
                 self._trace("reject", uid=req.uid, row=slot,
                             rejected=rejected, at=p0 + accepted + 1)
+            if self.spec_adaptive:
+                self._spec_update(slot, kr, accepted)
             reason = None
             for tok in committed:
                 req.out_tokens.append(tok)
@@ -1886,6 +1984,31 @@ class ServingEngine:
         m.inc("spec_ticks")
         return finished
 
+    def _spec_update(self, slot: int, kr: int, accepted: int):
+        """Adaptive throttling (``DraftConfig.adaptive``): fold this tick's
+        accept rate into the row's EMA; an EMA below ``accept_floor``
+        shrinks the row's k ceiling one step (down to 0 = plain decode
+        ticks), and a throttled row probes one step wider every
+        ``probe_period`` spec ticks — with its EMA lifted back to the floor
+        so one good probe keeps the wider k."""
+        floor = self.draft.accept_floor
+        if kr > 0:
+            a = self.draft.ema_alpha
+            self._spec_ema[slot] = ((1.0 - a) * self._spec_ema[slot]
+                                    + a * (accepted / kr))
+        if (kr > 0 and self._spec_ema[slot] < floor
+                and self._spec_cur_k[slot] > 0):
+            self._spec_cur_k[slot] -= 1
+            self._spec_cooldown[slot] = self.draft.probe_period
+            self.metrics.inc("spec_throttled")
+        elif self._spec_cur_k[slot] < self.spec_k:
+            if self._spec_cooldown[slot] > 0:
+                self._spec_cooldown[slot] -= 1
+            else:
+                self._spec_cur_k[slot] += 1
+                self._spec_cooldown[slot] = self.draft.probe_period
+                self._spec_ema[slot] = max(self._spec_ema[slot], floor)
+
     def _spec_tick(self) -> list[Request]:
         """One speculative engine tick: draft up to k tokens per row, one
         verify prefix-extend, longest-accepted-prefix commit + rewind."""
@@ -1894,7 +2017,7 @@ class ServingEngine:
         for slot, req in self.active.items():
             p0 = int(self.slot_pos[slot])
             k_row[slot] = max(0, min(
-                self.spec_k,
+                int(self._spec_cur_k[slot]),  # == spec_k unless throttled
                 req.max_new_tokens - len(req.out_tokens) - 1,
                 self.max_seq - 1 - p0,
             ))
@@ -1916,6 +2039,8 @@ class ServingEngine:
             }
             if self.paged:
                 data["pages_used"] = self.pool.num_used
+                if self._cache_on:
+                    data["cache_pages"] = self.pool.num_cached
             self._trace("decode_tick", **data)
         with self._phase("verify"):
             logits = self._spec_verify(width, tokens, positions, idx)
@@ -1993,6 +2118,8 @@ class ServingEngine:
             }
             if self.paged:
                 data["pages_used"] = self.pool.num_used
+                if self._cache_on:
+                    data["cache_pages"] = self.pool.num_cached
             self._trace("decode_tick", **data)
         # NOTE: static-shape engine uses one shared cache_index per tick via
         # per-slot positions; the cache write offset is each slot's position
@@ -2097,6 +2224,8 @@ class ServingEngine:
                 spec_drafted_tokens=c("spec_drafted_tokens").value,
                 spec_accepted_tokens=c("spec_accepted_tokens").value,
                 spec_rejected_tokens=c("spec_rejected_tokens").value,
+                spec_adaptive=self.spec_adaptive,
+                spec_throttled=c("spec_throttled").value,
             )
             if self.paged:
                 out.update(
@@ -2138,6 +2267,15 @@ class ServingEngine:
             pages_released=c("pages_released").value,
             pages_retired=c("pages_retired").value,
         )
+        if self._cache_on:
+            out.update(
+                prefix_cache_pages=self.prefix_cache_pages,
+                cached_pages_now=self.pool.num_cached,
+                cache_inserts=c("cache_inserts").value,
+                cache_hits=c("cache_hits").value,
+                cache_misses=c("cache_misses").value,
+                cache_evictions=c("cache_evictions").value,
+            )
         return out
 
     def snapshot(self) -> dict:

@@ -15,6 +15,18 @@ makes every cache leaf a pool of fixed-size pages shared by all requests:
     requests with a common prompt prefix map the same physical page in
     their block tables, and the page only returns to the free list when its
     last owner releases it.
+  * **Persistent prefix cache** (``cache_pages > 0``) — a fourth page state
+    alongside free/used/shared: when the last owner of a *cacheable* page
+    (one carrying a live prefix registration) releases it, the page is
+    parked unscrubbed in a weighted-LRU tier instead of being recycled.
+    Cached pages have refcount 0, stay out of the free list, and can be
+    revived at refcount 1 via :meth:`cache_claim` (a hit) or evicted back
+    through the dead-list via :meth:`cache_reclaim` / capacity overflow —
+    eviction hands the page ids back to the caller, who scrubs them exactly
+    like ordinary dead pages, preserving the ``PAGE_ZERO`` invariant.
+    Eviction order is by ascending weight = pages-held × recency ×
+    (1 + observed hit count); within one parked prefix chain the head page
+    gets the highest recency so chain tails evict first.
   * :class:`BlockTables` — the per-row page lists plus assembly of the
     combined ``(rows, width)`` int32 table the decode step consumes
     (``models.blocks._cache_write`` writes through it, and
@@ -56,9 +68,16 @@ class PagePool:
     ``("page_release", pages=[...], dead=[...])`` from :meth:`free` — so
     the serving engine's metrics/tracer see page accounting without the
     pool knowing anything about them.  Failed calls (pool short, bad ids)
-    emit nothing."""
+    emit nothing.
 
-    def __init__(self, num_pages: int, page_size: int, *, on_event=None):
+    ``cache_pages`` caps the persistent prefix-cache tier (0 disables it;
+    the default, so existing pools behave exactly as before).  Cache
+    transitions emit ``("cache_insert", pages=[...])``,
+    ``("cache_hit", page=p, hits=n)`` and
+    ``("cache_evict", pages=[...], reason="capacity"|"pressure")``."""
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 cache_pages: int = 0, on_event=None):
         if num_pages <= NUM_RESERVED_PAGES:
             raise ValueError(
                 f"num_pages={num_pages} leaves no allocatable pages "
@@ -66,13 +85,25 @@ class PagePool:
             )
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if cache_pages < 0:
+            raise ValueError(f"cache_pages must be >= 0, got {cache_pages}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.cache_pages = cache_pages
         self.on_event = on_event
         self._free: collections.deque[int] = collections.deque(
             range(NUM_RESERVED_PAGES, num_pages)
         )
         self._ref: dict[int, int] = {}
+        # prefix-cache tier: page id -> (recency seq, parked-group size)
+        self._cached: dict[int, tuple[int, int]] = {}
+        # hit counts persist across park/claim cycles while the page id
+        # keeps its content (cleared when the page dies or is evicted)
+        self._hits: dict[int, int] = {}
+        self._cache_seq = 0
+        self._cache_inserts = 0
+        self._cache_hits = 0
+        self._cache_evictions = 0
 
     @property
     def num_usable(self) -> int:
@@ -84,13 +115,19 @@ class PagePool:
 
     @property
     def num_used(self) -> int:
-        """Physical pages held (a page shared by N requests counts once)."""
-        return self.num_usable - self.num_free
+        """Physical pages held by live owners (a page shared by N requests
+        counts once; parked cache pages do not count)."""
+        return self.num_usable - self.num_free - len(self._cached)
 
     @property
     def num_shared(self) -> int:
         """Pages currently mapped by more than one owner."""
         return sum(1 for c in self._ref.values() if c > 1)
+
+    @property
+    def num_cached(self) -> int:
+        """Pages parked in the persistent prefix-cache tier."""
+        return len(self._cached)
 
     def alloc(self, n: int = 1) -> Optional[list[int]]:
         """Pop ``n`` pages at refcount 1, or ``None`` (and take nothing) if
@@ -125,11 +162,21 @@ class PagePool:
         reference)."""
         return frozenset(self._free)
 
-    def free(self, pages) -> list[int]:
+    def free(self, pages, cacheable=None) -> list[int]:
         """Drop one owner per page; returns the pages whose refcount hit
-        zero (actually recycled — the caller scrubs exactly these)."""
+        zero and left the pool (actually recycled or evicted — the caller
+        scrubs exactly these).
+
+        Pages in ``cacheable`` (an optional id collection; the engine
+        passes the ones carrying a live prefix registration) that hit
+        refcount zero are **parked** in the cache tier instead of being
+        recycled — they stay unscrubbed and keep their registration until
+        claimed again or evicted.  Parking past ``cache_pages`` evicts the
+        lowest-weight cached pages, which join the returned dead list."""
+        cacheable = frozenset(cacheable) if cacheable else frozenset()
         dead: list[int] = []
         released: list[int] = []
+        parked: list[int] = []
         for p in pages:
             p = int(p)
             if not NUM_RESERVED_PAGES <= p < self.num_pages:
@@ -139,14 +186,95 @@ class PagePool:
                 raise ValueError(f"freeing unallocated page id {p}")
             if c > 1:
                 self._ref[p] = c - 1
+            elif self.cache_pages > 0 and p in cacheable:
+                del self._ref[p]
+                parked.append(p)
             else:
                 del self._ref[p]
                 self._free.append(p)
+                self._hits.pop(p, None)
                 dead.append(p)
             released.append(p)
+        if parked:
+            # within one release batch the pages arrive in chain order:
+            # give the head page the highest recency so tails evict first
+            base = self._cache_seq
+            self._cache_seq += len(parked)
+            for i, p in enumerate(parked):
+                self._cached[p] = (base + len(parked) - 1 - i, len(parked))
+            self._cache_inserts += len(parked)
         if released and self.on_event is not None:
             self.on_event("page_release", pages=released, dead=list(dead))
+        if parked and self.on_event is not None:
+            self.on_event("cache_insert", pages=list(parked))
+        if len(self._cached) > self.cache_pages:
+            dead.extend(self._evict(len(self._cached) - self.cache_pages,
+                                    reason="capacity"))
         return dead
+
+    # ---- persistent prefix-cache tier ----------------------------------
+
+    def _weight(self, page: int) -> tuple:
+        seq, size = self._cached[page]
+        return (size * seq * (1 + self._hits.get(page, 0)), seq, page)
+
+    def _evict(self, n: int, *, reason: str) -> list[int]:
+        victims = sorted(self._cached, key=self._weight)[:max(n, 0)]
+        for p in victims:
+            del self._cached[p]
+            self._hits.pop(p, None)
+            self._free.append(p)
+        if victims:
+            self._cache_evictions += len(victims)
+            if self.on_event is not None:
+                self.on_event("cache_evict", pages=list(victims),
+                              reason=reason)
+        return victims
+
+    def is_cached(self, page: int) -> bool:
+        return page in self._cached
+
+    def cached_pages(self) -> frozenset[int]:
+        """Snapshot of the parked cache tier (disjoint from the free list
+        and from every live reference)."""
+        return frozenset(self._cached)
+
+    def cache_claim(self, page: int) -> None:
+        """Revive a parked page at refcount 1 (a cache hit): the claimant
+        maps the page exactly as if it had stayed live-shared."""
+        if page not in self._cached:
+            raise ValueError(f"cache_claim of non-cached page id {page}")
+        del self._cached[page]
+        self._ref[page] = 1
+        self._hits[page] = hits = self._hits.get(page, 0) + 1
+        self._cache_hits += 1
+        if self.on_event is not None:
+            self.on_event("cache_hit", page=page, hits=hits)
+
+    def cache_reclaim(self, n: int, protect=()) -> list[int]:
+        """Evict up to ``n`` lowest-weight cached pages back to the free
+        list under allocation pressure; returns the evicted ids (the caller
+        scrubs them and retires their registrations).  Pages in ``protect``
+        are exempt (an admission about to claim them must not lose them to
+        its own fresh-page allocation)."""
+        protect = frozenset(protect)
+        if protect:
+            saved = {p: self._cached[p] for p in protect if p in self._cached}
+            for p in saved:
+                del self._cached[p]
+            evicted = self._evict(n, reason="pressure")
+            self._cached.update(saved)
+            return evicted
+        return self._evict(n, reason="pressure")
+
+    def cache_stats(self) -> dict:
+        return {
+            "capacity": self.cache_pages,
+            "resident": len(self._cached),
+            "inserts": self._cache_inserts,
+            "hits": self._cache_hits,
+            "evictions": self._cache_evictions,
+        }
 
 
 class BlockTables:

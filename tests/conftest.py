@@ -15,9 +15,26 @@ cross-checking implementations against each other.  Regenerate with
 import json
 import pathlib
 
+import jax
 import pytest
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jax_executables_between_modules():
+    """Clear JAX's compilation caches after each test module.
+
+    Every module builds its own smoke models, so nothing is shared across
+    module boundaries anyway — but the compiled executables all stay alive
+    in jax's global jit cache, and on the single-process tier-1 run the
+    accumulated LLVM JIT state eventually segfaults a late
+    ``backend_compile`` (jaxlib 0.4.36 CPU). Dropping the caches at module
+    teardown keeps the live-executable count bounded by the largest single
+    module instead of the whole suite.
+    """
+    yield
+    jax.clear_caches()
 
 
 def pytest_addoption(parser):

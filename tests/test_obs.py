@@ -275,6 +275,25 @@ def test_stats_schema_and_monotone_ticks():
     assert s1["compile_events"] >= 1
 
 
+def test_stats_schema_gates_cache_keys_on_prefix_cache():
+    """The six cache_* stats keys appear iff the persistent prefix cache
+    is enabled — the paged key set is otherwise byte-identical, so
+    existing schema consumers never see them."""
+    cfg = _paged_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(num_slots=2, max_seq=32, page_size=8,
+              num_pages=NUM_RESERVED_PAGES + 8, share_prefix=True)
+    plain = ServingEngine(model, params, **kw)
+    cached = ServingEngine(model, params, prefix_cache_pages=4, **kw)
+    cache_keys = {
+        "prefix_cache_pages", "cached_pages_now", "cache_inserts",
+        "cache_hits", "cache_misses", "cache_evictions",
+    }
+    assert set(cached.stats()) == set(plain.stats()) | cache_keys
+    assert not cache_keys & set(plain.stats())
+
+
 def test_snapshot_bundles_stats_metrics_and_trace():
     cfg = _paged_cfg()
     model = build_model(cfg)
@@ -355,6 +374,60 @@ def test_golden_event_stream_paged_scheduler(golden):
                 "prompt": "16-token shared system prompt, rng seed 3",
             },
             "signatures": tracer.signatures(),
+            "streams": {str(r.uid): list(map(int, r.out_tokens))
+                        for r in reqs},
+        },
+    )
+
+
+def test_golden_event_stream_prefix_cache_lifecycle(golden):
+    """The persistent-cache event vocabulary, pinned end to end: a sharer
+    drains (release → cache_insert parks its pages), a second sharer
+    arrives after the drain (cache_hit revives them), then a non-sharing
+    request's footprint forces pressure reclamation (cache_evict) instead
+    of a preemption or pause."""
+    cfg = _paged_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    stranger = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    reqs = [
+        Request(uid=0, prompt=np.concatenate(
+            [system, np.array([5, 6, 7], np.int32)]), max_new_tokens=4),
+        Request(uid=1, prompt=np.concatenate(
+            [system, np.array([2, 9], np.int32)]), max_new_tokens=4),
+        Request(uid=2, prompt=stranger, max_new_tokens=8, seed=99),
+    ]
+    tracer = Tracer()
+    eng = ServingEngine(
+        model, params, num_slots=2, max_seq=32, page_size=8,
+        num_pages=NUM_RESERVED_PAGES + 5, share_prefix=True,
+        prefix_cache_pages=4, prefill_chunk=8, tracer=tracer,
+    )
+    _drive(eng, reqs, arrivals=[0, 15, 30])
+    sigs = tracer.signatures()
+    kinds = [sig[0] for sig in sigs]
+    assert {"cache_insert", "cache_hit", "cache_evict"} <= set(kinds)
+    # lifecycle order: a release parks pages before the first revival,
+    # which precedes the pressure eviction
+    assert (kinds.index("page_release") < kinds.index("cache_insert")
+            < kinds.index("cache_hit") < kinds.index("cache_evict"))
+    st = eng.stats()
+    assert st["preemptions"] == 0 and st["prefill_pauses"] == 0
+    golden.check(
+        "events-codeqwen-ssa-packed-paged-prefix-cache",
+        {
+            "scenario": {
+                "arch": "codeqwen15_7b", "impl": "ssa", "storage": "packed",
+                "slots": 2, "max_seq": 32, "page_size": 8,
+                "usable_pages": 5, "prefill_chunk": 8,
+                "share_prefix": True, "prefix_cache_pages": 4,
+                "arrivals": [0, 15, 30],
+                "prompt": "16-token shared system prompt, rng seed 3; "
+                          "uid 2 is a 24-token non-sharing stranger",
+            },
+            "signatures": sigs,
             "streams": {str(r.uid): list(map(int, r.out_tokens))
                         for r in reqs},
         },

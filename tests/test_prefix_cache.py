@@ -1,0 +1,246 @@
+"""Persistent prefix cache: weighted-LRU parking of refcount-0 shared pages.
+
+The contract under test: with ``prefix_cache_pages > 0`` the engine parks a
+registration's pages unscrubbed when its last owner drains, revives them on
+the next admission/resume with a matching (seed, token-prefix) key, and
+reclaims them — through the ordinary dead-list scrub — before pausing
+prefills or preempting runners.  RNG contract v2 makes a cached page
+byte-identical to a freshly prefilled one, so the cache is a pure perf
+knob: **every token stream must be bit-identical with the cache on vs.
+off**, across every attention backend and spike storage.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.attention import NUM_RESERVED_PAGES
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+# the five registry backends x storage (packed is ssa-only); fused runs in
+# interpret mode on CPU
+COMBOS = [
+    pytest.param("ann", "dense", "auto", id="ann"),
+    pytest.param("ssa", "dense", "xla", id="ssa-xla"),
+    pytest.param("ssa", "packed", "xla", id="ssa-xla-packed"),
+    pytest.param("ssa", "dense", "fused", id="ssa-fused"),
+    pytest.param("ssa", "packed", "fused", id="ssa-fused-packed"),
+    pytest.param("spikformer", "dense", "auto", id="spikformer"),
+]
+
+_MODELS = {}
+
+
+def _cfg(impl="ssa", storage="packed", backend="auto", layout="paged"):
+    cfg = get_smoke_config("codeqwen15_7b")
+    return dataclasses.replace(
+        cfg,
+        attention=dataclasses.replace(
+            cfg.attention, impl=impl, spike_storage=storage,
+            backend=backend, cache_layout=layout,
+        ),
+    )
+
+
+def _model_and_params(cfg):
+    key = (cfg.attention.impl, cfg.attention.spike_storage,
+           cfg.attention.backend, cfg.attention.cache_layout)
+    if key not in _MODELS:
+        model = build_model(cfg)
+        _MODELS[key] = (model, model.init(jax.random.PRNGKey(0)))
+    return _MODELS[key]
+
+
+def _waves(vocab, n_waves=2, per_wave=2, prefix_len=8, seed=0):
+    """Waves of prompts sharing one system prefix (suffixes all differ)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    return [
+        [np.concatenate([prefix,
+                         rng.integers(0, vocab, 2 + i).astype(np.int32)])
+         for i in range(per_wave)]
+        for _ in range(n_waves)
+    ]
+
+
+def _serve_waves(cfg, waves, *, cache, slots=2, max_seq=32, max_new=3,
+                 page_size=8, seed=7, **kw):
+    """Submit each wave and drain it fully before the next (the persistent-
+    cache case: registrations have no live owner between waves)."""
+    model, params = _model_and_params(cfg)
+    eng = ServingEngine(
+        model, params, num_slots=slots, max_seq=max_seq,
+        page_size=page_size, share_prefix=True,
+        prefix_cache_pages=cache, **kw,
+    )
+    reqs, uid = [], 0
+    for wave in waves:
+        for p in wave:
+            req = Request(uid=uid, prompt=p, max_new_tokens=max_new,
+                          seed=seed)
+            reqs.append(req)
+            eng.submit(req)
+            uid += 1
+        ticks = 0
+        while eng.has_pending_work:
+            eng.step()
+            ticks += 1
+            assert ticks < 300, "engine failed to drain"
+    return [list(r.out_tokens) for r in reqs], eng
+
+
+@pytest.mark.parametrize("impl,storage,backend", COMBOS)
+def test_streams_bit_identical_cache_on_vs_off(impl, storage, backend):
+    """Acceptance check: two drain-separated waves over a shared system
+    prompt stream identically with the cache enabled (wave 2 revives
+    parked pages) and disabled (wave 2 re-prefills from scratch)."""
+    cfg = _cfg(impl, storage, backend)
+    waves = _waves(cfg.vocab_size)
+    s_off, e_off = _serve_waves(cfg, waves, cache=0)
+    s_on, e_on = _serve_waves(cfg, waves, cache=4)
+    assert s_on == s_off
+    st = e_on.stats()
+    assert st["cache_inserts"] >= 1
+    assert st["cache_hits"] >= 1
+    assert "cache_hits" not in e_off.stats()
+
+
+def test_cache_hits_skip_prefill_chunks():
+    """A revived prefix page skips its chunk exactly like a live shared
+    page: the cached engine dispatches measurably fewer prefix-extend
+    chunks for the same (identical) streams."""
+    cfg = _cfg()
+    waves = _waves(cfg.vocab_size, n_waves=3, prefix_len=16)
+    s_off, e_off = _serve_waves(cfg, waves, cache=0, slots=3)
+    s_on, e_on = _serve_waves(cfg, waves, cache=6, slots=3)
+    assert s_on == s_off
+    on, off = e_on.stats(), e_off.stats()
+    assert on["prefill_chunks_run"] < off["prefill_chunks_run"]
+    assert on["prefill_chunks_skipped"] > off["prefill_chunks_skipped"]
+    # waves 2 and 3 each revive the two parked 16-token-prefix pages
+    assert on["cache_hits"] >= 4
+    # the drained engine keeps the hot pages resident, not leaked
+    assert e_on.pool.num_used == 0 and e_on.pool.num_cached >= 2
+    assert set(e_on._page_key) == set(e_on.pool.cached_pages())
+
+
+def test_cache_hit_on_one_shot_admission():
+    """The unchunked admission path (prefill_chunk=0) claims cached pages
+    through ``_alloc_prompt_pages`` — revival must work there too, with
+    identical streams."""
+    cfg = _cfg()
+    waves = _waves(cfg.vocab_size, prefix_len=16)
+    s_off, _ = _serve_waves(cfg, waves, cache=0, prefill_chunk=0)
+    s_on, eng = _serve_waves(cfg, waves, cache=4, prefill_chunk=0)
+    assert s_on == s_off
+    assert eng.stats()["cache_hits"] >= 2
+
+
+def test_cache_hit_on_resume_path():
+    """Preempted sharers resume through the cache: a tight pool forces
+    preemption, the victim's pages park on release, and its resume revives
+    them — streams identical to the cache-off engine."""
+    cfg = _cfg()
+    waves = _waves(cfg.vocab_size, n_waves=1, per_wave=3, prefix_len=8,
+                   seed=4)
+    kw = dict(slots=3, max_new=12, num_pages=NUM_RESERVED_PAGES + 6)
+    s_off, e_off = _serve_waves(cfg, waves, cache=0, **kw)
+    s_on, e_on = _serve_waves(cfg, waves, cache=3, **kw)
+    assert s_on == s_off
+    assert e_off.stats()["preemptions"] >= 1
+    assert e_on.pool.num_used == 0
+
+
+def test_eviction_reclaims_before_preempting_and_rescrubs():
+    """When the free list runs dry the scheduler evicts cached pages (the
+    dead-list scrub restores the PAGE_ZERO invariant) instead of pausing
+    or preempting; a re-admission of the evicted prompt re-prefills and
+    still streams identically to its first run."""
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    sharer = np.concatenate([prefix, np.array([5, 6, 7], np.int32)])
+    stranger = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+
+    model, params = _model_and_params(cfg)
+    eng = ServingEngine(model, params, num_slots=2, max_seq=32, page_size=8,
+                        share_prefix=True, prefix_cache_pages=4,
+                        num_pages=NUM_RESERVED_PAGES + 5)
+
+    def drain(req):
+        eng.submit(req)
+        ticks = 0
+        while eng.has_pending_work:
+            eng.step()
+            ticks += 1
+            assert ticks < 300
+
+    first = Request(uid=0, prompt=sharer, max_new_tokens=4, seed=7)
+    drain(first)
+    assert eng.stats()["cached_pages_now"] >= 2
+    # a different-seed request cannot share: its footprint must come out
+    # of the cache tier, not from preemption/pauses
+    drain(Request(uid=1, prompt=stranger, max_new_tokens=10, seed=99))
+    st = eng.stats()
+    assert st["cache_evictions"] >= 1
+    assert st["preemptions"] == 0 and st["prefill_pauses"] == 0
+    # evicted pages were scrubbed + deregistered: the sharer re-prefills
+    # (no stale state) and reproduces its exact stream
+    again = Request(uid=2, prompt=sharer, max_new_tokens=4, seed=7)
+    drain(again)
+    assert list(again.out_tokens) == list(first.out_tokens)
+    assert eng.pool.num_used == 0
+
+
+def test_cache_weight_evicts_cold_tails_first():
+    """Weighted-LRU order: within one parked chain the head (prefix) page
+    outranks the tail, and a revived (hit) page outranks a never-hit one
+    of equal recency."""
+    from repro.serving import PagePool
+
+    pool = PagePool(NUM_RESERVED_PAGES + 6, 8, cache_pages=6)
+    chain = pool.alloc(3)
+    pool.free(chain, cacheable=chain)          # park the whole chain
+    # tail evicts before head
+    assert pool.cache_reclaim(1) == [chain[-1]]
+    pool.cache_claim(chain[0])                 # revive + re-park the head
+    pool.free([chain[0]], cacheable=[chain[0]])
+    other = pool.alloc(1)
+    pool.free(other, cacheable=other)          # newer, but never hit
+    assert pool.num_cached == 3
+    # the hit-boosted head survives the colder middle page
+    evicted = pool.cache_reclaim(2)
+    assert chain[0] not in evicted
+    st = pool.cache_stats()
+    assert st["inserts"] == 5 and st["hits"] == 1 and st["evictions"] == 3
+
+
+def test_prefix_cache_validation():
+    cfg_paged = _cfg()
+    model, params = _model_and_params(cfg_paged)
+    with pytest.raises(ValueError, match="share_prefix"):
+        ServingEngine(model, params, num_slots=1, max_seq=32,
+                      prefix_cache_pages=4)
+    with pytest.raises(ValueError, match="prefix_cache_pages"):
+        ServingEngine(model, params, num_slots=1, max_seq=32,
+                      share_prefix=True, prefix_cache_pages=-1)
+    cfg_slab = _cfg(layout="slab")
+    model_s, params_s = _model_and_params(cfg_slab)
+    with pytest.raises(ValueError):
+        ServingEngine(model_s, params_s, num_slots=1, max_seq=32,
+                      prefix_cache_pages=4)
+
+
+def test_stats_surface_cache_counters():
+    cfg = _cfg()
+    waves = _waves(cfg.vocab_size)
+    _, eng = _serve_waves(cfg, waves, cache=4)
+    st = eng.stats()
+    for key in ("prefix_cache_pages", "cached_pages_now", "cache_inserts",
+                "cache_hits", "cache_misses", "cache_evictions"):
+        assert key in st, key
+    assert st["prefix_cache_pages"] == 4
+    assert st["cached_pages_now"] == eng.pool.num_cached

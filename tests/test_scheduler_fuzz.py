@@ -12,7 +12,13 @@ pool/table invariants after **every** engine step:
   * no page mapped by two owners unless prefix sharing is on and the page
     is still prefix-registered;
   * ``stats()`` counters are monotone over the run;
-  * the pool drains to empty (no leaked pages or registrations);
+  * the pool drains to empty (no leaked pages or registrations) — with
+    the persistent prefix cache on, drained engines may keep *cached*
+    pages resident (refcount 0, live registration), never leaked ones;
+  * cache-tier invariants: free / used / cached partition the usable
+    pool, cached pages have refcount 0 and a live prefix registration,
+    and evict -> scrub accounting conserves pages
+    (granted == dead + evicted + resident at drain);
   * trace-level page accounting closes: every ``page_grant`` has a matching
     release, the retired multiset equals the granted multiset, and
     ``pages_granted + pages_shared == pages_released`` at drain (the engine
@@ -44,6 +50,8 @@ _MONOTONE = (
     "prefill_chunks_run", "prefill_chunks_skipped", "prefill_pauses",
     "prefill_aborts", "peak_pages_used", "max_concurrency_seen",
     "pages_granted", "pages_shared", "pages_released", "pages_retired",
+    # present only on cache-enabled engines (stats gates the keys)
+    "cache_inserts", "cache_hits", "cache_misses", "cache_evictions",
 )
 
 
@@ -78,10 +86,18 @@ def _check_invariants(eng, prev_stats):
     assert all(p >= NUM_RESERVED_PAGES for p in refs)
     # refcount totals == table references, page by page
     assert dict(refs) == refcounts, (refs, refcounts)
-    # conservation: free + owned == usable
-    assert pool.num_free + len(refcounts) == pool.num_usable
-    # the free list never aliases a live reference
+    # conservation: free + owned + cached partition the usable pool
+    assert pool.num_free + len(refcounts) + pool.num_cached == pool.num_usable
+    # the free list never aliases a live reference or a cached page
     assert pool.free_pages().isdisjoint(refs)
+    cached = pool.cached_pages()
+    assert cached.isdisjoint(pool.free_pages())
+    assert cached.isdisjoint(refcounts)
+    # every cached page has refcount 0 and a live prefix registration
+    for page in cached:
+        assert pool.ref_count(page) == 0, page
+        assert page in eng._page_key, page
+    assert len(cached) <= eng.prefix_cache_pages
     # a page with two owners implies sharing is on and it is still
     # prefix-registered (CoW retires registrations before divergence)
     for page, count in refs.items():
@@ -90,7 +106,7 @@ def _check_invariants(eng, prev_stats):
     # registration maps are mutually consistent and point at live pages
     for key, page in eng._prefix_map.items():
         assert eng._page_key.get(page) == key
-        assert pool.ref_count(page) >= 1
+        assert pool.ref_count(page) >= 1 or pool.is_cached(page)
     # seated rows always own a table entry; idle rows never do
     for slot in eng.active:
         assert slot in eng.tables.pages
@@ -98,12 +114,12 @@ def _check_invariants(eng, prev_stats):
     # counters only move forward
     stats = eng.stats()
     for key in _MONOTONE:
-        assert stats[key] >= prev_stats.get(key, 0), key
-    # live page accounting: every grant/share the pool ever made is either
-    # still referenced or has been released
+        assert stats.get(key, 0) >= prev_stats.get(key, 0), key
+    # live page accounting: every refcount the pool ever added (grants,
+    # shares, cache revivals) is either still referenced or released
     outstanding = (
         stats["pages_granted"] + stats["pages_shared"]
-        - stats["pages_released"]
+        + stats.get("cache_hits", 0) - stats["pages_released"]
     )
     assert outstanding == sum(refcounts.values()), (stats, refcounts)
     if getattr(eng, "_draft_model", None) is not None:
@@ -140,7 +156,7 @@ def _check_draft_invariants(eng, stats, prev_stats):
 
 def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
                   share=False, chunked=True, prefix_len=0, rng_seed=0,
-                  draft=None):
+                  draft=None, cache=0):
     """Drive one schedule through a tight paged engine, checking the full
     invariant set after every step; returns the drained engine."""
     cfg, model, params = _model_and_params()
@@ -159,7 +175,7 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
         model, params, num_slots=slots, max_seq=32, page_size=8,
         num_pages=NUM_RESERVED_PAGES + usable,
         share_prefix=share, prefill_chunk=8 if chunked else 0,
-        draft=draft, tracer=tracer,
+        prefix_cache_pages=cache, draft=draft, tracer=tracer,
     )
     done, tick, i, stats = [], 0, 0, {}
     while i < len(order) or eng.has_pending_work:
@@ -175,13 +191,20 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
     assert all(len(r.out_tokens) >= 1 for r in reqs)
     assert eng.pool.num_used == 0
     assert not eng.tables.pages and eng._inflight is None
-    assert not eng._prefix_map and not eng._page_key
+    # drained registrations: exactly the cache-resident pages (cache off
+    # => both empty); cache pages stay parked, not leaked
+    resident = eng.pool.cached_pages()
+    assert set(eng._page_key) == set(resident)
+    assert set(eng._prefix_map.values()) == set(resident)
     # trace-level page accounting: every page the pool ever granted has a
-    # matching release, and the released pages that died (refcount -> 0)
-    # are exactly the granted multiset (shares add refs, not pages)
+    # matching release, and every grant/hit "episode" ends in a scrub
+    # (release-dead or eviction) or is still parked in the cache tier
     assert tracer.events_dropped == 0
     granted = Counter()
     retired = Counter()
+    inserted = Counter()
+    hits = Counter()
+    evicted = Counter()
     draft_granted = Counter()
     draft_retired = Counter()
     shares = 0
@@ -200,7 +223,21 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
             retired.update(ev.data["dead"])
         elif ev.kind == "page_share":
             shares += 1
-    assert granted == retired, (granted, retired)
+        elif ev.kind == "cache_insert":
+            inserted.update(ev.data["pages"])
+        elif ev.kind == "cache_hit":
+            hits.update([ev.data["page"]])
+        elif ev.kind == "cache_evict":
+            evicted.update(ev.data["pages"])
+    # every used episode (grant or cache revival) ends dead or parked ...
+    assert granted + hits == retired + inserted, (granted, hits, retired,
+                                                  inserted)
+    # ... and every parked episode was revived, evicted, or is resident
+    assert inserted == hits + evicted + Counter(resident), (
+        inserted, hits, evicted, resident)
+    # corollary: the granted multiset is fully accounted for by scrubs
+    # (dead + evicted) plus the still-resident cache pages
+    assert granted == retired + evicted + Counter(resident)
     assert draft_granted == draft_retired, (draft_granted, draft_retired)
     if draft is not None:
         assert eng.draft_pool.num_used == 0 and not eng.draft_tables.pages
@@ -211,8 +248,12 @@ def _run_scenario(*, lengths, arrivals, max_new, usable, slots,
     assert stats["pages_granted"] == sum(granted.values())
     assert stats["pages_retired"] == sum(retired.values())
     assert stats["pages_shared"] == shares
+    assert stats.get("cache_inserts", 0) == sum(inserted.values())
+    assert stats.get("cache_hits", 0) == sum(hits.values())
+    assert stats.get("cache_evictions", 0) == sum(evicted.values())
+    assert stats.get("cached_pages_now", 0) == len(resident)
     assert (stats["pages_granted"] + stats["pages_shared"]
-            == stats["pages_released"])
+            + stats.get("cache_hits", 0) == stats["pages_released"])
     return eng
 
 
@@ -256,6 +297,36 @@ def test_invariants_with_speculation_fixed():
     assert eng.preemptions >= 1 and eng.resumes >= 1
 
 
+def test_invariants_with_prefix_cache_fixed():
+    """Bursty sharing through the persistent cache: wave 1's sharers drain
+    fully (parking their registered pages), wave 2 re-admits the same
+    prompts and must revive them from the cache; a later long stranger
+    forces evictions under pressure — invariants after every tick."""
+    eng = _run_scenario(
+        lengths=[8, 8, 8, 8, 20], arrivals=[0, 0, 30, 30, 60],
+        max_new=[6, 6, 6, 6, 8], usable=6, slots=2,
+        share=True, cache=4, prefix_len=16, rng_seed=3,
+    )
+    stats = eng.stats()
+    assert stats["cache_inserts"] >= 1
+    assert stats["cache_hits"] >= 1
+    assert stats["cache_evictions"] >= 1
+    # drain left pages resident (parked, not leaked)
+    assert eng.pool.num_cached >= 1
+
+
+def test_invariants_cache_reclaims_before_preempting_fixed():
+    """A tight pool whose cache tier holds the only spare pages: growth
+    must reclaim from the cache instead of preempting runners."""
+    eng = _run_scenario(
+        lengths=[8, 12], arrivals=[0, 25], max_new=[6, 10],
+        usable=4, slots=2, share=True, cache=3, prefix_len=16, rng_seed=11,
+    )
+    stats = eng.stats()
+    assert stats["cache_evictions"] >= 1
+    assert stats["preemptions"] == 0
+
+
 def test_invariants_unchunked_fixed():
     """The one-shot admission path stays invariant-clean too."""
     eng = _run_scenario(lengths=[4, 5, 6], arrivals=[0, 0, 0],
@@ -271,6 +342,7 @@ def test_invariants_unchunked_fixed():
 @settings(max_examples=6, deadline=None, derandomize=True)
 def test_scheduler_invariants_hold_under_random_schedules(data):
     n_req = data.draw(st.integers(2, 5), label="n_req")
+    cache = data.draw(st.sampled_from([0, 0, 3]), label="cache")
     _run_scenario(
         lengths=[data.draw(st.integers(2, 18), label=f"len{i}")
                  for i in range(n_req)],
@@ -280,10 +352,11 @@ def test_scheduler_invariants_hold_under_random_schedules(data):
                  for i in range(n_req)],
         usable=data.draw(st.integers(4, 9), label="usable"),
         slots=data.draw(st.integers(1, 3), label="slots"),
-        share=data.draw(st.booleans(), label="share"),
+        share=data.draw(st.booleans(), label="share") or cache > 0,
         chunked=data.draw(st.booleans(), label="chunked"),
         prefix_len=data.draw(st.sampled_from([0, 8]), label="prefix"),
         rng_seed=data.draw(st.integers(0, 2**16), label="rng"),
+        cache=cache,
     )
 
 
@@ -328,3 +401,77 @@ def test_page_pool_conservation_under_random_ops(data):
         assert dict(shadow) == pool.refcounts()
     with pytest.raises(ValueError):
         pool.free([NUM_RESERVED_PAGES - 1])
+
+
+@given(data=st.data())
+@settings(max_examples=60, deadline=None, derandomize=True)
+def test_page_pool_cache_tier_conservation_under_random_ops(data):
+    """Allocator-level fuzz of the cache tier: any interleaving of alloc /
+    incref / free(cacheable) / cache_claim / cache_reclaim keeps free,
+    used, and cached disjoint, conserves pages, and never parks past the
+    capacity cap."""
+    cap = data.draw(st.integers(1, 4))
+    pool = PagePool(
+        num_pages=NUM_RESERVED_PAGES + data.draw(st.integers(2, 10)),
+        page_size=8, cache_pages=cap,
+    )
+    shadow: Counter = Counter()          # page -> expected refcount
+    cached: set = set()                  # expected parked pages
+    for _ in range(data.draw(st.integers(1, 50))):
+        op = data.draw(st.sampled_from(
+            ["alloc", "incref", "free", "free_cacheable", "claim",
+             "reclaim"]
+        ))
+        if op == "alloc":
+            n = data.draw(st.integers(0, 3))
+            got = pool.alloc(n)
+            if got is None:
+                assert n > pool.num_usable - len(shadow) - len(cached)
+            else:
+                assert len(got) == n
+                assert not (set(got) & (set(shadow) | cached))
+                for page in got:
+                    shadow[page] = 1
+        elif op == "incref" and shadow:
+            page = data.draw(st.sampled_from(sorted(shadow)))
+            pool.incref(page)
+            shadow[page] += 1
+        elif op in ("free", "free_cacheable") and shadow:
+            page = data.draw(st.sampled_from(sorted(shadow)))
+            cacheable = [page] if op == "free_cacheable" else []
+            dead = pool.free([page], cacheable=cacheable)
+            shadow[page] -= 1
+            if shadow[page] > 0:
+                assert dead == []
+            else:
+                del shadow[page]
+                if op == "free_cacheable":
+                    # parked (possibly evicting someone — maybe itself —
+                    # over capacity); dead holds exactly the evictions
+                    cached.add(page)
+                    for ev in dead:
+                        cached.discard(ev)
+                else:
+                    assert dead == [page]
+        elif op == "claim" and cached:
+            page = data.draw(st.sampled_from(sorted(cached)))
+            pool.cache_claim(page)
+            cached.discard(page)
+            shadow[page] = 1
+        elif op == "reclaim":
+            n = data.draw(st.integers(0, 3))
+            evicted = pool.cache_reclaim(n)
+            assert len(evicted) == min(n, len(cached))
+            for page in evicted:
+                cached.discard(page)
+        # conservation + exact refcounts + capacity after every op
+        assert pool.num_free + len(shadow) + len(cached) == pool.num_usable
+        assert dict(shadow) == pool.refcounts()
+        assert cached == set(pool.cached_pages())
+        assert len(cached) <= cap
+        assert pool.free_pages().isdisjoint(cached)
+    st_c = pool.cache_stats()
+    assert st_c["resident"] == len(cached)
+    assert st_c["inserts"] == st_c["hits"] + st_c["evictions"] + len(cached)
+    with pytest.raises(ValueError):
+        pool.cache_claim(-1)

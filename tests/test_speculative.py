@@ -403,3 +403,88 @@ def test_spec_stats_keys_absent_without_draft():
     )
     eng = ServingEngine(model, params, num_slots=2, max_seq=32)
     assert not any(k.startswith(("spec_", "draft_")) for k in eng.stats())
+
+
+# ---------------------------------------------------------------------------
+# adaptive throttling: per-row accept-rate EMA shrinks k, probes back up
+# ---------------------------------------------------------------------------
+def _run_long(eng, max_new=12):
+    """Like _run_pinned but with generations long enough that the per-tick
+    draft length is set by k, not by the remaining-token budget."""
+    reqs = [
+        Request(uid=i, prompt=np.asarray(p, np.int32),
+                max_new_tokens=max_new, seed=s)
+        for i, (p, s) in enumerate(zip(PROMPTS, SEEDS))
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=200)
+    return [list(map(int, r.out_tokens)) for r in reqs]
+
+
+def test_adaptive_throttling_shrinks_k_for_disagreeing_draft():
+    """An ANN draft against an SSA target accepts ~nothing; adaptive rows
+    collapse toward plain ticks (far fewer drafted tokens than the fixed-k
+    engine wastes) while the committed streams — all target draws — stay
+    bit-identical."""
+    _, model, params = _model_and_params(
+        "codeqwen15_7b", "ssa", "dense", "paged", "xla"
+    )
+    plain = _spec_engine(model, params, None, "paged")
+    s_plain = _run_long(plain)
+    fixed = _spec_engine(
+        model, params, DraftConfig(k=4, impl="ann"), "paged")
+    s_fixed = _run_long(fixed)
+    adaptive = _spec_engine(
+        model, params,
+        DraftConfig(k=4, impl="ann", adaptive=True, accept_floor=0.6,
+                    ema_alpha=0.6, probe_period=3),
+        "paged",
+    )
+    s_adaptive = _run_long(adaptive)
+    assert s_adaptive == s_fixed == s_plain
+    fs, ads = fixed.stats(), adaptive.stats()
+    assert not fs["spec_adaptive"] and ads["spec_adaptive"]
+    assert fs["spec_throttled"] == 0
+    assert ads["spec_throttled"] > 0
+    assert ads["spec_drafted_tokens"] < fs["spec_drafted_tokens"]
+    assert adaptive.pool.num_used == 0 and adaptive.draft_pool.num_used == 0
+
+
+def test_adaptive_throttling_keeps_agreeing_draft_at_full_k():
+    """A draft that always agrees (same model as target) never dips below
+    the floor: adaptive mode is a no-op — same drafted-token count as
+    fixed k, zero throttle events."""
+    cfg, model, params = _model_and_params(
+        "codeqwen15_7b", "ssa", "dense", "paged", "xla"
+    )
+    t = cfg.attention.ssa_time_steps
+    fixed = _spec_engine(
+        model, params, DraftConfig(k=3, impl="ssa", time_steps=t), "paged")
+    s_fixed = _run_long(fixed)
+    adaptive = _spec_engine(
+        model, params,
+        DraftConfig(k=3, impl="ssa", time_steps=t, adaptive=True),
+        "paged",
+    )
+    s_adaptive = _run_long(adaptive)
+    assert s_adaptive == s_fixed
+    ads = adaptive.stats()
+    assert ads["spec_throttled"] == 0
+    assert ads["spec_drafted_tokens"] == fixed.stats()["spec_drafted_tokens"]
+
+
+def test_adaptive_config_validation():
+    _, model, params = _model_and_params(
+        "codeqwen15_7b", "ssa", "dense", "slab"
+    )
+    for bad in (
+        DraftConfig(k=2, impl="ssa", time_steps=1, adaptive=True,
+                    accept_floor=1.5),
+        DraftConfig(k=2, impl="ssa", time_steps=1, adaptive=True,
+                    ema_alpha=0.0),
+        DraftConfig(k=2, impl="ssa", time_steps=1, adaptive=True,
+                    probe_period=0),
+    ):
+        with pytest.raises(ValueError):
+            ServingEngine(model, params, num_slots=2, max_seq=32, draft=bad)

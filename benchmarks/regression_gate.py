@@ -1,9 +1,10 @@
 """Perf-trajectory regression gate over the deterministic compare benches.
 
 Re-runs the fully deterministic comparison benchmarks
-(``--compare-backends``, ``--compare-paging``, ``--compare-sharing`` and
-``--compare-spec`` from ``benchmarks/run.py``) and diffs the result
-against the committed ``benchmarks/BENCH_baseline.json``:
+(``--compare-backends``, ``--compare-paging``, ``--compare-sharing``,
+``--compare-spec`` and ``--compare-sharded`` from ``benchmarks/run.py``)
+and diffs the result against the committed
+``benchmarks/BENCH_baseline.json``:
 
 * **Deterministic fields block.**  Cache bytes, modeled bytes moved,
   scheduler counters (requests / tokens / ticks / preemptions /
@@ -29,6 +30,11 @@ Usage::
 ``--update-baseline`` re-collects and (over)writes the baseline file —
 commit the result whenever a PR intentionally changes scheduler behaviour
 or memory accounting.
+
+The sharded section needs >= 4 devices (CI forces 8 CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a smaller
+host it is skipped with an informational note instead of failing, so the
+gate stays runnable locally.
 """
 from __future__ import annotations
 
@@ -42,7 +48,7 @@ import time
 _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(_HERE, "BENCH_baseline.json")
 
-SCHEMA = 3
+SCHEMA = 4
 
 # exact-match (blocking) fields
 DET_BACKEND = ("cache_bytes", "modeled_bytes_moved_per_layer", "batch", "n_ctx")
@@ -106,11 +112,33 @@ DET_SPEC_ENGINE = (
     "accepted_len_hist",
     "events",
 )
+DET_SHARDED_TOP = (
+    "workload",
+    "pool",
+    "streams_identical",
+    "concurrency_gain_2_replicas",
+)
+DET_SHARDED_ENGINE = (
+    "mesh_shards",
+    "replicas",
+    "usable_pages_per_replica",
+    "kv_bytes_total",
+    "kv_shard_nbytes",
+    "dispatched",
+    "achieved_concurrency",
+    "requests",
+    "tokens",
+    "ticks",
+    "queue_wait_ticks",
+    "preemptions",
+    "events",
+)
 # host-dependent (tolerance-band) fields
 TIMING_BACKEND = ("decode_us",)
 TIMING_PAGING_ENGINE = ("tokens_per_sec",)
 TIMING_SHARING_ENGINE = ("tokens_per_sec",)
 TIMING_SPEC_ENGINE = ("tokens_per_sec",)
+TIMING_SHARDED_ENGINE = ("tokens_per_sec",)
 
 
 def collect() -> dict:
@@ -129,6 +157,14 @@ def collect() -> dict:
         )
         spec_rec = bench.bench_spec_compare(
             record_path=os.path.join(td, "spec.json")
+        )
+        import jax
+
+        sharded_rec = (
+            bench.bench_sharded_compare(
+                record_path=os.path.join(td, "sharded.json")
+            )
+            if len(jax.devices()) >= 4 else None
         )
     backends = {
         r["backend"]: {k: r[k] for k in (*DET_BACKEND, *TIMING_BACKEND)}
@@ -156,6 +192,16 @@ def collect() -> dict:
         }
         for name, eng in spec_rec["engines"].items()
     }
+    sharded = None
+    if sharded_rec is not None:
+        sharded = {k: sharded_rec[k] for k in DET_SHARDED_TOP}
+        sharded["engines"] = {
+            name: {
+                k: eng[k]
+                for k in (*DET_SHARDED_ENGINE, *TIMING_SHARDED_ENGINE)
+            }
+            for name, eng in sharded_rec["engines"].items()
+        }
     return {
         "schema": SCHEMA,
         "interpret_mode": interpret,
@@ -163,6 +209,7 @@ def collect() -> dict:
         "paging": paging,
         "sharing": sharing,
         "spec": spec,
+        "sharded": sharded,
     }
 
 
@@ -269,6 +316,37 @@ def diff(
                 f"spec.engines.{name}.{k}",
                 b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
             )
+
+    b_shd, c_shd = baseline.get("sharded"), candidate.get("sharded")
+    if c_shd is None and b_shd is not None:
+        info.append(
+            "sharded section skipped: candidate host has < 4 devices "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    elif c_shd is not None and b_shd is None:
+        info.append(
+            "sharded section present in candidate but missing from the "
+            "baseline (regenerate it on a >= 4 device host)"
+        )
+    elif b_shd is not None:
+        for k in DET_SHARDED_TOP:
+            _cmp_exact(f"sharded.{k}", b_shd.get(k), c_shd.get(k), blocking)
+        b_eng = b_shd.get("engines", {})
+        c_eng = c_shd.get("engines", {})
+        _cmp_exact(
+            "sharded.engines.keys", sorted(b_eng), sorted(c_eng), blocking
+        )
+        for name in sorted(set(b_eng) & set(c_eng)):
+            for k in DET_SHARDED_ENGINE:
+                _cmp_exact(
+                    f"sharded.engines.{name}.{k}",
+                    b_eng[name].get(k), c_eng[name].get(k), blocking,
+                )
+            for k in TIMING_SHARDED_ENGINE:
+                _cmp_timing(
+                    f"sharded.engines.{name}.{k}",
+                    b_eng[name].get(k), c_eng[name].get(k), tol, timing_sink,
+                )
     return blocking, info
 
 
@@ -297,8 +375,10 @@ def main(argv=None) -> int:
     if args.update_baseline:
         candidate["meta"] = {
             "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-            "note": "regenerate with: python -m benchmarks.regression_gate "
-            "--update-baseline (REPRO_SMOKE_OVERRIDES must be unset/empty)",
+            "note": "regenerate with: XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=8 JAX_PLATFORMS=cpu python -m benchmarks."
+            "regression_gate --update-baseline (REPRO_SMOKE_OVERRIDES "
+            "must be unset/empty; < 4 devices omits the sharded section)",
         }
         with open(args.baseline, "w") as f:
             json.dump(candidate, f, indent=2, sort_keys=True)

@@ -35,6 +35,15 @@ draft, exact position-keyed verification) and writes target dispatches
 per committed token / acceptance statistics / stream identity to
 ``benchmarks/BENCH_spec.json``.
 
+``--compare-sharded`` serves one pinned bursty workload through an
+unsharded engine, 2- and 4-way tensor-parallel engines (head-sharded KV
+over a device mesh), and 1x2 / 2x2 replica x shard configurations
+holding the same total usable pool pages, asserts every configuration's
+greedy streams are bit-identical, and writes achieved concurrency /
+queue-wait / per-replica dispatch counts to
+``benchmarks/BENCH_sharded.json`` (needs >= 4 devices; force them on CPU
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
 ``--trace-out PATH.json`` (any serving compare mode) attaches a
 :class:`repro.obs.Tracer` to every engine and exports one Perfetto /
 Chrome-trace JSON per engine (``PATH.<bench>_<engine>.json`` — load at
@@ -981,6 +990,185 @@ def bench_spec_compare(record_path: str | None = None):
     return rec
 
 
+def bench_sharded_compare(record_path: str | None = None):
+    """Tensor-parallel shards x data-parallel replicas over one pinned
+    bursty workload (smoke SSA model, packed storage + paged cache, CPU).
+
+    Five configurations serve the identical 12-request trace with the
+    same *total* usable pool pages (replicated engines split the pool:
+    two replicas each get half) and the same per-engine decode rows:
+
+    * ``s1r1`` — the plain single-engine baseline;
+    * ``s2r1`` / ``s4r1`` — one engine, KV heads sharded 2- / 4-way over
+      a device mesh (per-shard bytes shrink; scheduling is unchanged);
+    * ``s1r2`` / ``s2r2`` — two replicas behind one admission queue
+      (each optionally 2-way sharded), doubling joint decode rows on the
+      same total pool.
+
+    Every draw is keyed by request seed and absolute position (RNG
+    contract v2), and TP collectives are pure data movement, so all five
+    greedy streams must be **bit-identical** — asserted, then recorded
+    with achieved concurrency, queue-wait ticks, and per-replica
+    dispatch counts in ``benchmarks/BENCH_sharded.json``.  The headline
+    is ``concurrency_gain_2_replicas`` (>= 1.5x on this trace).
+    """
+    import jax
+    import numpy as np
+
+    from repro.attention import NUM_RESERVED_PAGES
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+    from repro.serving import ReplicatedEngine, Request, ServingEngine
+
+    if len(jax.devices()) < 4:
+        raise SystemExit(
+            f"sharded compare needs >= 4 devices, found {len(jax.devices())}"
+            "; on CPU run with XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=8 JAX_PLATFORMS=cpu"
+        )
+
+    slots, max_seq, page_size, usable = 4, 32, 8, 16
+    cfg = with_overrides(
+        get_smoke_config("codeqwen15_7b"),
+        attention__impl="ssa",
+        attention__spike_storage="packed",
+        attention__cache_layout="paged",
+    )
+
+    def trace():
+        # 12 short requests in two waves; pinned seeds make every stream
+        # placement-invariant (prompt+new <= 15 tokens -> <= 2 pages/row)
+        rng = np.random.default_rng(0)
+        reqs, arrivals = [], []
+        for uid in range(12):
+            reqs.append(
+                Request(
+                    uid=uid,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size, int(rng.integers(4, 9))
+                    ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(4, 8)),
+                    seed=uid * 11 + 3,
+                )
+            )
+            arrivals.append(0 if uid < 8 else 3)
+        return reqs, arrivals
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if record_path is None:
+        record_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "BENCH_sharded.json"
+        )
+    configs = (
+        ("s1r1", 1, 1),
+        ("s2r1", 2, 1),
+        ("s4r1", 4, 1),
+        ("s1r2", 1, 2),
+        ("s2r2", 2, 2),
+    )
+    results, streams = {}, {}
+    for name, shards, replicas in configs:
+        tracer = _make_tracer(always=True)
+        kw = dict(
+            num_slots=slots, max_seq=max_seq, page_size=page_size,
+            # same total usable pool: each replica owns its slice
+            num_pages=NUM_RESERVED_PAGES + usable // replicas,
+            tracer=tracer,
+        )
+        if shards > 1:
+            kw["mesh_shards"] = shards
+        if replicas > 1:
+            eng = ReplicatedEngine(model, params, replicas=replicas, **kw)
+        else:
+            eng = ServingEngine(model, params, **kw)
+        reqs, arrivals = trace()
+        t0 = time.perf_counter()
+        done, tick, i = [], 0, 0
+        while i < len(reqs) or eng.has_pending_work:
+            while i < len(reqs) and arrivals[i] <= tick:
+                eng.submit(reqs[i])
+                i += 1
+            done.extend(eng.step())
+            tick += 1
+            assert tick < 2000
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        stats = eng.stats()
+        streams[name] = {
+            r.uid: [int(t) for t in r.out_tokens] for r in done
+        }
+        results[name] = {
+            "mesh_shards": shards,
+            "replicas": replicas,
+            "usable_pages_per_replica": usable // replicas,
+            "kv_bytes_total": eng.kv_cache_nbytes(),
+            "kv_shard_nbytes": (
+                eng.kv_shard_nbytes() if shards > 1 and replicas == 1
+                else [e.kv_shard_nbytes() for e in eng.engines]
+                if shards > 1 else None
+            ),
+            "dispatched": (
+                eng.request_counts() if replicas > 1 else [len(done)]
+            ),
+            "achieved_concurrency": (
+                eng.max_concurrency_seen if replicas > 1
+                else stats["max_concurrency_seen"]
+            ),
+            "requests": len(done),
+            "tokens": toks,
+            "ticks": tick,
+            "tokens_per_sec": round(toks / wall, 1),
+            "queue_wait_ticks": stats["queue_wait_ticks"],
+            "preemptions": (
+                sum(s["preemptions"] for s in stats["per_replica"])
+                if replicas > 1 else stats["preemptions"]
+            ),
+            "events": _event_totals(tracer),
+        }
+        _export_trace(tracer, f"sharded_{name}")
+        r = results[name]
+        print(
+            f"sharded_compare/{name},{wall * 1e6 / max(toks, 1):.0f},"
+            f"concurrency={r['achieved_concurrency']}"
+            f";queue_wait={r['queue_wait_ticks']}"
+            f";dispatched={'/'.join(map(str, r['dispatched']))}"
+            f";kv_bytes={r['kv_bytes_total']};tok_s={r['tokens_per_sec']}"
+        )
+    base = streams["s1r1"]
+    for name, got in streams.items():
+        assert got == base, (
+            f"{name} greedy streams diverged from the unsharded baseline"
+        )
+    gain = round(
+        results["s1r2"]["achieved_concurrency"]
+        / max(results["s1r1"]["achieved_concurrency"], 1), 2
+    )
+    assert gain >= 1.5, (
+        f"2-replica concurrency gain {gain} < 1.5x on the same total pool"
+    )
+    rec = {
+        "bench": "sharded_compare",
+        "workload": {"requests": 12, "waves": 2, "max_seq": max_seq},
+        "pool": {"usable_pages_total": usable, "page_size": page_size,
+                 "slots_per_engine": slots},
+        "devices": len(jax.devices()),
+        "engines": results,
+        "streams_identical": True,
+        "concurrency_gain_2_replicas": gain,
+        "ts": time.time(),
+    }
+    with open(record_path, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    _append_trajectory(rec)
+    print(
+        f"sharded_compare/summary,0,streams_identical=True"
+        f";concurrency_gain_2_replicas={gain};path={record_path}"
+    )
+    return rec
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -1019,6 +1207,12 @@ def main() -> None:
         "(writes benchmarks/BENCH_spec.json)",
     )
     parser.add_argument(
+        "--compare-sharded",
+        action="store_true",
+        help="only run the sharded/replicated serving comparison "
+        "(writes benchmarks/BENCH_sharded.json; needs >= 4 devices)",
+    )
+    parser.add_argument(
         "--trace-out",
         metavar="PATH",
         default=None,
@@ -1045,6 +1239,9 @@ def main() -> None:
         return
     if args.compare_spec:
         bench_spec_compare()
+        return
+    if args.compare_sharded:
+        bench_sharded_compare()
         return
     bench_table2_energy()
     bench_table3_latency()

@@ -24,6 +24,16 @@ Run:  PYTHONPATH=src python examples/serve_lm.py [--arch codeqwen15_7b]
           --cache-layout paged --prefill-chunk 16
       PYTHONPATH=src python examples/serve_lm.py --impl ssa --spike-storage packed \
           --cache-layout paged --draft-k 4
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+          PYTHONPATH=src python examples/serve_lm.py --impl ssa \
+          --spike-storage packed --cache-layout paged --mesh-shards 2 --replicas 2
+
+``--mesh-shards N`` shards the KV-cache heads N ways over a device mesh
+(tensor parallelism; needs N devices — force them on CPU with the
+``XLA_FLAGS`` shown above) and ``--replicas N`` runs N engines behind one
+least-loaded admission queue (data parallelism); token streams stay
+bit-identical either way, and the final stats add per-shard pool bytes
+and per-replica request counts.
 
 Paged engines prefill in page-aligned chunks written straight into pool
 pages by default (``--prefill-chunk 0`` restores the one-shot slab-staged
@@ -45,7 +55,13 @@ import numpy as np
 from repro.configs import get_smoke_config, with_overrides
 from repro.models import build_model
 from repro.obs import Tracer, export_perfetto
-from repro.serving import DraftConfig, Request, ServingEngine, make_sampler
+from repro.serving import (
+    DraftConfig,
+    ReplicatedEngine,
+    Request,
+    ServingEngine,
+    make_sampler,
+)
 
 
 def main():
@@ -101,6 +117,15 @@ def main():
     ap.add_argument("--draft-time-steps", type=int, default=None,
                     help="SSA time steps for the draft model (default "
                          "half the target's; ignored without --draft-k)")
+    ap.add_argument("--mesh-shards", type=int, default=1, metavar="N",
+                    help="shard KV-cache heads N ways over a device mesh "
+                         "(tensor parallelism; needs N devices — on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8; streams stay bit-identical)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="run N engine replicas behind one least-loaded "
+                         "admission queue (data parallelism; every engine "
+                         "kwarg, --num-pages included, is per replica)")
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="trace the run and export Perfetto/Chrome-trace "
                          "JSON to PATH (open at ui.perfetto.dev)")
@@ -131,13 +156,22 @@ def main():
     tracer = (Tracer() if args.trace_out or args.trace_events else None)
     draft = (DraftConfig(k=args.draft_k, time_steps=args.draft_time_steps)
              if args.draft_k else None)
-    engine = ServingEngine(model, params, num_slots=args.slots,
-                           max_seq=args.max_seq, sampler=sampler,
-                           page_size=args.page_size, num_pages=args.num_pages,
-                           share_prefix=args.share_prefix,
-                           prefix_cache_pages=args.prefix_cache_pages,
-                           prefill_chunk=args.prefill_chunk, draft=draft,
-                           tracer=tracer)
+    engine_kwargs = dict(num_slots=args.slots,
+                         max_seq=args.max_seq, sampler=sampler,
+                         page_size=args.page_size, num_pages=args.num_pages,
+                         share_prefix=args.share_prefix,
+                         prefix_cache_pages=args.prefix_cache_pages,
+                         prefill_chunk=args.prefill_chunk, draft=draft,
+                         tracer=tracer,
+                         mesh_shards=(args.mesh_shards
+                                      if args.mesh_shards > 1 else None))
+    if args.replicas > 1:
+        engine = ReplicatedEngine(model, params, replicas=args.replicas,
+                                  **engine_kwargs)
+        engines = engine.engines
+    else:
+        engine = ServingEngine(model, params, **engine_kwargs)
+        engines = [engine]
 
     rng = np.random.default_rng(0)
     system = (rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
@@ -167,12 +201,18 @@ def main():
             if ticks % 8 == 0:
                 done = sum(r.done for r in reqs)
                 extra = ""
-                if engine.paged:
-                    s = engine.stats()
-                    extra = (f" pages={s['pages_used']}/{s['pages_used'] + s['pages_free']}"
-                             f" preempted={s['preempted_now']}")
-                print(f"tick {ticks:4d}: active={len(engine.active)} "
-                      f"queued={len(engine.queue)} done={done}{extra}")
+                if engines[0].paged:
+                    ss = [e.stats() for e in engines]
+                    used = sum(s["pages_used"] for s in ss)
+                    total = sum(s["pages_used"] + s["pages_free"] for s in ss)
+                    pre = sum(s["preempted_now"] for s in ss)
+                    extra = f" pages={used}/{total} preempted={pre}"
+                active = sum(len(e.active) for e in engines)
+                queued = sum(len(e.queue) for e in engines)
+                if args.replicas > 1:
+                    queued += len(engine.queue)
+                print(f"tick {ticks:4d}: active={active} "
+                      f"queued={queued} done={done}{extra}")
             if ticks > 500:
                 break
         if ticks > 500:
@@ -186,42 +226,57 @@ def main():
     print(f"kv cache: {engine.kv_cache_nbytes() / 2**20:.2f} MiB "
           f"(impl={cfg.attention.impl}, storage={cfg.attention.spike_storage}, "
           f"backend={cfg.attention.backend})")
-    print(f"prefill compiles: {engine.num_prefill_compiles} "
+    if args.mesh_shards > 1:
+        shard_bytes = engines[0].kv_shard_nbytes()
+        per = " + ".join(f"{b / 2**20:.2f}" for b in shard_bytes)
+        print(f"tensor parallel: {args.mesh_shards} shards over "
+              f"{len(jax.devices())} devices, per-shard kv pool "
+              f"{per} MiB" + (" (each replica)" if args.replicas > 1 else ""))
+    if args.replicas > 1:
+        counts = engine.request_counts()
+        print(f"replicas: {args.replicas} engines, dispatched="
+              f"{'/'.join(map(str, counts))} requests, joint peak "
+              f"concurrency {engine.max_concurrency_seen} rows")
+    print(f"prefill compiles: {sum(e.num_prefill_compiles for e in engines)} "
           f"(power-of-two length buckets)")
-    if engine.paged:
-        s = engine.stats()
-        print(f"paged scheduler: page_size={s['page_size']} "
-              f"pool={s['num_pages']} pages (peak used {s['peak_pages_used']}), "
-              f"preemptions={s['preemptions']} resumes={s['resumes']} "
-              f"replay_steps={s['replay_steps']} migrations={s['migrations']} "
-              f"max_concurrency={s['max_concurrency_seen']} "
-              f"queue_wait={s['queue_wait_ticks']} ticks")
-        if s["prefill_chunk"]:
-            print(f"chunked prefill: chunk={s['prefill_chunk']} tokens, "
-                  f"{s['chunked_prefills']} admissions in "
-                  f"{s['prefill_chunks_run']} chunks "
-                  f"(skipped={s['prefill_chunks_skipped']} shared-resident, "
-                  f"pauses={s['prefill_pauses']} aborts={s['prefill_aborts']})")
-        if s.get("prefix_cache_pages"):
-            looked_up = s["cache_hits"] + s["cache_misses"]
-            rate = s["cache_hits"] / max(looked_up, 1)
-            print(f"prefix cache: capacity={s['prefix_cache_pages']} pages, "
-                  f"{s['cache_inserts']} inserts, {s['cache_hits']} hits "
-                  f"({rate:.0%} of {looked_up} lookups), "
-                  f"evictions={s['cache_evictions']} "
-                  f"resident_now={s['cached_pages_now']}")
-    if draft is not None:
-        s = engine.stats()
-        drafted = s["spec_drafted_tokens"]
-        rate = s["spec_accepted_tokens"] / max(drafted, 1)
-        print(f"speculative decode: k={draft.k}, {s['spec_ticks']} spec "
-              f"ticks, {drafted} drafted / {s['spec_accepted_tokens']} "
-              f"accepted ({rate:.1%}), verify dispatches="
-              f"{s['verify_dispatches']} draft={s['draft_dispatches']}")
-        if s["share_prefix"]:
-            print(f"prefix sharing: shared_page_hits={s['shared_page_hits']} "
-                  f"cow_copies={s['cow_copies']} "
-                  f"shared_pages_now={s['shared_pages_now']}")
+    for i, e in enumerate(engines):
+        tag = f"replica {i} " if args.replicas > 1 else ""
+        if e.paged:
+            s = e.stats()
+            print(f"{tag}paged scheduler: page_size={s['page_size']} "
+                  f"pool={s['num_pages']} pages (peak used {s['peak_pages_used']}), "
+                  f"preemptions={s['preemptions']} resumes={s['resumes']} "
+                  f"replay_steps={s['replay_steps']} migrations={s['migrations']} "
+                  f"max_concurrency={s['max_concurrency_seen']} "
+                  f"queue_wait={s['queue_wait_ticks']} ticks")
+            if s["prefill_chunk"]:
+                print(f"{tag}chunked prefill: chunk={s['prefill_chunk']} tokens, "
+                      f"{s['chunked_prefills']} admissions in "
+                      f"{s['prefill_chunks_run']} chunks "
+                      f"(skipped={s['prefill_chunks_skipped']} shared-resident, "
+                      f"pauses={s['prefill_pauses']} aborts={s['prefill_aborts']})")
+            if s.get("prefix_cache_pages"):
+                looked_up = s["cache_hits"] + s["cache_misses"]
+                rate = s["cache_hits"] / max(looked_up, 1)
+                print(f"{tag}prefix cache: capacity={s['prefix_cache_pages']} "
+                      f"pages, {s['cache_inserts']} inserts, "
+                      f"{s['cache_hits']} hits "
+                      f"({rate:.0%} of {looked_up} lookups), "
+                      f"evictions={s['cache_evictions']} "
+                      f"resident_now={s['cached_pages_now']}")
+        if draft is not None:
+            s = e.stats()
+            drafted = s["spec_drafted_tokens"]
+            rate = s["spec_accepted_tokens"] / max(drafted, 1)
+            print(f"{tag}speculative decode: k={draft.k}, {s['spec_ticks']} "
+                  f"spec ticks, {drafted} drafted / {s['spec_accepted_tokens']} "
+                  f"accepted ({rate:.1%}), verify dispatches="
+                  f"{s['verify_dispatches']} draft={s['draft_dispatches']}")
+            if s["share_prefix"]:
+                print(f"{tag}prefix sharing: "
+                      f"shared_page_hits={s['shared_page_hits']} "
+                      f"cow_copies={s['cow_copies']} "
+                      f"shared_pages_now={s['shared_pages_now']}")
     if tracer is not None:
         m = engine.metrics
         ttft, itl = m.histogram("ttft_ticks"), m.histogram("intertoken_wall_s")

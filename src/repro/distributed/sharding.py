@@ -187,6 +187,115 @@ def constrain(x: jax.Array, name: str) -> jax.Array:
     )
 
 
+class ServingTPRules(ShardingRules):
+    """Serving-time tensor parallelism over the ``model`` mesh axis.
+
+    Unlike the Megatron-style training rules above, the serving engine's
+    contract is **bit-identity**: a head-sharded decode must emit exactly
+    the token stream the single-device engine emits.  Any cross-device
+    *float reduction* (a psum over a row-sharded ``wo`` contraction, a
+    sharded-axis norm) can reorder sums and flip a downstream Bernoulli
+    ``u < p`` comparison, so these rules shard only axes that are never
+    contracted: attention heads (batch-like inside the attention core,
+    per-head SSA counter streams come from ``derive_step_row_seeds``) and
+    the KV pool's page axis payloads.  Everything else — params, residual
+    stream, logits — stays replicated, making every collective pure data
+    movement (slice after the head projections, all-gather before the
+    ``wo`` contraction), never an arithmetic reduction.
+
+    ``batch_shardable=False`` keeps the data axis out of every spec and
+    keeps the MoE shard_map island (which keys on it) disabled.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh):
+        super().__init__(mesh, batch_shardable=False)
+
+    def act_spec(self, name: str, shape: tuple[int, ...]) -> Optional[P]:
+        m = self.model
+        if name == "attn_heads":   # post-RoPE q/k/v: (..., heads, hd)
+            if m > 1 and shape[-2] % m == 0:
+                return P(*([None] * (len(shape) - 2) + ["model", None]))
+            return P()
+        if name == "attn_gather":  # attention-core output, pre-``wo``
+            return P()
+        if name in ("btd_sp", "btd", "btf", "btv", "bthd", "becd"):
+            return P()             # residual stream replicated on every shard
+        return None
+
+
+# KV-cache leaf names whose second-to-last axis is the kv-head axis in every
+# layout this repo ships: slab dense (steps, B, S, Hkv, hd), slab packed
+# (steps, B, S, T, Hkv, W), paged dense (steps, pages, ps, Hkv, hd) and
+# paged packed (steps, pages, ps, T, Hkv, W).
+_HEAD_SHARDED_LEAVES = ("k", "v", "ks", "vs")
+
+
+def serving_cache_leaf_spec(
+    name: Optional[str], ndim: int, kv_heads: int, shards: int
+) -> P:
+    """PartitionSpec for one serving KV-cache leaf under head sharding.
+
+    Payload leaves shard their kv-head axis (always ``ndim - 2``) over
+    ``model`` when divisible; bookkeeping leaves (``pos``, ``bt``) and any
+    non-divisible payload replicate — replication is always bit-correct,
+    just not distributed.
+    """
+    if (
+        shards > 1
+        and name in _HEAD_SHARDED_LEAVES
+        and ndim >= 4
+        and kv_heads % shards == 0
+    ):
+        spec = [None] * ndim
+        spec[ndim - 2] = "model"
+        return P(*spec)
+    return P()
+
+
+def _leaf_name(path) -> Optional[str]:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return None
+
+
+def serving_cache_shardings(cache, mesh: jax.sharding.Mesh, kv_heads: int):
+    """Pytree of NamedShardings matching a serving cache pytree (for the
+    engine's initial ``device_put`` placement)."""
+    shards = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.sharding.NamedSharding(
+            mesh,
+            serving_cache_leaf_spec(
+                _leaf_name(path), leaf.ndim, kv_heads, shards
+            ),
+        ),
+        cache,
+    )
+
+
+def constrain_serving_cache(cache, rules: ShardingRules, kv_heads: int):
+    """Pin every cache leaf's sharding inside a traced serving entry point.
+
+    Applied to the *outputs* of the jitted decode / prefill / chunk / page
+    surgery functions so the cache round-trips tick after tick with a
+    stable sharding (GSPMD would otherwise be free to pick a different
+    layout per entry point, forcing a reshard—and a recompile—each tick).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.lax.with_sharding_constraint(
+            leaf,
+            jax.sharding.NamedSharding(
+                rules.mesh,
+                serving_cache_leaf_spec(
+                    _leaf_name(path), leaf.ndim, kv_heads, rules.model
+                ),
+            ),
+        ),
+        cache,
+    )
+
+
 def cache_spec(rules: Optional["ShardingRules"], kv_heads: int, window_or_seq: int) -> P:
     """KV-cache spec (B, S, Hkv, hd): batch over data when shardable, else
     sequence over all axes; kv heads over model when divisible, else seq."""

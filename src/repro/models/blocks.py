@@ -31,6 +31,7 @@ from repro.attention import (
 )
 from repro.attention.ann_xla import sdpa as _sdpa, sdpa_chunked as _sdpa_chunked
 from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
+from repro.distributed.sharding import constrain
 from repro.obs import trace_scope
 
 # ---------------------------------------------------------------------------
@@ -342,6 +343,13 @@ def attention_apply(
         if kv_source is None:
             k = apply_mrope(k, positions, a.rope_theta)
 
+    # Serving TP shards heads here (training rules and bare calls resolve
+    # these names to no-ops): heads are batch-like through the whole
+    # attention core, so slicing them is pure data movement.
+    q = constrain(q, "attn_heads")
+    k = constrain(k, "attn_heads")
+    v = constrain(v, "attn_heads")
+
     mode = (
         "train" if cache is None else ("decode" if cache_index is not None else "prefill")
     )
@@ -478,6 +486,10 @@ def attention_apply(
                 packed_v=packed_v,
             )
         )
+    # Replicate before out_norm / the ``wo`` contraction: both reduce over
+    # the (merged) head axis, and a cross-device float reduction there
+    # could reorder sums and break the serving bit-identity contract.
+    out = constrain(out, "attn_gather")
     out = out.astype(x.dtype).reshape(b, s, h_pad * a.head_dim)
     if a.impl in ("ssa", "spikformer"):
         out = norm_apply(p["out_norm"], out, "rmsnorm", 1e-6)

@@ -14,7 +14,13 @@ JSON that ``ui.perfetto.dev`` and ``chrome://tracing`` load directly:
 * **process "requests"** — one track (lifeline) per request uid showing
   its ``queued`` → ``running`` → (``preempted`` → ``running``)* span
   structure, with per-request instants (prefill chunks, CoW copies,
-  shared-prefix hits, migrations) pinned onto the lifeline.
+  shared-prefix hits, migrations) pinned onto the lifeline;
+* **process "replica N"** (replicated engines only) — engine events that
+  carry a ``replica`` tag are routed to their own process per replica,
+  each with its own phase tracks, events track, and counter tracks, so a
+  :class:`~repro.serving.replicas.ReplicatedEngine` run shows N engine
+  swimlanes side by side.  Untagged traces are exported exactly as
+  before — the replica processes only appear when the tag does.
 
 Timestamps are ``time.perf_counter()`` stamps normalised so the first
 event sits at t=0; durations come from the ``phase`` events' ``dur_s``
@@ -29,6 +35,7 @@ __all__ = ["to_chrome_trace", "export_perfetto"]
 
 _ENGINE_PID = 1
 _REQUEST_PID = 2
+_REPLICA_PID_BASE = 100  # replica i -> pid 100 + i, own phase/counter tracks
 _EVENTS_TID = 0          # engine-process instant-event track
 _PHASE_TID_BASE = 1
 
@@ -88,9 +95,23 @@ def to_chrome_trace(events) -> dict:
     out: list[dict] = []
     out += _meta(_ENGINE_PID, "serving engine", _EVENTS_TID, "events")
 
-    phase_tids: dict[str, int] = {}
+    engine_meta = {_ENGINE_PID}
+    phase_tids: dict[tuple[int, str], int] = {}     # (pid, phase) -> tid
     uid_seen: dict[int, bool] = {}
     open_spans: dict[tuple[int, str], float] = {}   # (uid, span) -> start
+
+    def engine_pid(e) -> int:
+        """Engine-side pid for an event: replica-tagged events get their
+        replica's own process, everything else the shared engine one."""
+        replica = e.data.get("replica")
+        if replica is None:
+            return _ENGINE_PID
+        pid = _REPLICA_PID_BASE + int(replica)
+        if pid not in engine_meta:
+            engine_meta.add(pid)
+            out.extend(_meta(pid, f"replica {int(replica)}",
+                             _EVENTS_TID, "events"))
+        return pid
 
     def close_span(uid, span, wall):
         start = open_spans.pop((uid, span), None)
@@ -103,15 +124,17 @@ def to_chrome_trace(events) -> dict:
 
     for e in events:
         if e.kind == "phase":
+            pid = engine_pid(e)
             name = e.data.get("phase", "phase")
-            tid = phase_tids.get(name)
+            tid = phase_tids.get((pid, name))
             if tid is None:
-                tid = phase_tids[name] = _PHASE_TID_BASE + len(phase_tids)
-                out += _meta(_ENGINE_PID, "serving engine", tid,
-                             f"phase:{name}")[1:]
+                tid = _PHASE_TID_BASE + sum(
+                    1 for p, _ in phase_tids if p == pid)
+                phase_tids[(pid, name)] = tid
+                out += _meta(pid, "", tid, f"phase:{name}")[1:]
             dur = float(e.data.get("dur_s", 0.0))
             out.append({
-                "ph": "X", "name": name, "pid": _ENGINE_PID, "tid": tid,
+                "ph": "X", "name": name, "pid": pid, "tid": tid,
                 "ts": us(e.wall - dur), "dur": round(dur * 1e6, 3),
                 "args": {"tick": e.tick},
             })
@@ -140,14 +163,14 @@ def to_chrome_trace(events) -> dict:
             })
         elif e.kind in _ENGINE_INSTANTS or e.uid is None:
             out.append({
-                "ph": "i", "s": "t", "name": e.kind, "pid": _ENGINE_PID,
+                "ph": "i", "s": "t", "name": e.kind, "pid": engine_pid(e),
                 "tid": _EVENTS_TID, "ts": us(e.wall), "args": args,
             })
         if e.kind == "decode_tick":
             for counter in ("active", "pages_used", "cache_pages"):
                 if counter in e.data:
                     out.append({
-                        "ph": "C", "name": counter, "pid": _ENGINE_PID,
+                        "ph": "C", "name": counter, "pid": engine_pid(e),
                         "ts": us(e.wall),
                         "args": {counter: e.data[counter]},
                     })

@@ -1,11 +1,13 @@
 from .engine import DraftConfig, Request, ServingEngine
 from .paging import BlockTables, PagePool, pages_for_rows
+from .replicas import ReplicatedEngine
 from .sampling import Sampler, greedy, make_sampler
 
 __all__ = [
     "BlockTables",
     "DraftConfig",
     "PagePool",
+    "ReplicatedEngine",
     "Request",
     "Sampler",
     "ServingEngine",

@@ -316,6 +316,62 @@ def _model_jit(model, key: str, make):
     return cache[key]
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel (mesh_shards=) wrappers
+#
+# The serving TP rules live in a contextvar that model code reads at TRACE
+# time, so the rules must be installed inside the traced body, not around
+# the jit call.  Outputs are pinned to their canonical shardings (cache
+# leaves head-sharded, logits replicated) so the cache round-trips every
+# tick with a stable layout — without this GSPMD may pick a different
+# output sharding per entry point and reshard (+ recompile) on every hop
+# between decode / scrub / scatter / copy.
+# ---------------------------------------------------------------------------
+
+
+def _tp_wrap_model(make, rules, kv_heads: int):
+    """Wrap a (logits, cache)-returning model entry point for serving TP."""
+    from repro.distributed.sharding import (
+        constrain_serving_cache, reset_rules, use_rules,
+    )
+
+    def make_wrapped():
+        fn = make()
+
+        def wrapped(*args):
+            tok = use_rules(rules)
+            try:
+                logits, cache = fn(*args)
+            finally:
+                reset_rules(tok)
+            logits = jax.lax.with_sharding_constraint(
+                logits,
+                jax.sharding.NamedSharding(
+                    rules.mesh, jax.sharding.PartitionSpec()
+                ),
+            )
+            return logits, constrain_serving_cache(cache, rules, kv_heads)
+
+        return wrapped
+
+    return make_wrapped
+
+
+def _tp_wrap_cache(make, rules, kv_heads: int):
+    """Wrap a cache-returning pool-surgery function for serving TP."""
+    from repro.distributed.sharding import constrain_serving_cache
+
+    def make_wrapped():
+        fn = make()
+
+        def wrapped(*args):
+            return constrain_serving_cache(fn(*args), rules, kv_heads)
+
+        return wrapped
+
+    return make_wrapped
+
+
 class _NullCtx:
     """Reusable no-op context: the untraced engine's phase 'timer'."""
 
@@ -390,7 +446,9 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  draft: Optional[DraftConfig] = None,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 mesh_shards: Optional[int] = None,
+                 replica_id: Optional[int] = None):
         self.model = model
         self.params = params
         self.b = num_slots
@@ -427,20 +485,58 @@ class ServingEngine:
             np.asarray(jax.device_get(derive_request_seeds(None, 1)))[0]
         )
 
+        # ---- tensor parallelism over the `model` mesh axis ----
+        # Params replicate, attention heads + KV-cache leaves shard (see
+        # ServingTPRules: every collective is data movement, never a float
+        # reduction, so sharded streams are bit-identical to unsharded).
+        # `replica_id` only tags emitted events; the data-parallel layer
+        # itself lives in serving/replicas.py.
+        self.mesh_shards = int(mesh_shards) if mesh_shards else 1
+        if self.mesh_shards < 1:
+            raise ValueError(f"mesh_shards must be >= 1, got {mesh_shards}")
+        self.replica_id = replica_id
+        self._event_tags: dict = {}
+        if replica_id is not None:
+            self._event_tags["replica"] = int(replica_id)
+        self.mesh = None
+        self._tp_rules = None
+        attn_cfg = getattr(getattr(model, "cfg", None), "attention", None)
+        self._kv_heads = getattr(attn_cfg, "num_kv_heads", 1) or 1
+        if self.mesh_shards > 1:
+            from repro.distributed.sharding import ServingTPRules
+            from repro.launch.mesh import make_local_mesh
+
+            ndev = len(jax.devices())
+            if ndev < self.mesh_shards:
+                raise ValueError(
+                    f"mesh_shards={self.mesh_shards} needs at least that "
+                    f"many devices, found {ndev} (CPU hosts: set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)"
+                )
+            self.mesh = make_local_mesh(model=self.mesh_shards)
+            self._tp_rules = ServingTPRules(self.mesh)
+            self._event_tags["shards"] = self.mesh_shards
+            self.params = jax.device_put(
+                params,
+                jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec()
+                ),
+            )
+
         # models outside the decoder-LM family predate the seeds kwarg;
         # they keep their rng-derived streams (no serving identity contract)
         decode_params = inspect.signature(model.decode_step).parameters
         self._seeded = "seeds" in decode_params
         self._has_logits_at = "logits_at" in decode_params
         if self._seeded:
-            self._decode = _model_jit(
+            self._decode = self._jit_model(
                 model, "decode_seeded",
                 lambda: lambda p, batch, cache, idx, seeds: model.decode_step(
                     p, batch, cache, idx, seeds=seeds
                 ),
             )
         else:
-            self._decode = _model_jit(
+            self._decode = self._jit_model(
                 model, "decode",
                 lambda: lambda p, batch, cache, idx: model.decode_step(
                     p, batch, cache, idx
@@ -507,13 +603,33 @@ class ServingEngine:
                     f"needed for max_seq={max_seq})"
                 )
             self.tables = BlockTables(num_slots, self.pages_per_seq)
-            self._scrub = _scrub_jit
-            self._scatter = _scatter_jit
-            self._copy = _copy_jit
-            self.cache = model.init_cache(
+            if self._tp_rules is None:
+                self._scrub = _scrub_jit
+                self._scatter = _scatter_jit
+                self._copy = _copy_jit
+            else:
+                # pool surgery must preserve the head-sharded leaf layout;
+                # memoised per (model, shard count) like the model entries
+                self._scrub = _model_jit(
+                    model, self._jit_key("scrub"),
+                    _tp_wrap_cache(
+                        lambda: _scrub_pages, self._tp_rules, self._kv_heads),
+                )
+                self._scatter = _model_jit(
+                    model, self._jit_key("scatter"),
+                    _tp_wrap_cache(
+                        lambda: _scatter_pages, self._tp_rules,
+                        self._kv_heads),
+                )
+                self._copy = _model_jit(
+                    model, self._jit_key("copy"),
+                    _tp_wrap_cache(
+                        lambda: _copy_page, self._tp_rules, self._kv_heads),
+                )
+            self.cache = self._place_cache(model.init_cache(
                 num_slots, max_seq, layout="paged",
                 num_pages=num_pages, page_size=ps,
-            )
+            ))
             # per-layer rolling extents (sliding windows) — the engine needs
             # them to know which columns a decode tick writes (CoW guard)
             extents = {max_seq}
@@ -559,7 +675,7 @@ class ServingEngine:
                 self.prefill_chunk = pc
             self._chunk = None
             if self.prefill_chunk:
-                self._chunk = _model_jit(
+                self._chunk = self._jit_model(
                     model, "chunk",
                     lambda: lambda p, batch, cache, idx, seeds, last:
                         model.decode_step(
@@ -581,7 +697,7 @@ class ServingEngine:
                     "(AttentionConfig.cache_layout='paged'); this model is "
                     f"configured for layout={self.layout!r}"
                 )
-            self.cache = model.init_cache(num_slots, max_seq)
+            self.cache = self._place_cache(model.init_cache(num_slots, max_seq))
         self._submit_tick: dict[int, int] = {}
         self._submit_wall: dict[int, float] = {}
         self._last_token: dict[int, tuple[int, float]] = {}  # (tick, wall)
@@ -594,14 +710,14 @@ class ServingEngine:
         self._prefill_seeded = "seeds" in prefill_params
         if self._bucketed:
             if self._prefill_seeded:
-                self._prefill = _model_jit(
+                self._prefill = self._jit_model(
                     model, "prefill_seeded",
                     lambda: lambda p, batch, cache, last, seeds: model.prefill(
                         p, batch, cache, logits_at=last, seeds=seeds
                     ),
                 )
             else:
-                self._prefill = _model_jit(
+                self._prefill = self._jit_model(
                     model, "prefill",
                     lambda: lambda p, batch, cache, last: model.prefill(
                         p, batch, cache, logits_at=last
@@ -613,7 +729,7 @@ class ServingEngine:
         # reset to after prefill (zeros / packed enc(0) / pos=-1); also the
         # template every admission prefills from (functional updates never
         # mutate it)
-        self._init_row = model.init_cache(1, max_seq)
+        self._init_row = self._place_cache(model.init_cache(1, max_seq))
         # smallest per-layer cache extent along the sequence axis (leaves are
         # (L, B, S, ...)): sliding-window layers allocate S = window, and a
         # padded prompt longer than that would evict real rows via the
@@ -662,13 +778,43 @@ class ServingEngine:
         "pages_used", "Peak pool pages in use.")
 
     # ------------------------------------------------------------------
+    # tensor-parallel plumbing
+    # ------------------------------------------------------------------
+    def _jit_key(self, key: str) -> str:
+        """Jit-cache key, suffixed per shard count: a sharded engine must
+        never reuse an unsharded engine's traces (and vice versa) even when
+        both wrap the same model instance."""
+        return key if self._tp_rules is None else f"{key}@tp{self.mesh_shards}"
+
+    def _jit_model(self, model, key: str, make):
+        if self._tp_rules is not None:
+            make = _tp_wrap_model(make, self._tp_rules, self._kv_heads)
+        return _model_jit(model, self._jit_key(key), make)
+
+    def _place_cache(self, cache):
+        """Initial device placement for a cache tree: head-sharded payload
+        leaves / replicated bookkeeping under TP, untouched otherwise."""
+        if self._tp_rules is None:
+            return cache
+        from repro.distributed.sharding import serving_cache_shardings
+
+        return jax.device_put(
+            cache, serving_cache_shardings(cache, self.mesh, self._kv_heads)
+        )
+
+    # ------------------------------------------------------------------
     # observability plumbing
     # ------------------------------------------------------------------
     def _trace(self, kind: str, *, uid=None, row=None, **data):
         """Emit one lifecycle event if a tracer is attached (no-op and
-        allocation-free otherwise — the zero-overhead-when-disabled path)."""
+        allocation-free otherwise — the zero-overhead-when-disabled path).
+        Sharded / replicated engines tag every event (``shards=``,
+        ``replica=``); plain engines add nothing, keeping their event
+        signatures byte-identical to earlier releases."""
         tr = self.tracer
         if tr is not None:
+            if self._event_tags:
+                data = {**self._event_tags, **data}
             tr.emit(kind, tick=self._ticks.value, uid=uid, row=row, **data)
 
     def _phase(self, name: str):
@@ -882,6 +1028,23 @@ class ServingEngine:
                 break
             shared.append(page)
         return shared, keys
+
+    def prefix_affinity(self, req: Request) -> int:
+        """Resident full-prefix pages this engine could map for ``req``
+        without prefilling them.  A read-only probe for replica placement
+        (serving/replicas.py): unlike :meth:`_resident_prefix` it claims
+        nothing and moves no cache-miss counters, so probing every replica
+        leaves their books untouched."""
+        if not (self.paged and self._sharable(req)):
+            return 0
+        if req.seed is None:
+            req.seed = self.default_seed   # what submit() would set
+        n = 0
+        for key in self._prefix_keys(req):
+            if key not in self._prefix_map:
+                break
+            n += 1
+        return n
 
     def _claim_shared(self, shared: list[int], uid: int):
         for page in shared:
@@ -1544,16 +1707,25 @@ class ServingEngine:
                 "logits_at= (catch-up runs as a prefix-extend chunk)"
             )
         self._draft_model = dmodel
-        self._draft_params = (draft.params if draft.params is not None
-                              else self.params)
+        if draft.params is not None:
+            self._draft_params = draft.params
+            if self._tp_rules is not None:
+                self._draft_params = jax.device_put(
+                    draft.params,
+                    jax.sharding.NamedSharding(
+                        self.mesh, jax.sharding.PartitionSpec()
+                    ),
+                )
+        else:
+            self._draft_params = self.params
         self.spec_k = int(draft.k)
-        self._draft_decode = _model_jit(
+        self._draft_decode = self._jit_model(
             dmodel, "decode_seeded",
             lambda: lambda p, batch, cache, idx, seeds: dmodel.decode_step(
                 p, batch, cache, idx, seeds=seeds
             ),
         )
-        self._draft_chunk = _model_jit(
+        self._draft_chunk = self._jit_model(
             dmodel, "chunk",
             lambda: lambda p, batch, cache, idx, seeds, last:
                 dmodel.decode_step(
@@ -1607,14 +1779,15 @@ class ServingEngine:
             self.draft_pool = PagePool(dn, ps,
                                        on_event=self._draft_pool_event)
             self.draft_tables = BlockTables(self.b, self.pages_per_seq)
-            self._draft_cache = dmodel.init_cache(
+            self._draft_cache = self._place_cache(dmodel.init_cache(
                 self.b, self.max_seq, layout="paged",
                 num_pages=dn, page_size=ps,
-            )
+            ))
         else:
             self.draft_pool = None
             self.draft_tables = None
-            self._draft_cache = dmodel.init_cache(self.b, self.max_seq)
+            self._draft_cache = self._place_cache(
+                dmodel.init_cache(self.b, self.max_seq))
 
     def _draft_pool_event(self, kind: str, **data):
         """Draft PagePool hook: separate counters, ``pool="draft"`` trace
@@ -2194,8 +2367,33 @@ class ServingEngine:
         bit-planes (1 bit/spike) instead of f32/bf16 lanes, and with
         ``cache_layout="paged"`` this is the shared page pool — the actual
         allocation, sized by ``num_pages`` rather than
-        ``num_slots * max_seq``."""
+        ``num_slots * max_seq``.  The count is logical (sharding-invariant):
+        a head-sharded engine reports the same total as an unsharded one;
+        :meth:`kv_shard_nbytes` breaks it down per model shard."""
         return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.cache))
+
+    def kv_shard_nbytes(self) -> list[int]:
+        """Per-model-shard resident KV bytes (one entry per shard).
+
+        Head-sharded payload leaves contribute ``nbytes / shards`` to each
+        shard; replicated leaves (``pos``, ``bt``, non-divisible payloads)
+        contribute their full size to every shard — exactly the bytes one
+        device along the ``model`` axis holds."""
+        shards = self.mesh_shards
+        if shards == 1:
+            return [self.kv_cache_nbytes()]
+        from repro.distributed.sharding import (
+            _leaf_name, serving_cache_leaf_spec,
+        )
+
+        per = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.cache)[0]:
+            spec = serving_cache_leaf_spec(
+                _leaf_name(path), leaf.ndim, self._kv_heads, shards
+            )
+            sharded = any(ax is not None for ax in spec)
+            per += int(leaf.nbytes) // shards if sharded else int(leaf.nbytes)
+        return [per] * shards
 
     def stats(self) -> dict:
         """Scheduler observability: a frozen snapshot (plain dict, safe to
@@ -2215,6 +2413,13 @@ class ServingEngine:
             "tokens_sampled": c("tokens_sampled").value,
             "compile_events": c("compile_events").value,
         }
+        # sharded / replicated keys appear only when configured, so the
+        # plain engine's schema (which tests pin) is untouched
+        if self.mesh_shards > 1:
+            out["mesh_shards"] = self.mesh_shards
+            out["kv_shard_nbytes"] = self.kv_shard_nbytes()
+        if self.replica_id is not None:
+            out["replica"] = self.replica_id
         if self._draft_model is not None:
             out.update(
                 spec_k=self.spec_k,

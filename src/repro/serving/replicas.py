@@ -1,0 +1,184 @@
+"""Data-parallel serving replicas behind one admission queue.
+
+:class:`ReplicatedEngine` fans one request stream out over N independent
+:class:`~repro.serving.engine.ServingEngine` replicas.  Each replica owns
+its rows, page pool, and (optionally) its TP mesh shards; the replica
+layer owns only host-side dispatch state, so it composes with every
+engine feature — paging, prefix sharing, the persistent prefix cache,
+chunked prefill, speculative decode, tensor parallelism (``mesh_shards=``
+is just another engine kwarg).
+
+Dispatch policy (least-loaded with prefix affinity), evaluated per queued
+request at the head of every tick:
+
+1. **Prefix affinity first** — replicas whose prefix map already holds
+   pages for the request's full prompt-prefix (live shared *or* parked in
+   the PR-8 persistent cache tier) win, deepest resident prefix first, so
+   shared-prefix tenants land where their pages already are instead of
+   re-prefilling the prefix on a cold replica.
+2. **Least loaded** — fewest requests in flight (queued + active +
+   preempted + mid-chunked-prefill).
+3. **Most free pages** (paged) / most free rows (slab), then the lowest
+   replica index as the deterministic tie-break.
+
+Determinism: the policy reads only host-side scheduler state, so a given
+submission order always produces the same placement — and because RNG
+contract v2 keys every draw by (request seed, position, ...), never by
+engine or row, each request's token stream is invariant to *which*
+replica serves it.  Streams from a replicated engine are bit-identical
+to a single engine serving the same requests (greedy sampling; see
+docs/serving.md for the claim's scope).
+
+Invariants the scheduler fuzz pins (tests/test_scheduler_fuzz.py):
+a request is dispatched to exactly one replica, per-replica page
+accounting conserves independently, and per-replica counters are
+monotone.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+from repro.obs.trace import Tracer
+
+from .engine import Request, ServingEngine
+
+__all__ = ["ReplicatedEngine"]
+
+# per-replica counters summed into the aggregate stats() view
+_SUMMED = (
+    "requests_submitted",
+    "requests_finished",
+    "tokens_sampled",
+    "queue_wait_ticks",
+    "active",
+    "queued",
+)
+
+
+class ReplicatedEngine:
+    """N serving engines behind one admission queue (see module docstring).
+
+    Engine kwargs (``num_slots``, ``num_pages``, ``mesh_shards``, ...) are
+    **per replica**: two replicas with ``num_pages=34`` each hold the same
+    total pool bytes as one engine with ``num_pages=68``.
+    """
+
+    def __init__(self, model, params, *, replicas: int,
+                 tracer: Optional[Tracer] = None, **engine_kwargs):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.replicas = int(replicas)
+        self.engines = [
+            ServingEngine(model, params, replica_id=i, tracer=tracer,
+                          **engine_kwargs)
+            for i in range(self.replicas)
+        ]
+        self.queue: collections.deque[Request] = collections.deque()
+        self._owner: dict[int, int] = {}      # uid -> replica index
+        self.dispatched = [0] * self.replicas
+        self._peak_concurrency = 0
+
+    # ------------------------------------------------------------------
+    # admission + placement
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    @staticmethod
+    def _load(eng: ServingEngine) -> int:
+        n = len(eng.queue) + len(eng.active)
+        if eng.paged:
+            n += len(eng._preempted) + (1 if eng._inflight is not None else 0)
+        return n
+
+    @staticmethod
+    def _headroom(eng: ServingEngine) -> int:
+        return eng.pool.num_free if eng.paged else eng.b - len(eng.active)
+
+    def _place(self, req: Request) -> int:
+        return min(
+            range(self.replicas),
+            key=lambda i: (
+                -self.engines[i].prefix_affinity(req),
+                self._load(self.engines[i]),
+                -self._headroom(self.engines[i]),
+                i,
+            ),
+        )
+
+    def _dispatch(self):
+        while self.queue:
+            req = self.queue.popleft()
+            if req.uid in self._owner:
+                raise ValueError(
+                    f"request uid {req.uid} was already dispatched to "
+                    f"replica {self._owner[req.uid]}; uids must be unique"
+                )
+            i = self._place(req)
+            self._owner[req.uid] = i
+            self.dispatched[i] += 1
+            self.engines[i].submit(req)
+
+    def owner_of(self, uid: int) -> Optional[int]:
+        """Replica index serving ``uid`` (None if not yet dispatched)."""
+        return self._owner.get(uid)
+
+    # ------------------------------------------------------------------
+    # drive loop
+    # ------------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """Dispatch queued requests, then tick every replica once.
+        Returns the requests that finished this tick, in replica order."""
+        self._dispatch()
+        done: list[Request] = []
+        for eng in self.engines:
+            done.extend(eng.step())
+        total_active = sum(len(eng.active) for eng in self.engines)
+        self._peak_concurrency = max(self._peak_concurrency, total_active)
+        return done
+
+    @property
+    def has_pending_work(self) -> bool:
+        return bool(self.queue) or any(
+            eng.has_pending_work for eng in self.engines
+        )
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        ticks = 0
+        while self.has_pending_work and ticks < max_ticks:
+            done.extend(self.step())
+            ticks += 1
+        return done
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    @property
+    def max_concurrency_seen(self) -> int:
+        """Peak *joint* active rows across replicas in any single tick
+        (summing per-replica peaks would overcount unaligned peaks)."""
+        return self._peak_concurrency
+
+    def request_counts(self) -> list[int]:
+        """Requests dispatched to each replica, by replica index."""
+        return list(self.dispatched)
+
+    def kv_cache_nbytes(self) -> int:
+        return sum(eng.kv_cache_nbytes() for eng in self.engines)
+
+    def stats(self) -> dict:
+        """Aggregate counters plus each replica's own ``stats()`` dict."""
+        per = [eng.stats() for eng in self.engines]
+        out = {
+            "replicas": self.replicas,
+            "dispatched": self.request_counts(),
+            "queued_central": len(self.queue),
+            "kv_cache_nbytes": self.kv_cache_nbytes(),
+            "max_concurrency_seen": self.max_concurrency_seen,
+            "per_replica": per,
+        }
+        for key in _SUMMED:
+            out[key] = sum(s.get(key, 0) for s in per)
+        return out

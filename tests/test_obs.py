@@ -194,6 +194,29 @@ def test_chrome_trace_counter_tracks_from_decode_ticks():
     assert any(e["args"].get("pages_used") == 2 for e in counters)
 
 
+def test_chrome_trace_replica_tagged_events_get_own_process():
+    tr = Tracer()
+    for i in (0, 1):
+        tr.emit("phase", tick=0, phase="dispatch", dur_s=0.01, replica=i)
+        tr.emit("decode_tick", tick=0, active=1, pages_used=3 + i,
+                replica=i)
+    doc = to_chrome_trace(tr.events())
+    evs = doc["traceEvents"]
+    # one process per replica, named after it
+    names = {e["pid"]: e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert names[100] == "replica 0" and names[101] == "replica 1"
+    # each replica's phase slices and counters land in its own process
+    for i in (0, 1):
+        assert any(e["ph"] == "X" and e["pid"] == 100 + i
+                   and e["name"] == "dispatch" for e in evs)
+        assert any(e["ph"] == "C" and e["pid"] == 100 + i
+                   and e["args"].get("pages_used") == 3 + i for e in evs)
+    # untagged traces never allocate replica processes
+    plain = to_chrome_trace(_demo_events())
+    assert all(e["pid"] < 100 for e in plain["traceEvents"])
+
+
 # ---------------------------------------------------------------------------
 # engine integration
 # ---------------------------------------------------------------------------

@@ -110,6 +110,73 @@ def ssa_attention_energy(w: Workload) -> dict:
     return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
 
 
+def sdsa_attention_energy(w: Workload) -> dict:
+    """Spike-driven self-attention (arXiv 2307.01694 lineage, the
+    ``sdsa-xla`` / ``sdsa-fused-packed`` backends): k AND v column sums —
+    no N x N score map at all, so every per-step term is linear in N.
+    Per head per step: n*d_k ANDs (k&v), n*d_k counter increments (the
+    column sums), n*d_k Bernoulli encoders (one bank per query position x
+    channel under RNG contract v2), and n*d_k output ANDs (q gate)."""
+    n, h, dk, t = w.n, w.h, w.d_k, w.t
+    d = w.d
+    ands = t * h * 2 * n * dk                 # k&v + q-gate
+    counts = t * h * n * dk
+    encoders = t * h * n * dk
+    proc = ands * E_AND + counts * E_CNT8 + encoders * (E_CMP16 + E_LFSR16)
+    # memory mirrors SSA's scoping (QKV spike generation shared, score map
+    # absent by construction): binary streams only past the LIF layer
+    weights_once = 3 * d * d
+    per_step = (
+        4 * n * d / 8            # binary in/out streams of the QKV LIF layer
+        + 3 * n * d * 4 * 2      # qkv integer membrane updates write+read
+        + 4 * n * dk * h / 8     # Q,K,V into array + Attn out (bits)
+    )
+    mem = (weights_once + t * per_step) * E_SRAM_BYTE
+    return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
+
+
+def qksum_attention_energy(w: Workload) -> dict:
+    """Token-sum QK scoring (arXiv 2503.00226 lineage, the ``qksum-xla``
+    backend): per-token spike counts replace the QK^T contraction, so the
+    N x N stage is one integer add + one Bernoulli encoder per pair instead
+    of a d_k-deep dot product; the score spikes then gate a sparse s@v
+    accumulate and an output re-binarisation."""
+    n, h, dk, t = w.n, w.h, w.d_k, w.t
+    d = w.d
+    sums = t * h * 2 * n * dk                      # qsum + ksum counters
+    pair_adds = t * h * n * n                      # qsum_i + ksum_j
+    score_enc = t * h * n * n                      # Bernoulli score spikes
+    sv_acc = t * h * SPIKE_RATE * n * n * dk       # s@v gated accumulate
+    out_enc = t * h * n * dk                       # output re-binarisation
+    proc = (
+        sums * E_CNT8
+        + pair_adds * E_INT32_ADD
+        + (score_enc + out_enc) * (E_CMP16 + E_LFSR16)
+        + sv_acc * E_CNT8
+    )
+    # same stream scoping as SSA: the score spikes stay in-array; only the
+    # binary Q/K/V streams and the output bits touch SRAM
+    weights_once = 3 * d * d
+    per_step = (
+        4 * n * d / 8
+        + 3 * n * d * 4 * 2
+        + 4 * n * dk * h / 8
+    )
+    mem = (weights_once + t * per_step) * E_SRAM_BYTE
+    return {"processing_uJ": proc * 1e-6, "memory_uJ": mem * 1e-6}
+
+
+# modeled per-block energy by attention impl — the benchmark harness pairs
+# each serving backend with its family's analytic entry
+ATTENTION_ENERGY_BY_IMPL = {
+    "ann": ann_attention_energy,
+    "spikformer": spikformer_attention_energy,
+    "ssa": ssa_attention_energy,
+    "sdsa": sdsa_attention_energy,
+    "qksum": qksum_attention_energy,
+}
+
+
 # ---------------------------------------------------------------------------
 # KV-cache traffic model: dense vs packed spike storage (repro.bitpack)
 # ---------------------------------------------------------------------------

@@ -48,10 +48,19 @@ import time
 _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(_HERE, "BENCH_baseline.json")
 
-SCHEMA = 4
+# schema 5: backend section gains the addition-only backends (sdsa-xla /
+# sdsa-fused-packed / qksum-xla), the spiking-ViT event-stream serving row,
+# and the modeled per-block processing energy as a deterministic field
+SCHEMA = 5
 
 # exact-match (blocking) fields
-DET_BACKEND = ("cache_bytes", "modeled_bytes_moved_per_layer", "batch", "n_ctx")
+DET_BACKEND = (
+    "cache_bytes",
+    "modeled_bytes_moved_per_layer",
+    "modeled_processing_uJ",
+    "batch",
+    "n_ctx",
+)
 DET_PAGING_TOP = ("page_size", "trace", "concurrency_gain", "kv_bytes_ratio")
 DET_SHARING_TOP = (
     "trace",

@@ -275,8 +275,13 @@ def bench_backend_compare(record_path: str | None = None):
     Off-TPU the fused backends run the Pallas kernels in interpret mode, so
     their *latency* here is a correctness probe, not a perf number (the CSV
     marks it); bytes-moved comes from the traffic model and describes the
-    fused-kernel dataflow each backend realises.  One JSON record per
-    backend is appended to ``benchmarks/perf_trajectory.jsonl``.
+    fused-kernel dataflow each backend realises, and each backend also
+    carries its family's modeled per-block processing energy
+    (``energy_model.ATTENTION_ENERGY_BY_IMPL`` — the Table-II methodology
+    applied to the addition-only sdsa / qksum families too).  One JSON
+    record per backend is appended to ``benchmarks/perf_trajectory.jsonl``,
+    plus one record for the spiking-ViT event-stream serving workload
+    (prefill-only classification through the paged engine).
     """
     import jax
     import jax.numpy as jnp
@@ -285,7 +290,11 @@ def bench_backend_compare(record_path: str | None = None):
     from repro.configs import get_smoke_config, with_overrides
     from repro.models import build_model
 
-    from .energy_model import kv_decode_traffic
+    from .energy_model import (
+        ATTENTION_ENERGY_BY_IMPL,
+        Workload,
+        kv_decode_traffic,
+    )
 
     base = with_overrides(get_smoke_config("codeqwen15_7b"), attention__impl="ssa")
     variants = {
@@ -293,6 +302,18 @@ def bench_backend_compare(record_path: str | None = None):
         "ssa-fused": with_overrides(base, attention__backend="fused"),
         "ssa-fused-packed": with_overrides(
             base, attention__backend="fused", attention__spike_storage="packed"
+        ),
+        # addition-only family (Issue 10): spike-driven k&v column sums
+        # (dense + packed bit-plane decode) and token-sum QK scoring
+        "sdsa-xla": with_overrides(
+            base, attention__impl="sdsa", attention__backend="xla"
+        ),
+        "sdsa-fused-packed": with_overrides(
+            base, attention__impl="sdsa", attention__backend="fused",
+            attention__spike_storage="packed",
+        ),
+        "qksum-xla": with_overrides(
+            base, attention__impl="qksum", attention__backend="xla"
         ),
     }
     b, n_ctx, pos = 4, 64, 8
@@ -323,6 +344,10 @@ def bench_backend_compare(record_path: str | None = None):
         traffic = kv_decode_traffic(
             n_ctx, a.num_kv_heads, a.head_dim, a.ssa_time_steps, storage, 4
         )
+        energy = ATTENTION_ENERGY_BY_IMPL[a.impl](
+            Workload(n=n_ctx, d=a.num_heads * a.head_dim, h=a.num_heads,
+                     t=a.ssa_time_steps)
+        )
         rec = {
             "bench": "backend_compare",
             "backend": name,
@@ -330,6 +355,7 @@ def bench_backend_compare(record_path: str | None = None):
             "interpret_mode": interpret,
             "cache_bytes": nbytes,
             "modeled_bytes_moved_per_layer": traffic["bytes_moved"],
+            "modeled_processing_uJ": round(energy["processing_uJ"], 4),
             "batch": b,
             "n_ctx": n_ctx,
             "ts": time.time(),
@@ -338,13 +364,82 @@ def bench_backend_compare(record_path: str | None = None):
         print(
             f"backend_compare/{name},{us:.0f},"
             f"cache_bytes={nbytes};moved_B={traffic['bytes_moved']}"
+            f";proc_uJ={rec['modeled_processing_uJ']}"
             f";interpret={interpret}"
         )
+    records.append(_bench_vit_serving_record(interpret))
     with open(record_path, "a") as f:
         for rec in records:
             f.write(json.dumps(rec) + "\n")
     print(f"backend_compare/records,0,appended={len(records)};path={record_path}")
     return records
+
+
+def _bench_vit_serving_record(interpret: bool) -> dict:
+    """One backend-compare record for the non-LM workload: spiking-ViT
+    event streams classified through the paged serving engine (prefill-only,
+    ``max_new_tokens=1`` — zero decode ticks by construction)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config, with_overrides
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    from .energy_model import ATTENTION_ENERGY_BY_IMPL, Workload, kv_decode_traffic
+
+    cfg = with_overrides(
+        get_smoke_config("spiking_vit_small"), attention__cache_layout="paged"
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_patches, b = model.num_patches, 2
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, model.num_events, n_patches).astype(np.int32)
+        for _ in range(b)
+    ]
+
+    def classify():
+        eng = ServingEngine(model, params, num_slots=b, max_seq=n_patches,
+                            page_size=16)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p.copy(), max_new_tokens=1,
+                               seed=i + 1))
+        done = eng.run_until_done(max_ticks=10)
+        assert len(done) == b and eng.steps_run == 0
+        return eng
+
+    eng = classify()                       # warm the jit caches
+    us = _bench(classify, iters=3, warmup=0) / b   # per classification
+    a = cfg.attention
+    traffic = kv_decode_traffic(
+        n_patches, a.num_kv_heads, a.head_dim, a.ssa_time_steps, "dense", 4
+    )
+    energy = ATTENTION_ENERGY_BY_IMPL[a.impl](
+        Workload(n=n_patches, d=a.num_heads * a.head_dim, h=a.num_heads,
+                 t=a.ssa_time_steps)
+    )
+    rec = {
+        "bench": "backend_compare",
+        "backend": "vit-ssa-event-stream",
+        "decode_us": round(us, 1),         # per-image admission->class time
+        "interpret_mode": interpret,
+        "cache_bytes": eng.kv_cache_nbytes(),
+        "modeled_bytes_moved_per_layer": traffic["bytes_moved"],
+        "modeled_processing_uJ": round(energy["processing_uJ"], 4),
+        "batch": b,
+        "n_ctx": n_patches,
+        "ts": time.time(),
+    }
+    print(
+        f"backend_compare/vit-ssa-event-stream,{us:.0f},"
+        f"cache_bytes={rec['cache_bytes']}"
+        f";moved_B={rec['modeled_bytes_moved_per_layer']}"
+        f";proc_uJ={rec['modeled_processing_uJ']}"
+        f";prefill_only=True;interpret={interpret}"
+    )
+    return rec
 
 
 def bench_paging_compare(record_path: str | None = None):

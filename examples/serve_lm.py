@@ -70,11 +70,13 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--requests", type=int, default=10)
-    ap.add_argument("--impl", default=None, choices=["ann", "ssa", "spikformer"],
-                    help="override the attention implementation")
+    ap.add_argument("--impl", default=None,
+                    choices=["ann", "ssa", "spikformer", "sdsa", "qksum"],
+                    help="override the attention implementation (sdsa/qksum "
+                         "= the addition-only spiking families)")
     ap.add_argument("--spike-storage", default=None, choices=["dense", "packed"],
                     help="KV-cache spike storage (packed = uint32 bit-planes; "
-                         "ssa impl only)")
+                         "ssa/sdsa impls only)")
     ap.add_argument("--backend", default=None, choices=["auto", "xla", "fused"],
                     help="attention backend (fused = Pallas kernels; "
                          "interpret-mode and slow on CPU)")

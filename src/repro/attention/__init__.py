@@ -9,7 +9,8 @@ modules are the backend implementations' only entry points.
 
 Importing this package registers the built-in backends:
 ``ann-xla``, ``ssa-xla``, ``ssa-fused``, ``ssa-fused-packed``,
-``spikformer-xla`` (see docs/attention_backends.md).
+``spikformer-xla``, plus the addition-only family ``sdsa-xla``,
+``sdsa-fused-packed``, ``qksum-xla`` (see docs/attention_backends.md).
 """
 from .base import (
     MODES,
@@ -40,6 +41,9 @@ from .encoding import spike_encode
 
 # built-in backend registration (import side effect, order irrelevant)
 from . import ann_xla as _ann_xla            # noqa: F401
+from . import qksum_xla as _qksum_xla        # noqa: F401
+from . import sdsa_fused_packed as _sdsa_fp  # noqa: F401
+from . import sdsa_xla as _sdsa_xla          # noqa: F401
 from . import spikformer_xla as _spikformer  # noqa: F401
 from . import ssa_fused as _ssa_fused        # noqa: F401
 from . import ssa_fused_packed as _ssa_fp    # noqa: F401

@@ -16,6 +16,12 @@ Registered backends (see docs/attention_backends.md):
   * ``ssa-fused-packed`` — fused Pallas SSA kernel reading uint32 bit-planes
                            (packed KV decode; no unpack in the hot loop)
   * ``spikformer-xla``   — Spikformer baseline [18]
+  * ``sdsa-xla``         — addition-only spike-driven ``(k AND v)``
+                           column-sum attention (arXiv 2307.01694)
+  * ``sdsa-fused-packed``— fused SDSA over uint32 bit-planes (word-level
+                           AND before the per-tile unpack; packed decode)
+  * ``qksum-xla``        — addition-only token-sum QK scoring
+                           (arXiv 2503.00226)
 
 Seed derivation (RNG contract v2, "request-addressed"): backends receive a
 per-sequence seed vector ``seeds (B,)`` uint32 (one value per batch row /
@@ -211,6 +217,24 @@ def resolve_backend_name(
                 f"got impl={a.impl!r}"
             )
         return "spikformer-xla"
+    if a.impl == "qksum":
+        if choice == "fused":
+            raise ValueError(
+                "attention.backend='fused' requires impl='ssa' or 'sdsa' "
+                "(token-sum scoring has no fused kernel); "
+                f"got impl={a.impl!r}"
+            )
+        return "qksum-xla"
+    if a.impl == "sdsa":
+        if platform is None:
+            platform = jax.default_backend()
+        use_fused = choice == "fused" or (choice == "auto" and platform == "tpu")
+        # the only fused SDSA path is the packed decode kernel; every other
+        # (mode, storage) cell falls back to the bit-identical XLA form, so
+        # backend='fused' remains a valid whole-model setting
+        if use_fused and mode == "decode" and a.spike_storage == "packed":
+            return "sdsa-fused-packed"
+        return "sdsa-xla"
     if a.impl != "ssa":
         raise ValueError(f"unknown attention impl {a.impl!r}")
     if platform is None:

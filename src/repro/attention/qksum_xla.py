@@ -1,0 +1,110 @@
+"""``qksum-xla`` backend: addition-only token-sum QK scoring in plain XLA.
+
+The scoring form of "Accurate Addition-Only Spiking Self-Attention"
+(arXiv 2503.00226) on the stochastic-computing substrate: the (q, k) score
+count is ``Σ_d q[i, d] + Σ_d k[j, d]`` — two per-token popcounts and one
+adder, no pairwise dot product — re-binarised against ``u * 2D_K`` (the
+count's ceiling), then accumulated against V and re-binarised per channel
+exactly like SSA's eq. 6.  Both Bernoulli banks reuse the SSA counter
+strides (score bank keyed by the two absolute positions, output bank by
+(query position, channel)) under their own salts, so draws stay
+request-addressed (RNG contract v2) and the backend inherits row/pad/extent
+invariance — it composes with every serving feature unchanged.
+
+Dense-storage XLA only: over a packed KV cache the shared input prep
+unpacks the bit-planes (``folded_spike_trains``); there is no fused variant
+(token sums don't ride the popcount-matmul path).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uniform_from_counter
+from repro.kernels.ssa_attention.kernel import SALT_QKSUM_A, SALT_QKSUM_S
+from repro.kernels.ssa_attention.ref import (
+    ensure_positions,
+    output_counter_idx,
+    score_counter_idx,
+    valid_mask,
+    visible_counts,
+)
+
+from .base import (
+    AttentionInvocation,
+    derive_step_row_seeds,
+    register_backend,
+)
+from .spiking import folded_positions, folded_spike_trains, rate_decode
+from .ssa_xla import _ste_threshold
+
+__all__ = ["QksumXlaBackend", "qksum_xla_attention"]
+
+
+def qksum_xla_attention(
+    qs: jax.Array,
+    ks: jax.Array,
+    vs: jax.Array,
+    step_seeds: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Token-sum QK attention over folded trains (T, B, N, D).
+
+    Returns (T, B, N, D) 0/1 spikes, bit-exact vs. ``ref.qksum_reference``
+    per time step.  Trainable via the shared STE threshold.
+    """
+    t_steps, bsz, n_q, d_k = qs.shape
+    n_kv = ks.shape[2]
+    q_positions, kv_positions = ensure_positions(
+        q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    seeds = step_seeds.astype(jnp.uint32).reshape(t_steps, bsz, 1, 1)
+
+    # token-sum score counts: qsum_i + ksum_j in [0, 2 D_K]
+    qsum = qs.astype(jnp.float32).sum(-1)[:, :, :, None]   # (T, B, N, 1)
+    ksum = ks.astype(jnp.float32).sum(-1)[:, :, None, :]   # (T, B, 1, N_kv)
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    idx_s = score_counter_idx(q_positions, kv_positions)[None]
+    u_s = uniform_from_counter(seeds ^ SALT_QKSUM_S, idx_s)
+    s = _ste_threshold(
+        u_s * jnp.float32(2 * d_k), qsum + ksum, jnp.float32(1.0 / (2 * d_k))
+    )
+    s = jnp.where(valid[None], s, 0.0)
+
+    counts_a = jnp.einsum(
+        "tbqk,tbkd->tbqd", s, vs.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    visible = visible_counts(valid)[:, :, None]
+    idx_a = output_counter_idx(q_positions, d_k)[None]
+    u_a = uniform_from_counter(seeds ^ SALT_QKSUM_A, idx_a)
+    return _ste_threshold(u_a * visible, counts_a, 1.0 / visible)
+
+
+class QksumXlaBackend:
+    name = "qksum-xla"
+
+    def supports(self, a, mode: str) -> bool:
+        return a.impl == "qksum"
+
+    def apply(self, inv: AttentionInvocation) -> jax.Array:
+        qs, ks, vs = folded_spike_trains(inv)
+        b, h = inv.q.shape[0], inv.q.shape[2]
+        seeds = inv.seeds if inv.seeds is not None else jnp.zeros(b, jnp.uint32)
+        step_seeds = derive_step_row_seeds(seeds, qs.shape[0], h)
+        q_pos, kv_pos = folded_positions(inv)
+        spikes = qksum_xla_attention(
+            qs, ks, vs, step_seeds,
+            causal=inv.causal, window=inv.window,
+            q_positions=q_pos, kv_positions=kv_pos,
+        )
+        return rate_decode(spikes, b, h)
+
+
+register_backend(QksumXlaBackend())

@@ -1,0 +1,107 @@
+"""``sdsa-xla`` backend: addition-only spike-driven attention in plain XLA.
+
+The linear-attention form of "Spike-driven Transformer" (arXiv 2307.01694)
+mapped onto this repo's stochastic-computing substrate: instead of the SSA
+eq. 5 stochastic dot product, each time step computes ``kv = k AND v`` (a
+0/1 Hadamard — pure mask hardware), column-sums it over the keys visible to
+each query, re-binarises the count with ONE Bernoulli bank
+(division-free ``u * visible < counts``), and gates the result with the
+query spike — Q ⊗ SN(SUM(K ⊗ V)).  No multiplies anywhere on the score or
+value path, and no per-(q, k) score matrix at all.
+
+Draws are keyed by (request seed, layer, head, step, absolute query
+position, channel) — the SSA output-bank counter stride under the distinct
+``SALT_SDSA`` salt — so the stream is invariant to batch row, pad bucket,
+cache extent and decode width (RNG contract v2), and the backend composes
+with migration, CoW prefix sharing, chunked prefill, speculative
+verification and head sharding exactly like the SSA trio.  Forward bits
+match ``sdsa-fused-packed`` and ``ref.sdsa_reference`` exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import uniform_from_counter
+from repro.kernels.ssa_attention.kernel import SALT_SDSA
+from repro.kernels.ssa_attention.ref import (
+    ensure_positions,
+    output_counter_idx,
+    valid_mask,
+    visible_counts,
+)
+
+from .base import (
+    AttentionInvocation,
+    derive_step_row_seeds,
+    register_backend,
+)
+from .spiking import folded_positions, folded_spike_trains, rate_decode
+from .ssa_xla import _ste_threshold
+
+__all__ = ["SdsaXlaBackend", "sdsa_xla_attention"]
+
+
+def sdsa_xla_attention(
+    qs: jax.Array,
+    ks: jax.Array,
+    vs: jax.Array,
+    step_seeds: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """SDSA over folded trains (T, B, N, D) with (T, B) per-row step seeds.
+
+    Returns (T, B, N, D) 0/1 spikes, bit-identical to running the packed
+    fused kernel per time step with the same seeds/positions.  Trainable:
+    the Bernoulli re-binarisation carries an STE cotangent (1/visible) and
+    the query gate is an ordinary product.
+    """
+    t_steps, bsz, n_q, d_k = qs.shape
+    n_kv = ks.shape[2]
+    q_positions, kv_positions = ensure_positions(
+        q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    seeds = step_seeds.astype(jnp.uint32).reshape(t_steps, bsz, 1, 1)
+
+    # mask-and-sum score: kv = k AND v, counts = Σ_visible kv
+    kv = ks.astype(jnp.float32) * vs.astype(jnp.float32)
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    counts = jnp.einsum(
+        "bqk,tbkd->tbqd", valid.astype(jnp.float32), kv,
+        preferred_element_type=jnp.float32,
+    )
+    visible = visible_counts(valid)[:, :, None]           # (B, N, 1)
+
+    idx = output_counter_idx(q_positions, d_k)[None]
+    u = uniform_from_counter(seeds ^ SALT_SDSA, idx)
+    s = _ste_threshold(u * visible, counts, 1.0 / visible)
+    return qs.astype(jnp.float32) * s
+
+
+class SdsaXlaBackend:
+    name = "sdsa-xla"
+
+    def supports(self, a, mode: str) -> bool:
+        return a.impl == "sdsa"
+
+    def apply(self, inv: AttentionInvocation) -> jax.Array:
+        qs, ks, vs = folded_spike_trains(inv)
+        b, h = inv.q.shape[0], inv.q.shape[2]
+        seeds = inv.seeds if inv.seeds is not None else jnp.zeros(b, jnp.uint32)
+        step_seeds = derive_step_row_seeds(seeds, qs.shape[0], h)
+        q_pos, kv_pos = folded_positions(inv)
+        spikes = sdsa_xla_attention(
+            qs, ks, vs, step_seeds,
+            causal=inv.causal, window=inv.window,
+            q_positions=q_pos, kv_positions=kv_pos,
+        )
+        return rate_decode(spikes, b, h)
+
+
+register_backend(SdsaXlaBackend())

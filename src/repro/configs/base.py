@@ -21,7 +21,10 @@ class AttentionConfig:
     num_heads: int
     num_kv_heads: int
     head_dim: int
-    impl: str = "ann"                 # ann | ssa | spikformer
+    # ann — softmax; ssa — stochastic spiking (paper eq. 5/6); spikformer —
+    # Spikformer baseline; sdsa — addition-only spike-driven (k AND v)
+    # column sum; qksum — addition-only token-sum QK scoring
+    impl: str = "ann"                 # ann | ssa | spikformer | sdsa | qksum
     rope_theta: float = 10_000.0
     rope_type: str = "rope"           # rope | mrope | none
     softcap: Optional[float] = None   # gemma2 attn logit soft-capping (ANN only)
@@ -29,7 +32,7 @@ class AttentionConfig:
     # layer i is local (sliding-window) iff pattern[i % len(pattern)] == "L"
     layer_pattern: str = "G"          # e.g. "LG" = gemma2 alternating
     ssa_time_steps: int = 4           # T for ssa/spikformer impls
-    # KV-cache representation for spiking decode ("ssa" impl only):
+    # KV-cache representation for spiking decode ("ssa"/"sdsa" impls):
     #   dense  — real-valued K/V cached, spike trains re-encoded every step
     #   packed — K/V spike trains cached as uint32 bit-planes (1 bit/spike,
     #            repro.bitpack); decode reads packed words, bit-identical
@@ -48,9 +51,10 @@ class AttentionConfig:
     #   xla   — force the XLA implementations (ann-xla / ssa-xla /
     #           spikformer-xla); ssa-xla shares the fused kernel's counter
     #           RNG, so xla vs fused is bit-identical for the same rng
-    #   fused — force the Pallas SSA kernels (impl="ssa" only; interpret
+    #   fused — force the Pallas kernels (impl="ssa" or "sdsa"; interpret
     #           mode off-TPU); with spike_storage="packed", decode consumes
-    #           the uint32 KV bit-planes directly (ssa-fused-packed)
+    #           the uint32 KV bit-planes directly (ssa-/sdsa-fused-packed;
+    #           sdsa falls back to sdsa-xla where no fused kernel exists)
     backend: str = "auto"             # auto | xla | fused
     causal: bool = True
     # --- perf knobs (hillclimb levers; defaults = paper-faithful baseline) --

@@ -48,6 +48,14 @@ import numpy as np
 SALT_S = np.uint32(0x9E3779B9)
 SALT_A = np.uint32(0x85EBCA6B)
 
+# Salts for the addition-only backend families (same counter scheme, one
+# independent Bernoulli bank per draw site).  SDSA (spike-driven (k AND v)
+# column-sum, arXiv 2307.01694) draws only an output bank; QKsum (token-sum
+# QK scoring, arXiv 2503.00226) draws a score bank and an output bank.
+SALT_SDSA = np.uint32(0x27D4EB2F)
+SALT_QKSUM_S = np.uint32(0x94D049BB)
+SALT_QKSUM_A = np.uint32(0xBF58476D)
+
 # Fixed position strides of the request-addressed counter scheme (RNG
 # contract v2): counter = qpos * STRIDE + (kpos | channel), uint32 wrap.
 # Odd constants so the per-query stream origins decorrelate under the
@@ -171,6 +179,69 @@ def _ssa_kernel_packed(
     )
 
 
+def _sdsa_kernel_packed(
+    seed_ref, qpos_ref, kvpos_ref, q_ref, k_ref, v_ref, out_ref,
+    acc_ref, vis_ref, *,
+    block_q: int,
+    block_k: int,
+    d_pad: int,
+    d_k: int,
+    causal: bool,
+    window: Optional[int],
+    num_kv_tiles: int,
+):
+    """Addition-only spike-driven attention (SDSA) over packed bit-planes.
+
+    Score semantics replace the eq. 5 stochastic dot product with a
+    mask-and-sum linear form: ``kv = k AND v`` is one uint32 word-AND per 32
+    channels, the per-query count is a column sum of ``kv`` over *visible*
+    keys (a 0/1 matmul against the valid mask, so it still rides the MXU),
+    and the single Bernoulli bank re-binarises ``counts / visible`` with the
+    division-free ``u * visible < counts`` comparison.  The query spike
+    gates the output channel-wise (Q ⊗ SN(SUM(K ⊗ V)) — no multiplies
+    anywhere on the value path).  Counter-RNG indices reuse the output-bank
+    position stride, salted with ``SALT_SDSA`` so the stream is independent
+    of the SSA banks while staying request-addressed (RNG contract v2).
+    """
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        vis_ref[...] = jnp.zeros_like(vis_ref)
+
+    # mask-and-sum tile: AND on words (32 spikes per op), unpack once per kv
+    # tile in VMEM, column-sum over visible keys through the MXU
+    kv = unpack_words_to_lanes(k_ref[0] & v_ref[0])     # (block_k, d_pad)
+
+    qp = qpos_ref[0]                   # (block_q, 1) int32
+    kp = kvpos_ref[0]                  # (1, block_k) int32
+    valid = (kp >= 0) & (qp >= 0)
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= kp > qp - window
+    valid_f = valid.astype(jnp.float32)                 # (block_q, block_k)
+
+    acc_ref[...] += jax.lax.dot_general(
+        valid_f, kv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    vis_ref[...] += jnp.sum(valid_f, axis=1, keepdims=True)
+
+    @pl.when(ik == num_kv_tiles - 1)
+    def _finalize():
+        qp_u = jnp.maximum(qp, 0).astype(jnp.uint32)
+        col = jax.lax.broadcasted_iota(jnp.uint32, (block_q, d_pad), 1)
+        idx = qp_u * POS_STRIDE_A + col
+        u = uniform_from_counter(seed_ref[b, 0] ^ SALT_SDSA, idx)
+        visible = jnp.maximum(vis_ref[...], 1.0)        # (block_q, 1)
+        s = (u * visible < acc_ref[...]).astype(jnp.float32)
+        q_lanes = unpack_words_to_lanes(q_ref[0])
+        out_ref[0] = (q_lanes * s).astype(out_ref.dtype)
+
+
 def build_ssa_pallas(
     *,
     bsz: int,
@@ -185,6 +256,7 @@ def build_ssa_pallas(
     block_k: int,
     interpret: bool,
     packed: bool = False,
+    variant: str = "ssa",
 ):
     """Construct the pallas_call for a given padded geometry.
 
@@ -193,12 +265,23 @@ def build_ssa_pallas(
     ``(B, 1, n_kv_pad)`` int32 (pad value -1 => masked).  ``packed=True``
     takes Q/K/V as uint32 bit-planes of width ``w_pad = d_pad // 32`` (see
     ``repro.bitpack``); output spikes stay dense — bit-identical to the
-    dense kernel for the same seeds/positions."""
+    dense kernel for the same seeds/positions.  ``variant="sdsa"`` swaps in
+    the addition-only spike-driven tile body (packed operands only; same
+    operand/grid signature, so the wrapper padding is shared)."""
     num_q_tiles = cdiv(n_q_pad, block_q)
     num_kv_tiles = cdiv(n_kv_pad, block_k)
 
+    if variant == "ssa":
+        body = _ssa_kernel_packed if packed else _ssa_kernel
+    elif variant == "sdsa":
+        if not packed:
+            raise ValueError("the sdsa kernel variant is packed-only")
+        body = _sdsa_kernel_packed
+    else:
+        raise ValueError(f"unknown kernel variant {variant!r}")
+
     kernel = functools.partial(
-        _ssa_kernel_packed if packed else _ssa_kernel,
+        body,
         block_q=block_q,
         block_k=block_k,
         d_pad=d_pad,

@@ -35,7 +35,7 @@ from .ref import (
     visible_counts,
 )
 
-__all__ = ["ssa_attention"]
+__all__ = ["ssa_attention", "sdsa_attention"]
 
 
 def _pad3(x, n_to, d_to):
@@ -114,6 +114,48 @@ def ssa_attention(
             q, k, v, seed, q_positions, kv_positions,
             causal, window, block_q, block_k, interpret,
         )
+    return _packed_attention(
+        "ssa", q, k, v, seed, causal, window, block_q, block_k, interpret,
+        q_positions, kv_positions, d_k,
+    )
+
+
+def sdsa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seed: jax.Array,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    *,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    d_k: Optional[int] = None,
+) -> jax.Array:
+    """Fused addition-only spike-driven attention over uint32 bit-planes.
+
+    Operands, padding, seeds and positions behave exactly like the packed
+    path of :func:`ssa_attention`; only the tile body differs — ``k AND v``
+    happens on the words themselves (one op per 32 channels) before the
+    per-tile unpack, the per-query count is a valid-mask matmul, and the
+    single output Bernoulli bank is salted with ``SALT_SDSA``.  Bit-exact
+    vs. ``ref.sdsa_reference``; inference-only (no VJP), like every packed
+    path.
+    """
+    return _packed_attention(
+        "sdsa", q, k, v, seed, causal, window, block_q, block_k, interpret,
+        q_positions, kv_positions, d_k,
+    )
+
+
+def _packed_attention(variant, q, k, v, seed, causal, window,
+                      block_q, block_k, interpret,
+                      q_positions, kv_positions, d_k):
+    """Shared packed-operand dispatch: validate bit-plane widths, pad to
+    tile boundaries, build the requested kernel variant."""
     if d_k is None:
         raise ValueError("packed=True requires d_k (unpadded feature size)")
     from repro.bitpack import packed_width
@@ -151,8 +193,9 @@ def ssa_attention(
         block_k=block_k,
         interpret=interpret,
         packed=True,
+        variant=variant,
     )
-    with trace_scope("repro/kernels/ssa_attention"):
+    with trace_scope(f"repro/kernels/{variant}_attention"):
         out = call(
             seeds.reshape(bsz, 1),
             _pad_pos(q_pos, n_q_pad)[:, :, None],

@@ -30,10 +30,20 @@ import jax
 import jax.numpy as jnp
 
 from ..common import cdiv, uniform_from_counter
-from .kernel import POS_STRIDE_A, POS_STRIDE_S, SALT_A, SALT_S
+from .kernel import (
+    POS_STRIDE_A,
+    POS_STRIDE_S,
+    SALT_A,
+    SALT_QKSUM_A,
+    SALT_QKSUM_S,
+    SALT_S,
+    SALT_SDSA,
+)
 
 __all__ = [
     "ssa_reference",
+    "sdsa_reference",
+    "qksum_reference",
     "expected_rate",
     "padded_dims",
     "default_positions",
@@ -198,6 +208,93 @@ def ssa_reference(
     u_a = uniform_from_counter(seed ^ SALT_A, idx_a)
     out = (u_a * visible < counts_a).astype(q.dtype)
     return out
+
+
+def sdsa_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seed: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Addition-only spike-driven attention (arXiv 2307.01694 style).
+
+    Replaces the eq. 5 stochastic dot product with a mask-and-sum linear
+    form: ``kv = k AND v``, ``counts[i, d]`` = column sum of ``kv`` over the
+    keys visible to query ``i``, one Bernoulli bank re-binarises
+    ``counts / visible`` (division-free: ``u * visible < counts``) and the
+    query spike gates the output channel-wise — Q ⊗ SN(SUM(K ⊗ V)), no
+    multiplies on the value path.  Draws are keyed by (seed, qpos, channel)
+    only — same output-bank counter stride as SSA, distinct ``SALT_SDSA``
+    salt — so the stream is extent/pad/row invariant by construction.
+    """
+    bsz, n_q, d_k = q.shape
+    n_kv = k.shape[1]
+    seed, q_positions, kv_positions = normalize_seed_positions(
+        seed, q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    seed = seed[:, None, None]
+
+    kv = k.astype(jnp.float32) * v.astype(jnp.float32)   # AND on 0/1 spikes
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    counts = jnp.einsum(
+        "bqk,bkd->bqd", valid.astype(jnp.float32), kv,
+        preferred_element_type=jnp.float32,
+    )
+    visible = visible_counts(valid)[:, :, None]
+
+    idx = output_counter_idx(q_positions, d_k)
+    u = uniform_from_counter(seed ^ SALT_SDSA, idx)
+    s = (u * visible < counts).astype(jnp.float32)
+    return (q.astype(jnp.float32) * s).astype(q.dtype)
+
+
+def qksum_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seed: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Addition-only token-sum QK scoring (arXiv 2503.00226 style).
+
+    The (q, k) score count is ``Σ_d q[i, d] + Σ_d k[j, d]`` — per-token
+    spike totals, no pairwise dot product — re-binarised against ``u * 2D_K``
+    (the count's ceiling), then accumulated against V and re-binarised per
+    channel exactly like SSA's eq. 6.  Both banks reuse the SSA counter
+    strides with their own salts, so draws stay request-addressed.
+    """
+    bsz, n_q, d_k = q.shape
+    n_kv = k.shape[1]
+    seed, q_positions, kv_positions = normalize_seed_positions(
+        seed, q_positions, kv_positions, bsz, n_q, n_kv
+    )
+    seed = seed[:, None, None]
+
+    qsum = q.astype(jnp.float32).sum(-1)[:, :, None]      # (B, n_q, 1)
+    ksum = k.astype(jnp.float32).sum(-1)[:, None, :]      # (B, 1, n_kv)
+    valid = valid_mask(q_positions, kv_positions, causal, window)
+    idx_s = score_counter_idx(q_positions, kv_positions)
+    u_s = uniform_from_counter(seed ^ SALT_QKSUM_S, idx_s)
+    s = jnp.where(valid, u_s * jnp.float32(2 * d_k) < qsum + ksum, False)
+    s = s.astype(jnp.float32)
+
+    counts_a = jnp.einsum(
+        "bqk,bkd->bqd", s, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    visible = visible_counts(valid)[:, :, None]
+    idx_a = output_counter_idx(q_positions, d_k)
+    u_a = uniform_from_counter(seed ^ SALT_QKSUM_A, idx_a)
+    return (u_a * visible < counts_a).astype(q.dtype)
 
 
 def expected_rate(pq: jax.Array, pk: jax.Array, pv: jax.Array) -> jax.Array:

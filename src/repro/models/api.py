@@ -13,6 +13,13 @@ _CACHE_LAYOUTS = ("slab", "paged")
 # families served by models.transformer.DecoderLM (the only model with a
 # packed-cache implementation); keep in sync with build_model's dispatch
 _DECODER_LM_FAMILIES = ("dense", "moe", "vlm")
+# impls whose spike trains can live in the packed (uint32 bit-plane) KV
+# cache; qksum scores on token sums, which the packed planes also support
+# via the XLA unpack fallback, but only ssa/sdsa have fused packed kernels
+_PACKED_IMPLS = ("ssa", "sdsa")
+# families whose caches have a pageable sequence axis: the decoder LMs plus
+# the spiking ViT (fixed-length prefill-only serving, see models/spiking_vit)
+_PAGEABLE_FAMILIES = _DECODER_LM_FAMILIES + ("spiking_vit",)
 
 
 def validate_config(cfg: ModelConfig) -> None:
@@ -23,32 +30,33 @@ def validate_config(cfg: ModelConfig) -> None:
             f"attention.spike_storage must be one of {_SPIKE_STORAGE}, "
             f"got {a.spike_storage!r}"
         )
-    if a.spike_storage == "packed" and a.impl != "ssa":
+    if a.spike_storage == "packed" and a.impl not in _PACKED_IMPLS:
         raise ValueError(
             "attention.spike_storage='packed' stores the KV cache as uint32 "
             "spike bit-planes and is only meaningful for the spiking "
-            f"attention path (impl='ssa'); got impl={a.impl!r}"
+            f"attention paths (impl in {_PACKED_IMPLS}); got impl={a.impl!r}"
         )
     if a.backend not in _BACKENDS:
         raise ValueError(
             f"attention.backend must be one of {_BACKENDS}, got {a.backend!r}"
         )
-    if a.backend == "fused" and a.impl != "ssa":
+    if a.backend == "fused" and a.impl not in _PACKED_IMPLS:
         raise ValueError(
-            "attention.backend='fused' selects the fused Pallas SSA kernels "
-            f"and requires impl='ssa'; got impl={a.impl!r}"
+            "attention.backend='fused' selects the fused Pallas spiking "
+            f"kernels and requires impl in {_PACKED_IMPLS}; got "
+            f"impl={a.impl!r}"
         )
     if a.cache_layout not in _CACHE_LAYOUTS:
         raise ValueError(
             f"attention.cache_layout must be one of {_CACHE_LAYOUTS}, "
             f"got {a.cache_layout!r}"
         )
-    if a.cache_layout == "paged" and cfg.family not in _DECODER_LM_FAMILIES:
+    if a.cache_layout == "paged" and cfg.family not in _PAGEABLE_FAMILIES:
         raise ValueError(
             "the paged KV-cache layout is implemented for the decoder-LM "
-            "attention cache (families dense/moe/vlm); recurrent-state "
-            f"families have no pageable sequence axis — got family="
-            f"{cfg.family!r}"
+            "attention cache and the spiking ViT (families "
+            f"{_PAGEABLE_FAMILIES}); recurrent-state families have no "
+            f"pageable sequence axis — got family={cfg.family!r}"
         )
     if a.spike_storage == "packed" and cfg.family not in _DECODER_LM_FAMILIES:
         raise ValueError(

@@ -34,6 +34,12 @@ from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
 from repro.distributed.sharding import constrain
 from repro.obs import trace_scope
 
+# impls whose attention core consumes spike trains (LIF-encoded Q/K/V,
+# rate-decoded output + out_norm rescale); "ann" is the only non-member
+SPIKING_IMPLS = ("ssa", "spikformer", "sdsa", "qksum")
+# spiking impls whose trains may live in the packed uint32 bit-plane cache
+PACKED_IMPLS = ("ssa", "sdsa")
+
 # ---------------------------------------------------------------------------
 # initialisers
 # ---------------------------------------------------------------------------
@@ -157,7 +163,7 @@ def attention_params(key, cfg: ModelConfig, cross: bool = False) -> dict:
         "wv": dense_init(ks[2], d, a.num_kv_heads * a.head_dim, dtype),
         "wo": wo,
     }
-    if a.impl in ("ssa", "spikformer"):
+    if a.impl in SPIKING_IMPLS:
         # post-attention rescale (spike rates live in [0,1])
         p["out_norm"] = norm_params(h_pad * a.head_dim, "rmsnorm")
     return p
@@ -353,7 +359,7 @@ def attention_apply(
     mode = (
         "train" if cache is None else ("decode" if cache_index is not None else "prefill")
     )
-    spiking = a.impl in ("ssa", "spikformer")
+    spiking = a.impl in SPIKING_IMPLS
     new_cache = None
     kv_positions = None
     q_positions = None
@@ -363,7 +369,7 @@ def attention_apply(
     # temporal stream (index 0)
     pos_1d = positions[0] if positions.ndim == 3 else positions
     if cache is not None and "ks" in cache:
-        # --- packed spiking KV cache (spike_storage="packed", SSA only) ---
+        # --- packed spiking KV cache (spike_storage="packed", ssa/sdsa) ---
         # Spike planes are packed along head_dim at kv-head granularity:
         # leaves (B, S_cache, T, H_kv, ceil(hd/32)) uint32.  New tokens are
         # LIF-encoded ONCE here and stored as bits; the dense path instead
@@ -491,7 +497,7 @@ def attention_apply(
     # could reorder sums and break the serving bit-identity contract.
     out = constrain(out, "attn_gather")
     out = out.astype(x.dtype).reshape(b, s, h_pad * a.head_dim)
-    if a.impl in ("ssa", "spikformer"):
+    if a.impl in SPIKING_IMPLS:
         out = norm_apply(p["out_norm"], out, "rmsnorm", 1e-6)
     return out @ p["wo"], new_cache
 

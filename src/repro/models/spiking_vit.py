@@ -15,12 +15,20 @@ import jax.numpy as jnp
 from repro.attention import (
     AttentionInvocation,
     derive_request_seeds,
+    fold_layer_seeds,
     resolve_backend,
 )
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.coding import bernoulli_encode
 from repro.core.lif import LIFParams, lif_layer
-from .blocks import dense_init, mlp_apply, mlp_params, norm_apply, norm_params
+from .blocks import (
+    attention_apply,
+    dense_init,
+    mlp_apply,
+    mlp_params,
+    norm_apply,
+    norm_params,
+)
 
 
 class SpikingViT:
@@ -28,12 +36,27 @@ class SpikingViT:
 
     The patch frontend is a linear projection (not stubbed — CIFAR-scale);
     vocab_size doubles as the class count.
+
+    Two forward paths share the weights:
+
+    * :meth:`forward` — the paper-faithful training path (Bernoulli rate
+      coding + LIF spike generation driven by an explicit PRNG key).
+    * :meth:`prefill` / :meth:`decode_step` — the serving path, speaking
+      the engine protocol (token batches, slab/paged KV caches, per-request
+      seeds under RNG contract v2).  Requests are fixed-length event/image
+      streams: ``num_events`` quantised event ids embed through
+      ``event_embed``, prefill runs the full bidirectional encoder once and
+      the classification logits are read at ``logits_at`` (the last real
+      token) — a prefill-only workload (``max_new_tokens=1``), no
+      autoregressive decode.
     """
 
-    def __init__(self, cfg: ModelConfig, patch_dim: int = 48, num_patches: int = 64):
+    def __init__(self, cfg: ModelConfig, patch_dim: int = 48,
+                 num_patches: int = 64, num_events: int = 256):
         self.cfg = cfg
         self.patch_dim = patch_dim
         self.num_patches = num_patches
+        self.num_events = num_events
 
     def init(self, key) -> dict:
         cfg = self.cfg
@@ -49,6 +72,10 @@ class SpikingViT:
                 "wk": dense_init(kk[1], d, a.num_heads * a.head_dim),
                 "wv": dense_init(kk[2], d, a.num_heads * a.head_dim),
                 "wo": dense_init(kk[3], a.num_heads * a.head_dim, d),
+                # post-attention rescale for the serving path's
+                # attention_apply (spike rates live in [0,1]); all-ones
+                # init, so no PRNG draw is consumed
+                "out_norm": norm_params(a.num_heads * a.head_dim, "rmsnorm"),
                 "ln2": norm_params(d, cfg.norm),
                 "mlp": mlp_params(kk[4], d, cfg.d_ff, cfg.act),
             }
@@ -59,6 +86,12 @@ class SpikingViT:
             "layers": [layer(ks[i]) for i in range(cfg.num_layers)],
             "head_norm": norm_params(d, cfg.norm),
             "head": dense_init(ks[-3], d, cfg.vocab_size),
+            # serving frontend: event-stream token embedding.  Keyed by
+            # fold_in (not by widening the split above) so every
+            # pre-existing parameter draw stays bit-identical.
+            "event_embed": jax.random.normal(
+                jax.random.fold_in(key, 0x45564E54), (self.num_events, d)
+            ) * 0.02,
         }
 
     # ------------------------------------------------------------------
@@ -152,3 +185,143 @@ class SpikingViT:
             "patches": jax.ShapeDtypeStruct((b, self.num_patches, self.patch_dim), jnp.float32),
             "label": jax.ShapeDtypeStruct((b,), jnp.int32),
         }
+
+    # ------------------------------------------------------------------
+    # serving path: event-token frontend + deterministic spike encoding
+    # through blocks.attention_apply (RNG contract v2 — the training
+    # path's rng-driven Bernoulli/LIF coding cannot satisfy the serving
+    # identity contracts, so serving uses the shared deterministic
+    # spike_encode the decoder LMs use)
+    # ------------------------------------------------------------------
+    def forward_tokens(self, params, batch, *, cache=None, cache_index=None,
+                       rng=None, seeds=None):
+        """Serving forward over event tokens; returns (hidden, new_cache).
+
+        ``batch``: {"tokens": (B, S) int32 event ids, "positions": (B, S)
+        int32 absolute patch positions, pad rows -1}.  ``seeds``: (B,)
+        uint32 per-request sampling seeds; layer identity folds in here
+        (``fold_layer_seeds``) exactly as the decoder LMs do, so draws are
+        a pure function of (seed, layer, t, position, channel) — never
+        batch row, pad bucket, or cache extent.
+        """
+        cfg = self.cfg
+        positions = batch["positions"]
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        if seeds is None:
+            seeds = derive_request_seeds(rng, b)
+        seeds = jnp.asarray(seeds, jnp.uint32)
+        # pad tokens (position -1) clip to patch 0: their K/V rows carry
+        # pos=-1 so every backend masks them dead, and logits are only
+        # ever read at a real token's index
+        pos_ix = jnp.clip(positions, 0, self.num_patches - 1)
+        x = params["event_embed"][tokens] + params["pos_embed"][pos_ix]
+        new_layers = []
+        for li, p in enumerate(params["layers"]):
+            c = (
+                {name: leaf[li] for name, leaf in cache[0].items()}
+                if cache is not None
+                else None
+            )
+            h = norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps)
+            attn, nc = attention_apply(
+                p,
+                h,
+                cfg=cfg,
+                layer_window=None,
+                positions=positions,
+                seeds=fold_layer_seeds(seeds, jnp.uint32(li)),
+                cache=c,
+                cache_index=cache_index,
+            )
+            x = x + attn
+            h = norm_apply(p["ln2"], x, cfg.norm, cfg.norm_eps)
+            x = x + mlp_apply(p["mlp"], h, cfg.act)
+            new_layers.append(nc)
+        new_cache = None
+        if cache is not None:
+            # re-stack the per-layer caches onto the leading L axis (the
+            # engine's pool-surgery helpers treat it as the "steps" axis)
+            new_cache = [jax.tree.map(lambda *ls: jnp.stack(ls), *new_layers)]
+        return norm_apply(params["head_norm"], x, cfg.norm, cfg.norm_eps), new_cache
+
+    def prefill(self, params, batch, cache, rng=None, logits_at=None,
+                seeds=None):
+        """Encode the full event stream once; returns (class logits, cache).
+
+        ``logits_at`` selects the hidden row the classification head reads
+        (the engine passes the last real token of a padded bucket).  Note
+        this is a *readout-token* head — the training path mean-pools —
+        which keeps the serving forward a pure function of the cache
+        protocol (bucketed prompts would otherwise change the pool
+        denominator).
+        """
+        hidden, new_cache = self.forward_tokens(
+            params, batch, cache=cache, rng=rng, seeds=seeds
+        )
+        if logits_at is None:
+            last = hidden[:, -1:]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(hidden, logits_at, 1, axis=1)
+        return last @ params["head"], new_cache
+
+    def decode_step(self, params, batch, cache, cache_index, rng=None,
+                    seeds=None):
+        """Engine-protocol decode tick (classification re-readout).
+
+        The ViT workload is prefill-only (``max_new_tokens=1`` finishes at
+        admission), so this only runs if a caller asks for extra tokens.
+        Deliberately NO ``logits_at`` kwarg: chunked prefill is a causal
+        prefix-extend and would change bidirectional attention, so its
+        absence makes the engine fall back to one-shot slab-staged prefill
+        (``can_chunk`` introspection).
+        """
+        hidden, new_cache = self.forward_tokens(
+            params, batch, cache=cache, cache_index=cache_index, rng=rng,
+            seeds=seeds,
+        )
+        return hidden @ params["head"], new_cache
+
+    def init_cache(self, batch: int, seq: int, *, layout: str = "slab",
+                   num_pages=None, page_size=None) -> list:
+        """Fresh serving KV cache (dense storage; single pattern slot).
+
+        One dict whose leaves carry the layer axis in front — slab
+        ``(L, B, S, ...)``, paged ``(L, num_pages, page_size, ...)`` plus a
+        block table ``bt: (L, B, ceil(seq/page_size))`` — the exact leaf
+        layout the serving engine's pool surgery expects.  Leaves are f32:
+        the ViT runs f32 end to end, and a narrower cache dtype would make
+        decode re-encode quantised K/V while prefill encodes exact ones.
+        """
+        a = self.cfg.attention
+        layers = self.cfg.num_layers
+        kv = (a.num_kv_heads, a.head_dim)
+        if layout == "slab":
+            shp = (layers, batch, seq)
+            return [{
+                "k": jnp.zeros(shp + kv, jnp.float32),
+                "v": jnp.zeros(shp + kv, jnp.float32),
+                "pos": jnp.full(shp, -1, jnp.int32),
+            }]
+        if layout != "paged":
+            raise ValueError(
+                f"cache layout must be 'slab' or 'paged', got {layout!r}"
+            )
+        if num_pages is None or page_size is None:
+            raise ValueError("layout='paged' requires num_pages and page_size")
+
+        from repro.attention import NUM_RESERVED_PAGES, PAGE_SCRATCH
+
+        if num_pages <= NUM_RESERVED_PAGES:
+            raise ValueError(
+                f"num_pages={num_pages} leaves no allocatable pages "
+                f"({NUM_RESERVED_PAGES} ids are reserved)"
+            )
+        width = -(-seq // page_size)
+        shp = (layers, num_pages, page_size)
+        return [{
+            "k": jnp.zeros(shp + kv, jnp.float32),
+            "v": jnp.zeros(shp + kv, jnp.float32),
+            "pos": jnp.full(shp, -1, jnp.int32),
+            "bt": jnp.full((layers, batch, width), PAGE_SCRATCH, jnp.int32),
+        }]

@@ -27,6 +27,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding import constrain
 from repro.obs import trace_scope
 from .blocks import (
+    PACKED_IMPLS,
     attention_apply,
     attention_params,
     mlp_apply,
@@ -415,7 +416,7 @@ class DecoderLM:
         a = cfg.attention
         b = shape.global_batch
         dtype = jnp.dtype(cfg.dtype)
-        packed = a.impl == "ssa" and a.spike_storage == "packed"
+        packed = a.impl in PACKED_IMPLS and a.spike_storage == "packed"
         if packed:
             from repro.bitpack import packed_width
 
@@ -482,7 +483,7 @@ class DecoderLM:
         shape = ShapeConfig("tmp", seq, batch, "decode")
         a = self.cfg.attention
         fill_u32 = None
-        if a.impl == "ssa" and a.spike_storage == "packed":
+        if a.impl in PACKED_IMPLS and a.spike_storage == "packed":
             # Empty packed slots must hold the spike pattern the LIF encoder
             # emits for zero input (enc(0) fires — softplus(0) > 0 drives the
             # membrane), because the dense path re-encodes its zero-filled
@@ -517,7 +518,7 @@ class DecoderLM:
                 f"num_pages={num_pages} leaves no allocatable pages "
                 f"({NUM_RESERVED_PAGES} ids are reserved)"
             )
-        packed = a.impl == "ssa" and a.spike_storage == "packed"
+        packed = a.impl in PACKED_IMPLS and a.spike_storage == "packed"
         if packed:
             from repro.bitpack import packed_width
 

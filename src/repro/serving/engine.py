@@ -701,6 +701,9 @@ class ServingEngine:
         self._submit_tick: dict[int, int] = {}
         self._submit_wall: dict[int, float] = {}
         self._last_token: dict[int, tuple[int, float]] = {}  # (tick, wall)
+        # requests finished at admission (prefill-only, max_new_tokens=1):
+        # collected here so the tick that admitted them returns them
+        self._admit_finished: list[Request] = []
 
         # Bucketed prefill needs the model to expose `logits_at` (read the
         # real last token's logits out of a padded prompt); models without
@@ -963,6 +966,25 @@ class ServingEngine:
         nxt = int(self.sampler(sub, logits[0, -1]))
         req.out_tokens.append(nxt)
         m.inc("tokens_sampled")
+        if len(req.out_tokens) >= req.max_new_tokens:
+            # prefill-only request (max_new_tokens=1, e.g. the spiking-ViT
+            # classification workload): the admission sample is the whole
+            # response — finish here instead of seating the row and
+            # burning a decode tick on it
+            req.done = True
+            m.inc("requests_finished")
+            if self.paged:
+                self._release_pages(slot)
+            self._admit_finished.append(req)
+            self._trace(
+                "admit", uid=req.uid, row=slot,
+                prompt_len=len(req.prompt), wait_ticks=wait,
+            )
+            self._trace(
+                "finish", uid=req.uid, row=slot,
+                tokens=len(req.out_tokens), reason="max_new_tokens",
+            )
+            return
         self._last_token[id(req)] = (self._ticks.value, now)
         self.active[slot] = req
         self.slot_pos[slot] = len(req.prompt)
@@ -2271,15 +2293,18 @@ class ServingEngine:
                     self._cow_guard()
                     self._sync_tables()
                 m.gauge("pages_used").set(self.pool.num_used)
+        finished0: list[Request] = []
+        if self._admit_finished:
+            finished0, self._admit_finished = self._admit_finished, []
         if not self.active:
-            return []
+            return finished0
         m.gauge("concurrency").set(len(self.active))
         m.gauge("occupancy").set(
             self.pool.num_used / max(self.pool.num_usable, 1)
             if self.paged else len(self.active) / max(self.b, 1)
         )
         if self._draft_model is not None:
-            return self._spec_tick()
+            return finished0 + self._spec_tick()
         with self._phase("host_stage"):
             tokens = np.zeros((self.b, 1), np.int32)
             for slot, req in self.active.items():
@@ -2309,7 +2334,7 @@ class ServingEngine:
             self.key, sub = jax.random.split(self.key)
             nxt = np.asarray(self.sampler(sub, logits[:, -1]))
             finished = self._commit(nxt)
-        return finished
+        return finished0 + finished
 
     def _commit(self, nxt: np.ndarray) -> list[Request]:
         """Append this tick's sampled tokens, record per-token latency,

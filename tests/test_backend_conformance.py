@@ -1,0 +1,263 @@
+"""Generative backend-conformance suite.
+
+Every backend in the ``repro.attention`` registry must satisfy the same
+serving contracts the SSA family was built against: slab == paged token
+streams, chunked == one-shot prefill, prefix-cache transparency, and the
+RNG-contract invariances (cache extent / pad bucket / batch row).  The
+suite is *generative*: the parameter list is the registry itself
+(auto-discovered via the ``conformance_backend`` hook in conftest.py), so
+registering a new backend makes it conformance-tested without editing this
+file — and ``pytest --backend-matrix=a,b`` runs any subset (CI lane
+splitting).
+
+Each backend is driven through a smoke decoder-LM config chosen by
+scanning the (impl, spike_storage, backend) space for the cell whose
+resolver actually selects it — a backend no config can reach fails loudly
+here instead of silently rotting unreferenced.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.attention import NUM_RESERVED_PAGES, resolve_backend_name
+from repro.configs import get_smoke_config, with_overrides
+from repro.models import build_model
+from repro.models.api import validate_config
+from repro.serving import Request, ServingEngine
+
+ARCH = "codeqwen15_7b"
+MAX_SEQ = 32
+PAGE = 8
+
+_IMPLS = ("ann", "ssa", "spikformer", "sdsa", "qksum")
+_STORAGES = ("dense", "packed")
+_CHOICES = ("xla", "fused")
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg_for(backend_name: str):
+    """Smallest (impl, storage, backend) cell whose resolver reaches the
+    named backend in some serving mode, on the smoke LM."""
+    base = get_smoke_config(ARCH)
+    for impl in _IMPLS:
+        for storage in _STORAGES:
+            for choice in _CHOICES:
+                cfg = with_overrides(
+                    base,
+                    attention__impl=impl,
+                    attention__spike_storage=storage,
+                    attention__backend=choice,
+                )
+                try:
+                    validate_config(cfg)
+                except ValueError:
+                    continue
+                if any(
+                    resolve_backend_name(cfg.attention, mode) == backend_name
+                    for mode in ("prefill", "decode")
+                ):
+                    return cfg
+    raise AssertionError(
+        f"backend {backend_name!r} is registered but unreachable from every "
+        f"(impl, spike_storage, backend) config cell — wire its resolver "
+        "path or retire it"
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _model_and_params(backend_name: str, layout: str):
+    cfg = with_overrides(
+        _cfg_for(backend_name), attention__cache_layout=layout
+    )
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, int(n)).astype(np.int32) for n in lens]
+
+
+def _run(model, params, prompts, *, max_new=3, slots=2, seeds=None, **ekw):
+    eng = ServingEngine(model, params, num_slots=slots, max_seq=MAX_SEQ,
+                        **ekw)
+    reqs = [
+        Request(uid=i, prompt=p.copy(), max_new_tokens=max_new,
+                seed=None if seeds is None else seeds[i])
+        for i, p in enumerate(prompts)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done(max_ticks=200)
+    assert len(done) == len(reqs)
+    return [list(map(int, r.out_tokens)) for r in reqs], eng
+
+
+def _manual_greedy(model, params, prompt, max_seq, new_tokens):
+    cache = model.init_cache(1, max_seq)
+    logits, cache = model.prefill(
+        params,
+        {
+            "tokens": jnp.asarray(prompt)[None],
+            "positions": jnp.arange(len(prompt), dtype=jnp.int32)[None],
+        },
+        cache,
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(new_tokens - 1):
+        logits, cache = model.decode_step(
+            params,
+            {
+                "tokens": jnp.asarray([[out[-1]]], jnp.int32),
+                "positions": jnp.asarray([[pos]], jnp.int32),
+            },
+            cache,
+            jnp.asarray([pos]),
+        )
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layout conformance: the paged engine is invisible
+# ---------------------------------------------------------------------------
+def test_slab_paged_stream_identity(conformance_backend):
+    cfg_s, model_s, params = _model_and_params(conformance_backend, "slab")
+    prompts = _prompts(cfg_s.vocab_size, [5, 3])
+    slab, _ = _run(model_s, params, prompts)
+    _, model_p, _ = _model_and_params(conformance_backend, "paged")
+    paged, _ = _run(model_p, params, prompts, page_size=PAGE)
+    assert slab == paged, conformance_backend
+
+
+def test_chunked_equals_oneshot_prefill(conformance_backend):
+    """Chunked prefix-extend prefill must reproduce the one-shot streams
+    (pad chunk tokens carry position -1 and neither draw nor write)."""
+    cfg, model, params = _model_and_params(conformance_backend, "paged")
+    prompts = _prompts(cfg.vocab_size, [9, 5], seed=5)  # non-pow2, > 1 page
+    one_shot, _ = _run(model, params, prompts, page_size=PAGE,
+                       prefill_chunk=0)
+    chunked, eng = _run(model, params, prompts, page_size=PAGE,
+                        prefill_chunk=PAGE)
+    assert eng.metrics.counter("prefill_chunks_run").value > 0
+    assert one_shot == chunked, conformance_backend
+
+
+def test_prefix_cache_on_off_identity(conformance_backend):
+    """Prefix sharing + the persistent cache tier never change streams —
+    shared pages are content-addressed under the RNG contract."""
+    cfg, model, params = _model_and_params(conformance_backend, "paged")
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, PAGE).astype(np.int32)
+    prompts = [
+        np.concatenate([prefix, rng.integers(0, cfg.vocab_size, 3)
+                        .astype(np.int32)])
+        for _ in range(2)
+    ]
+    seeds = [11, 11]  # sharing keys on (seed, tokens)
+    plain, _ = _run(model, params, prompts, page_size=PAGE, seeds=seeds)
+    shared, eng = _run(
+        model, params, prompts, page_size=PAGE, seeds=seeds,
+        share_prefix=True, prefix_cache_pages=4,
+    )
+    assert plain == shared, conformance_backend
+    assert eng.metrics.counter("shared_page_hits").value > 0
+
+
+# ---------------------------------------------------------------------------
+# RNG-contract invariance: extent / pad bucket / batch row
+# ---------------------------------------------------------------------------
+def test_extent_pad_row_invariance(conformance_backend):
+    cfg, model, params = _model_and_params(conformance_backend, "slab")
+    prompt = _prompts(cfg.vocab_size, [5], seed=9)[0]  # 5 -> pad bucket 8
+
+    # cache extent: identical greedy streams against different slab extents
+    streams = [
+        _manual_greedy(model, params, prompt, max_seq, 4)
+        for max_seq in (16, 32)
+    ]
+    assert streams[0] == streams[1], conformance_backend
+
+    # batch row + pad bucket: the engine buckets the prompt (5 -> 8 pad
+    # rows) and seats it in row 2 behind fillers; the stream must match
+    # the manual batch-1 loop exactly
+    fillers = _prompts(cfg.vocab_size, [3, 2], seed=10)
+    eng = ServingEngine(model, params, num_slots=3, max_seq=MAX_SEQ)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(fillers)]
+    tgt = Request(uid=9, prompt=prompt.copy(), max_new_tokens=4)
+    for r in reqs + [tgt]:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=60)
+    assert tgt.out_tokens == streams[0], conformance_backend
+
+
+# ---------------------------------------------------------------------------
+# memory conformance: paged decode HLO holds no max_seq-extent tensor
+# ---------------------------------------------------------------------------
+def test_paged_decode_hlo_is_extent_bounded(conformance_backend):
+    """The paged decode lowering may not contain any tensor with a
+    max_seq-sized axis (the resident cache is the page pool); packed-plane
+    backends additionally must not materialise the unpacked spike trains
+    (the bit-planes stream straight into the popcount kernel)."""
+    max_seq = 96  # distinct from every smoke model dimension
+    cfg, model, params = _model_and_params(conformance_backend, "paged")
+    b = 2
+    cache = model.init_cache(
+        b, max_seq, layout="paged",
+        num_pages=NUM_RESERVED_PAGES + 2 * b, page_size=PAGE,
+    )
+    # growth-bucketed table: one allocated page per row
+    cache = [
+        {k: (v[:, :, :1] if k == "bt" else v) for k, v in d.items()}
+        for d in cache
+    ]
+    batch = {
+        "tokens": jnp.zeros((b, 1), jnp.int32),
+        "positions": jnp.full((b, 1), 4, jnp.int32),
+    }
+    idx = jnp.full((b,), 4, jnp.int32)
+    f = jax.jit(lambda p, bt, c, i: model.decode_step(p, bt, c, i))
+    text = f.lower(params, batch, cache, idx).as_text()
+    markers = (f"x{max_seq}x", f"<{max_seq}x")
+    assert not any(m in text for m in markers), (
+        f"{conformance_backend}: paged decode lowering contains a "
+        "max_seq-extent tensor"
+    )
+
+    if resolve_backend_name(cfg.attention, "decode").endswith("fused-packed"):
+        a = cfg.attention
+        t, hkv, hd = a.ssa_time_steps, a.num_kv_heads, a.head_dim
+        # unpack_spikes(pages) shapes (per gathered extent PAGE) and the
+        # (T, B, S, ...) transpose — neither may appear
+        unpacked = f"tensor<{b}x{PAGE}x{t}x{hkv}x{hd}xf32>"
+        transposed = f"tensor<{t}x{b}x{PAGE}x{hkv}x{hd}xf32>"
+        assert unpacked not in text and transposed not in text, (
+            f"{conformance_backend}: packed decode unpacks cached planes"
+        )
+        assert "ui32" in text
+
+
+# ---------------------------------------------------------------------------
+# registry hygiene
+# ---------------------------------------------------------------------------
+def test_backend_is_reachable(conformance_backend):
+    """Every registered backend must be selectable by some config cell (the
+    _cfg_for scan raises otherwise) and report support for the mode the
+    resolver hands it."""
+    cfg = _cfg_for(conformance_backend)
+    from repro.attention import get_backend
+
+    backend = get_backend(conformance_backend)
+    modes = [
+        m for m in ("prefill", "decode")
+        if resolve_backend_name(cfg.attention, m) == conformance_backend
+    ]
+    assert modes, conformance_backend
+    for m in modes:
+        assert backend.supports(cfg.attention, m), (conformance_backend, m)

@@ -44,6 +44,16 @@ MATRIX = [
     ("codeqwen-ann-dense-paged", "codeqwen15_7b", "ann", "dense", "paged"),
     ("codeqwen-spikformer-slab", "codeqwen15_7b", "spikformer", "dense",
      "slab"),
+    # addition-only family: sdsa (spike-driven k&v column sums) pins
+    # sdsa-xla AND sdsa-fused-packed (bit-identical, same contract as ssa);
+    # qksum (token-sum scoring) is dense/xla-only
+    ("codeqwen-sdsa-dense-slab", "codeqwen15_7b", "sdsa", "dense", "slab"),
+    ("codeqwen-sdsa-packed-slab", "codeqwen15_7b", "sdsa", "packed", "slab"),
+    ("codeqwen-sdsa-packed-paged", "codeqwen15_7b", "sdsa", "packed",
+     "paged"),
+    ("codeqwen-qksum-dense-slab", "codeqwen15_7b", "qksum", "dense", "slab"),
+    ("codeqwen-qksum-dense-paged", "codeqwen15_7b", "qksum", "dense",
+     "paged"),
 ]
 
 # pinned workload: literal prompts (no RNG involved), explicit per-request
@@ -98,6 +108,58 @@ def test_golden_streams(golden, name, arch, impl, storage, layout):
         "max_new_tokens": MAX_NEW,
         "streams": streams,
     })
+
+
+# ---------------------------------------------------------------------------
+# spiking-ViT event-stream serving: golden classification outputs
+# ---------------------------------------------------------------------------
+VIT_SEEDS = (31, 37, 41)
+
+
+def _vit_classifications(layout):
+    cfg, model, params = _model_and_params(
+        "spiking_vit_small", "ssa", "dense", layout
+    )
+    rng = np.random.default_rng(12)
+    prompts = [
+        rng.integers(0, model.num_events, model.num_patches).astype(np.int32)
+        for _ in VIT_SEEDS
+    ]
+    kw = {"page_size": 16} if layout == "paged" else {}
+    eng = ServingEngine(model, params, num_slots=2,
+                        max_seq=model.num_patches, **kw)
+    reqs = [
+        Request(uid=i, prompt=p, max_new_tokens=1, seed=s)
+        for i, (p, s) in enumerate(zip(prompts, VIT_SEEDS))
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done(max_ticks=50)
+    assert len(done) == len(reqs)
+    # prefill-only workload: exactly one class token each, zero decode ticks
+    assert all(len(r.out_tokens) == 1 for r in reqs)
+    assert eng.steps_run == 0
+    return [int(r.out_tokens[0]) for r in reqs]
+
+
+@pytest.mark.parametrize("layout", ["slab", "paged"])
+def test_golden_vit_classifications(golden, layout):
+    """The non-LM serving workload: fixed-length event streams through the
+    paged engine, prefill-only classification (max_new_tokens=1) pinned to
+    absolute class outputs."""
+    classes = _vit_classifications(layout)
+    golden.check(f"vit-ssa-event-{layout}", {
+        "rng_contract": RNG_CONTRACT_VERSION,
+        "arch": "spiking_vit_small",
+        "impl": "ssa",
+        "cache_layout": layout,
+        "seeds": list(VIT_SEEDS),
+        "classes": classes,
+    })
+
+
+def test_golden_vit_layouts_agree():
+    assert _vit_classifications("slab") == _vit_classifications("paged")
 
 
 def test_golden_layouts_agree_with_each_other():

@@ -25,15 +25,59 @@ from conftest import hypothesis_or_stubs
 
 given, settings, st = hypothesis_or_stubs()
 
-from repro.attention import RNG_CONTRACT_VERSION, derive_request_seeds
+from repro.attention import (
+    RNG_CONTRACT_VERSION,
+    available_backends,
+    derive_request_seeds,
+)
 from repro.configs import get_smoke_config
-from repro.kernels.ssa_attention.ref import ssa_reference
+from repro.kernels.ssa_attention.ref import (
+    qksum_reference,
+    sdsa_reference,
+    ssa_reference,
+)
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
+
+# Counter-RNG oracle per stochastic backend family.  The fuzz below draws
+# the backend name from the LIVE registry (not a hard-coded list), so a
+# newly registered stochastic backend widens the fuzzed contract surface
+# automatically — registering one without an oracle entry fails loudly.
+_ORACLE_BY_FAMILY = {
+    "ann": None,            # deterministic: no draws to fuzz
+    "spikformer": None,     # deterministic integer attention
+    "ssa": ssa_reference,
+    "sdsa": sdsa_reference,
+    "qksum": qksum_reference,
+}
+
+
+def _registry_oracles() -> dict:
+    out = {}
+    for name in available_backends():
+        family = name.split("-")[0]
+        assert family in _ORACLE_BY_FAMILY, (
+            f"backend {name!r} has no RNG-contract oracle entry; add its "
+            "family to _ORACLE_BY_FAMILY (or map it to None if it draws "
+            "nothing)"
+        )
+        fn = _ORACLE_BY_FAMILY[family]
+        if fn is not None:
+            out[name] = fn
+    return out
+
+
+ORACLES = _registry_oracles()
 
 
 def _spikes(key, shape, rate=0.5):
     return (jax.random.uniform(key, shape) < rate).astype(jnp.float32)
+
+
+def test_every_stochastic_family_is_fuzzed():
+    """ssa / sdsa / qksum all appear in the registry-derived oracle map."""
+    families = {n.split("-")[0] for n in ORACLES}
+    assert families == {"ssa", "sdsa", "qksum"}
 
 
 def test_contract_version_is_two():
@@ -55,8 +99,9 @@ def test_request_seeds_are_batch_width_invariant():
 # ---------------------------------------------------------------------------
 # fuzzed oracle-level invariance
 # ---------------------------------------------------------------------------
-@settings(max_examples=12, deadline=None)
+@settings(max_examples=20, deadline=None)
 @given(
+    backend=st.sampled_from(sorted(ORACLES)),
     n=st.integers(1, 24),
     d=st.integers(2, 40),
     seed=st.integers(0, 2**32 - 1),
@@ -67,12 +112,14 @@ def test_request_seeds_are_batch_width_invariant():
     extra_kv=st.integers(1, 16),
     extra_q=st.integers(1, 8),
 )
-def test_ssa_outputs_are_request_addressed(
-    n, d, seed, causal, window, row, width, extra_kv, extra_q
+def test_spiking_outputs_are_request_addressed(
+    backend, n, d, seed, causal, window, row, width, extra_kv, extra_q
 ):
-    """Fuzz the new contract: outputs for a given sequence are invariant to
+    """Fuzz the contract across EVERY stochastic registry backend (oracle
+    drawn from the registry): outputs for a given sequence are invariant to
     batch row, batch width, cache extent (absent rows appended) and pad
     bucket (pad queries appended)."""
+    ssa_reference = ORACLES[backend]  # shadows: same oracle signature
     width = max(width, row + 1)
     key = jax.random.PRNGKey((n * 31 + d) ^ (seed & 0xFFFF))
     q = _spikes(key, (1, n, d))
